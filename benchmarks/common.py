@@ -1,0 +1,77 @@
+"""Shared benchmark harness: a small trained QAT model + timing helpers."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.data.synthetic import make_batch
+from repro.models import transformer as tf
+from repro.optim.adamw import AdamW
+from repro.parallel.context import local_context
+from repro.train.step import init_train_state, make_train_step
+
+
+def bench_model(arch: str = "olmo-1b", train_steps: int = 60,
+                batch: int = 8, seq: int = 128, seed: int = 0):
+    """Train a reduced-config 4-bit QAT model (the paper's starting point)."""
+    cfg = configs.get_config(arch).smoke()
+    ctx = local_context()
+    policy = tf.build_policy(cfg)
+    opt = AdamW(learning_rate=2e-3, grad_clip=1.0)
+    step = jax.jit(make_train_step(cfg, ctx, opt))
+    state = init_train_state(cfg, opt, jax.random.PRNGKey(seed), policy)
+    m = {}
+    for i in range(train_steps):
+        state, m = step(state, make_batch(seed, i, batch, seq, cfg.vocab))
+    return dict(cfg=cfg, ctx=ctx, policy=policy, opt=opt, state=state,
+                step=step, batch=batch, seq=seq,
+                final_loss=float(m.get("loss", np.nan)))
+
+
+def eval_loss(setup, policy, n_batches: int = 4, seed: int = 123) -> Dict:
+    cfg, ctx = setup["cfg"], setup["ctx"]
+    pa = jax.tree.map(jnp.asarray, policy.as_arrays())
+    losses, accs = [], []
+    for i in range(n_batches):
+        b = make_batch(seed, i, setup["batch"], setup["seq"], cfg.vocab)
+        loss, metrics = tf.loss_fn(setup["state"].params, pa, b, cfg, ctx)
+        losses.append(float(loss))
+        accs.append(float(metrics["accuracy"]))
+    return {"loss": float(np.mean(losses)), "accuracy": float(np.mean(accs))}
+
+
+def finetune_eval(setup, policy, steps: int = 25, seed: int = 7) -> Dict:
+    """Fine-tune the 4-bit checkpoint under `policy`, then eval (paper's
+    final stage, reduced)."""
+    pa = jax.tree.map(jnp.asarray, policy.as_arrays())
+    st = setup["state"]._replace(policy=pa)
+    cfg = setup["cfg"]
+    m = {}
+    for i in range(steps):
+        st, m = setup["step"](st, make_batch(seed, i, setup["batch"],
+                                             setup["seq"], cfg.vocab))
+    probe = dict(setup, state=st)
+    return eval_loss(probe, policy)
+
+
+def timeit(fn: Callable, *args, n: int = 5, warmup: int = 1) -> float:
+    """Median wall microseconds per call."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args)) if _is_jaxy(fn, args) else fn(*args)
+    ts = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        if _is_jaxy(fn, args):
+            jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def _is_jaxy(fn, args):
+    return True

@@ -1,0 +1,101 @@
+"""Paper Fig. 3/4/5 analogue: accuracy-throughput frontier per method.
+
+For a trained 4-bit reduced LM, compute EAGL / ALPS / HAWQ / uniform /
+first-to-last / last-to-first gains, select per budget with the 0-1
+knapsack, fine-tune each mixed network, and report the final loss.
+
+The paper's claims validated here (EXPERIMENTS.md §Faithful):
+  (i) EAGL/ALPS track or beat every baseline across the budget sweep,
+ (ii) at high budgets the mixed network recovers ~the 4-bit loss,
+(iii) EAGL costs ~nothing to compute next to ALPS (Table 3 analogue in
+      metric_cost_bench.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import knapsack
+from repro.core.metrics import alps, baselines, eagl, hawq
+from repro.core.frontier import select_policy
+from repro.data.synthetic import make_batch
+from repro.models import transformer as tf
+
+
+def compute_gains(setup, alps_probe_steps: int = 2,
+                  hawq_probes: int = 2):
+    cfg, ctx, policy, state = (setup["cfg"], setup["ctx"], setup["policy"],
+                               setup["state"])
+
+    g_eagl = eagl.eagl_gains(
+        policy, lambda u, t: tf.fetch_unit_tensor(state.params, u, t),
+        impl="ref")
+
+    def probe(policy=None, steps=alps_probe_steps):
+        pa = jax.tree.map(jnp.asarray, policy.as_arrays())
+        st = state._replace(policy=pa)
+        losses = []
+        m = {}
+        for i in range(steps):
+            st, m = setup["step"](st, make_batch(11, i, setup["batch"],
+                                                 setup["seq"], cfg.vocab))
+            losses.append(float(m["loss"]))
+        return {"loss": float(np.mean(losses)),
+                "accuracy": float(m["accuracy"])}
+
+    g_alps = alps.alps_gains(policy, probe_finetune=probe,
+                             cfg=alps.AlpsConfig(
+                                 steps_per_probe=alps_probe_steps))
+
+    pa = jax.tree.map(jnp.asarray, policy.as_arrays())
+    batch = make_batch(5, 0, setup["batch"], setup["seq"], cfg.vocab)
+
+    def loss_fn(p, b):
+        return tf.loss_fn(p, pa, b, cfg, ctx)[0]
+
+    paths = {f"{u.name}/{t}": t for u in policy.selectable_units()
+             for t in u.tensors}
+    g_hawq = hawq.hawq_gains(policy, loss_fn, state.params, paths,
+                             hawq.HawqConfig(n_probes=hawq_probes), batch)
+
+    return {
+        "eagl": g_eagl, "alps": g_alps, "hawq_v3": g_hawq,
+        "uniform": baselines.uniform_gains(policy),
+        "first_to_last": None, "last_to_first": None,
+    }
+
+
+def run(budgets=(0.9, 0.75, 0.6), finetune_steps: int = 25, quick=False):
+    setup = common.bench_model(train_steps=40 if quick else 60)
+    methods = compute_gains(setup, alps_probe_steps=1 if quick else 2,
+                            hawq_probes=1 if quick else 2)
+    rows = []
+    for frac in budgets:
+        for name, gains in methods.items():
+            mixed = select_policy(setup["policy"], name, gains, frac)
+            res = common.finetune_eval(setup, mixed,
+                                       steps=10 if quick else finetune_steps)
+            rows.append({
+                "method": name, "budget": frac, "loss": res["loss"],
+                "accuracy": res["accuracy"],
+                "compression": mixed.compression_ratio(),
+                "n_dropped": sum(
+                    1 for u in mixed.selectable_units()
+                    if mixed.bits_of(u.name) == 2.0),
+            })
+    return {"four_bit_loss": common.eval_loss(setup, setup["policy"])["loss"],
+            "two_bit_loss": common.eval_loss(
+                setup, setup["policy"].uniform(2.0))["loss"],
+            "rows": rows}
+
+
+if __name__ == "__main__":
+    out = run()
+    print(f"4-bit loss {out['four_bit_loss']:.4f} | "
+          f"2-bit loss {out['two_bit_loss']:.4f}")
+    for r in out["rows"]:
+        print(f"{r['method']:14s} budget={r['budget']:.2f} "
+              f"loss={r['loss']:.4f} acc={r['accuracy']:.3f} "
+              f"comp={r['compression']:.1f}x dropped={r['n_dropped']}")

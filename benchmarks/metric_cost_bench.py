@@ -1,0 +1,62 @@
+"""Paper Table 3 analogue: compute cost of each layer-selection metric.
+
+EAGL is seconds of CPU (checkpoint-only); ALPS is one probe fine-tune per
+unit; HAWQ needs Hutchinson HVPs. Relative ordering is the paper's claim —
+absolute numbers are CPU-host, not GPU-hours.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core.metrics import alps, eagl, hawq
+from repro.data.synthetic import make_batch
+from repro.models import transformer as tf
+
+
+def run(quick=False):
+    setup = common.bench_model(train_steps=30 if quick else 60)
+    cfg, ctx, policy, state = (setup["cfg"], setup["ctx"], setup["policy"],
+                               setup["state"])
+
+    t0 = time.perf_counter()
+    eagl.eagl_gains(policy,
+                    lambda u, t: tf.fetch_unit_tensor(state.params, u, t),
+                    impl="ref")
+    t_eagl = time.perf_counter() - t0
+
+    def probe(policy=None, steps=1):
+        pa = jax.tree.map(jnp.asarray, policy.as_arrays())
+        st = state._replace(policy=pa)
+        m = {}
+        for i in range(steps):
+            st, m = setup["step"](st, make_batch(3, i, setup["batch"],
+                                                 setup["seq"], cfg.vocab))
+        return {"loss": float(m["loss"]), "accuracy": float(m["accuracy"])}
+
+    t0 = time.perf_counter()
+    alps.alps_gains(policy, probe_finetune=probe,
+                    cfg=alps.AlpsConfig(steps_per_probe=1 if quick else 8))
+    t_alps = time.perf_counter() - t0
+
+    pa = jax.tree.map(jnp.asarray, policy.as_arrays())
+    batch = make_batch(5, 0, setup["batch"], setup["seq"], cfg.vocab)
+    paths = {f"{u.name}/{t}": t for u in policy.selectable_units()
+             for t in u.tensors}
+    t0 = time.perf_counter()
+    hawq.hawq_gains(policy,
+                    lambda p, b: tf.loss_fn(p, pa, b, cfg, ctx)[0],
+                    state.params, paths, hawq.HawqConfig(n_probes=2), batch)
+    t_hawq = time.perf_counter() - t0
+    return {"eagl_s": t_eagl, "alps_s": t_alps, "hawq_s": t_hawq,
+            "n_units": len(policy.selectable_units())}
+
+
+if __name__ == "__main__":
+    out = run()
+    print(f"EAGL {out['eagl_s']:.2f}s | ALPS {out['alps_s']:.2f}s | "
+          f"HAWQ-v3 {out['hawq_s']:.2f}s over {out['n_units']} units")

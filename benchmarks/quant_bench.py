@@ -1,0 +1,43 @@
+"""Quantized-inference cost: packed-weight matmul byte traffic + wall time.
+
+The TPU claim (DESIGN.md §3): decode-time speedup comes from streaming 4×/8×
+fewer weight bytes. Derived column = weight bytes per token (the roofline
+quantity); wall-us is CPU-host reference-path time (not TPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timeit
+from repro.kernels import ops, ref
+
+
+def run(k: int = 2048, n: int = 2048, m: int = 8, quick=False):
+    if quick:
+        k = n = 512
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.bfloat16)
+    w_bf16 = jnp.asarray(rng.normal(size=(k, n)) * 0.02, jnp.bfloat16)
+    codes4 = jnp.asarray(rng.integers(-8, 8, size=(k, n)), jnp.int8)
+    codes2 = jnp.asarray(rng.integers(-2, 2, size=(k, n)), jnp.int8)
+    wp4, wp2 = ref.pack_w4(codes4), ref.pack_w2(codes2)
+    scale = jnp.full((n,), 0.02, jnp.float32)
+
+    dense = jax.jit(lambda a, b: a @ b)
+    q4 = jax.jit(lambda a, w: ops.quant_matmul(a, w, scale, bits=4,
+                                               impl="ref"))
+    q2 = jax.jit(lambda a, w: ops.quant_matmul(a, w, scale, bits=2,
+                                               impl="ref"))
+    return {
+        "dense_bf16": {"us": timeit(dense, x, w_bf16),
+                       "weight_bytes": k * n * 2},
+        "w4_packed": {"us": timeit(q4, x, wp4), "weight_bytes": k * n // 2},
+        "w2_packed": {"us": timeit(q2, x, wp2), "weight_bytes": k * n // 4},
+    }
+
+
+if __name__ == "__main__":
+    for name, r in run().items():
+        print(f"{name}: {r['us']:.0f}us weight_bytes={r['weight_bytes']}")

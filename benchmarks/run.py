@@ -1,0 +1,75 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  ``--quick`` shrinks sizes for CI.
+
+  frontier      Fig. 3/4/5: per-method loss across the budget sweep
+  metric_cost   Table 3: metric computation cost (EAGL vs ALPS vs HAWQ)
+  knapsack      §3.1: knapsack solve time at paper-scale item counts
+  additivity    Appendix A: pairwise additivity correlation R
+  quant         Table 1 (TPU terms): packed-weight matmul bytes/time
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _row(name, us, derived):
+    print(f"{name},{us:.1f},{derived}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    only = args.only.split(",") if args.only else None
+    q = args.quick
+
+    print("name,us_per_call,derived")
+
+    if only is None or "knapsack" in only:
+        from benchmarks import knapsack_bench
+        for name, dt in knapsack_bench.run(quick=q).items():
+            _row(f"knapsack/{name}", dt * 1e6, "eps_optimal_dp")
+
+    if only is None or "quant" in only:
+        from benchmarks import quant_bench
+        for name, r in quant_bench.run(quick=q).items():
+            _row(f"quant_matmul/{name}", r["us"],
+                 f"weight_bytes={r['weight_bytes']}")
+
+    if only is None or "metric_cost" in only:
+        from benchmarks import metric_cost_bench
+        out = metric_cost_bench.run(quick=q)
+        _row("metric_cost/eagl", out["eagl_s"] * 1e6,
+             f"n_units={out['n_units']}")
+        _row("metric_cost/alps", out["alps_s"] * 1e6,
+             f"n_units={out['n_units']}")
+        _row("metric_cost/hawq_v3", out["hawq_s"] * 1e6,
+             f"n_units={out['n_units']}")
+
+    if only is None or "additivity" in only:
+        from benchmarks import additivity_bench
+        t0 = time.perf_counter()
+        out = additivity_bench.run(n_pairs=10 if q else 20, quick=q)
+        _row("additivity/pairwise", (time.perf_counter() - t0) * 1e6,
+             f"R={out['R']:.4f}")
+
+    if only is None or "frontier" in only:
+        from benchmarks import frontier_bench
+        t0 = time.perf_counter()
+        out = frontier_bench.run(budgets=(0.75,) if q else (0.9, 0.75, 0.6),
+                                 quick=q)
+        dt = (time.perf_counter() - t0) * 1e6
+        _row("frontier/4bit_baseline", dt, f"loss={out['four_bit_loss']:.4f}")
+        _row("frontier/2bit_floor", dt, f"loss={out['two_bit_loss']:.4f}")
+        for r in out["rows"]:
+            _row(f"frontier/{r['method']}@{r['budget']:.2f}", dt,
+                 f"loss={r['loss']:.4f};comp={r['compression']:.1f}x;"
+                 f"dropped={r['n_dropped']}")
+
+
+if __name__ == "__main__":
+    main()

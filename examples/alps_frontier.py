@@ -1,0 +1,25 @@
+"""ALPS vs EAGL vs baselines across the budget sweep (paper Fig. 3/5).
+
+  PYTHONPATH=src python examples/alps_frontier.py [--quick]
+
+Produces the frontier table: one row per (method, budget) with the
+fine-tuned loss — the paper's evaluation framework end to end.
+"""
+import argparse
+
+from benchmarks import frontier_bench
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--quick", action="store_true")
+args = ap.parse_args()
+
+out = frontier_bench.run(budgets=(0.75,) if args.quick else (0.9, 0.75, 0.6),
+                         quick=args.quick)
+print(f"\n4-bit baseline loss {out['four_bit_loss']:.4f} | "
+      f"2-bit floor loss {out['two_bit_loss']:.4f}\n")
+print(f"{'method':16s} {'budget':>6s} {'loss':>8s} {'acc':>6s} "
+      f"{'compr':>6s} {'dropped':>7s}")
+for r in out["rows"]:
+    print(f"{r['method']:16s} {r['budget']:6.2f} {r['loss']:8.4f} "
+          f"{r['accuracy']:6.3f} {r['compression']:5.1f}x "
+          f"{r['n_dropped']:7d}")

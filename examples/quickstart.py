@@ -1,0 +1,66 @@
+"""Quickstart: the paper's pipeline in ~60 lines (Figure 1, end to end).
+
+  PYTHONPATH=src python examples/quickstart.py
+
+1. train a small LM with 4-bit LSQ QAT (the paper's starting checkpoint),
+2. compute EAGL gains — entropy of each unit's quantized weights (Alg. 2),
+3. pick per-layer precisions with the 0-1 knapsack at a 75% budget,
+4. fine-tune the mixed 4/2-bit network and compare against 4-bit / 2-bit.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core import knapsack
+from repro.core.metrics import eagl
+from repro.data.synthetic import make_batch
+from repro.models import transformer as tf
+from repro.optim.adamw import AdamW
+from repro.parallel.context import local_context
+from repro.train.step import init_train_state, make_train_step
+
+cfg = configs.get_config("olmo-1b").smoke()
+ctx = local_context()
+policy = tf.build_policy(cfg)                       # quant-unit registry
+opt = AdamW(learning_rate=2e-3, grad_clip=1.0)
+step = jax.jit(make_train_step(cfg, ctx, opt))
+
+# -- 1. 4-bit QAT baseline ---------------------------------------------
+state = init_train_state(cfg, opt, jax.random.PRNGKey(0), policy)
+for i in range(80):
+    state, m = step(state, make_batch(0, i, 8, 128, cfg.vocab))
+print(f"4-bit checkpoint loss: {float(m['loss']):.4f}")
+
+# -- 2. EAGL: entropy per unit (no data needed!) ------------------------
+gains = eagl.eagl_gains(
+    policy, lambda u, t: tf.fetch_unit_tensor(state.params, u, t), impl="ref")
+print("\nEAGL entropies (bits) — low entropy => quantize further (Fig. 2):")
+for name, g in sorted(gains.items(), key=lambda kv: kv[1]):
+    print(f"  {name:32s} H = {g:5.2f}")
+
+# -- 3. knapsack selection at 75% of the 4-bit budget -------------------
+res = knapsack.select_for_budget(policy, gains, budget_frac=0.75)
+mixed = policy.apply_selection(res.take)
+dropped = [u.name for u in mixed.selectable_units()
+           if mixed.bits_of(u.name) == 2.0]
+print(f"\nknapsack ({res.solve_seconds*1e3:.1f} ms): "
+      f"dropped {len(dropped)} units to 2-bit -> "
+      f"{mixed.compression_ratio():.1f}x compression vs FP32")
+
+# -- 4. fine-tune the mixed network -------------------------------------
+def eval_policy(p):
+    pa = jax.tree.map(jnp.asarray, p.as_arrays())
+    losses = [float(tf.loss_fn(state.params, pa,
+                               make_batch(9, i, 8, 128, cfg.vocab),
+                               cfg, ctx)[0]) for i in range(3)]
+    return float(np.mean(losses))
+
+st = state._replace(policy=jax.tree.map(jnp.asarray, mixed.as_arrays()))
+for i in range(40):
+    st, m = step(st, make_batch(0, 100 + i, 8, 128, cfg.vocab))
+
+print(f"\n               loss")
+print(f"  4-bit      : {eval_policy(policy):.4f}")
+print(f"  mixed(EAGL): {float(m['loss']):.4f}  <- 75% budget")
+print(f"  2-bit      : {eval_policy(policy.uniform(2.0)):.4f}")

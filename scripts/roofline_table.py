@@ -1,0 +1,58 @@
+"""Render EXPERIMENTS.md tables from dryrun_results.json."""
+import json
+import sys
+
+ARCH_ORDER = ["olmo-1b", "deepseek-7b", "internlm2-1.8b", "granite-20b",
+              "qwen2-vl-7b", "deepseek-v3-671b", "dbrx-132b",
+              "jamba-1.5-large-398b", "xlstm-1.3b", "hubert-xlarge"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    return f"{x*1e3:.1f}ms"
+
+
+def fmt_b(x):
+    if x is None:
+        return "-"
+    for unit, div in (("TB", 1e12), ("GB", 1e9), ("MB", 1e6)):
+        if x >= div:
+            return f"{x/div:.1f}{unit}"
+    return f"{x:.0f}B"
+
+
+def main(path="dryrun_results.json", mesh="16x16"):
+    recs = json.load(open(path))
+    by = {(r["arch"], r["shape"]): r for r in recs if r["mesh"] == mesh}
+    print(f"### Roofline table — mesh {mesh} "
+          f"({'256' if mesh=='16x16' else '512'} chips)\n")
+    print("| arch × shape | mem/dev | compute | memory | collective | "
+          "dominant | MODEL_FLOPs | useful | roofline |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = by.get((arch, shape))
+            if r is None:
+                continue
+            if r["status"] == "skipped":
+                print(f"| {arch} × {shape} | — | — | — | — | "
+                      f"SKIP: {r['reason'][:60]}… | — | — | — |")
+                continue
+            if r["status"] != "ok":
+                print(f"| {arch} × {shape} | ERROR | | | | | | | |")
+                continue
+            gb = (r.get("bytes_per_device") or 0) / 2**30
+            print(f"| {arch} × {shape} | {gb:.1f}GiB "
+                  f"| {fmt_s(r['compute_s'])} | {fmt_s(r['memory_s'])} "
+                  f"| {fmt_s(r['collective_s'])} | **{r['dominant']}** "
+                  f"| {r['model_flops']:.2e} | {r['useful_ratio']:.2f} "
+                  f"| {r['roofline_fraction']:.3f} |")
+    print()
+
+
+if __name__ == "__main__":
+    main(*(sys.argv[1:]))

@@ -1,0 +1,82 @@
+"""Dev driver: run every smoke arch through train/prefill/decode on CPU."""
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.configs.shapes import SMOKE_SHAPES
+from repro.models import transformer as tf
+from repro.parallel.context import local_context
+
+ARCHS = list(configs._MODULES)
+
+
+def run(arch: str):
+    cfg = configs.get_config(arch).smoke()
+    ctx = local_context()
+    key = jax.random.PRNGKey(0)
+    params = tf.init_params(cfg, key)
+    policy = tf.build_policy(cfg)
+    pa = jax.tree.map(jnp.asarray, policy.as_arrays())
+
+    b, s = 2, 128
+    rng = np.random.default_rng(0)
+    batch = {"labels": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32)}
+    if cfg.embed_input:
+        batch["embeds"] = jnp.asarray(rng.normal(size=(b, s, cfg.d_model)),
+                                      cfg.compute_dtype)
+    else:
+        batch["tokens"] = jnp.asarray(rng.integers(0, cfg.vocab, (b, s)),
+                                      jnp.int32)
+    if cfg.rope == "mrope":
+        pos = jnp.broadcast_to(jnp.arange(s)[None, None], (3, b, s))
+        batch["mrope_positions"] = pos.astype(jnp.int32)
+
+    # train loss + grads
+    loss, metrics = tf.loss_fn(params, pa, batch, cfg, ctx)
+    assert np.isfinite(float(loss)), (arch, "loss", loss)
+    g = jax.grad(lambda p: tf.loss_fn(p, pa, batch, cfg, ctx)[0])(params)
+    gn = jax.tree.reduce(lambda a, l: a + float(jnp.sum(jnp.abs(l))), g, 0.0)
+    assert np.isfinite(gn) and gn > 0, (arch, "gradnorm", gn)
+
+    # prefill + decode
+    if cfg.causal:
+        logits, caches, _ = tf.apply(params, pa, batch, cfg, ctx,
+                                     mode="prefill")
+        assert logits.shape == (b, s, cfg.vocab)
+        full = tf.init_caches(cfg, b, s + 8)
+        # splice prefilled kv into the full-size cache
+        def splice(dst, src):
+            if dst is None or src is None or isinstance(src, int):
+                return dst
+            if dst.ndim >= 2 and src.ndim == dst.ndim and \
+                    src.shape != dst.shape:
+                return jax.lax.dynamic_update_slice(
+                    dst, src.astype(dst.dtype), (0,) * dst.ndim)
+            return src.astype(dst.dtype)
+        caches = jax.tree.map(splice, full, caches)
+        dbatch = {"positions": jnp.full((b, 1), s, jnp.int32)}
+        if cfg.embed_input:
+            dbatch["embeds"] = batch["embeds"][:, :1]
+        else:
+            dbatch["tokens"] = batch["tokens"][:, :1]
+        if cfg.rope == "mrope":
+            dbatch["mrope_positions"] = jnp.full((3, b, 1), s, jnp.int32)
+        logits2, caches2, _ = tf.apply(params, pa, dbatch, cfg, ctx,
+                                       mode="decode", caches=caches,
+                                       positions=dbatch["positions"])
+        assert logits2.shape == (b, 1, cfg.vocab)
+        assert np.isfinite(np.asarray(logits2, np.float32)).all()
+
+    n_sel = len(policy.selectable_units())
+    print(f"  OK {arch}: loss={float(loss):.3f} units={len(policy.units)} "
+          f"selectable={n_sel}")
+
+
+if __name__ == "__main__":
+    targets = sys.argv[1:] or ARCHS
+    for a in targets:
+        print(f"[{a}]")
+        run(a)

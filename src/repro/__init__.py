@@ -1,0 +1,2 @@
+"""repro: mixed-precision quantization framework (EAGL + ALPS) in JAX."""
+__version__ = "1.0.0"

@@ -1,0 +1,32 @@
+"""Architecture registry: ``get_config(name)`` / ``ARCHS``.
+
+All 10 assigned architectures + the paper's own BERT-base benchmark.
+Each module exposes ``config()`` (full, exact assigned shape) — reduced
+smoke variants come from ``config().smoke()``.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+_MODULES = {
+    "olmo-1b": "repro.configs.olmo_1b",
+    "deepseek-7b": "repro.configs.deepseek_7b",
+    "internlm2-1.8b": "repro.configs.internlm2_1_8b",
+    "granite-20b": "repro.configs.granite_20b",
+    "qwen2-vl-7b": "repro.configs.qwen2_vl_7b",
+    "deepseek-v3-671b": "repro.configs.deepseek_v3_671b",
+    "dbrx-132b": "repro.configs.dbrx_132b",
+    "jamba-1.5-large-398b": "repro.configs.jamba_1_5_large",
+    "xlstm-1.3b": "repro.configs.xlstm_1_3b",
+    "hubert-xlarge": "repro.configs.hubert_xlarge",
+    "bert-base": "repro.configs.bert_base",
+}
+
+ARCHS: List[str] = [a for a in _MODULES if a != "bert-base"]
+
+
+def get_config(name: str):
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[name]).config()

@@ -1,0 +1,120 @@
+"""ArchConfig: declarative architecture description.
+
+A model = ``prefix`` blocks (unrolled, heterogeneous) followed by
+``n_repeats`` copies of ``pattern`` (stacked + scanned).  Every assigned
+architecture in configs/<id>.py is an instance; reduced smoke variants are
+produced by ``.smoke()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax.numpy as jnp
+
+from repro.models.common import BlockDef
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    pattern: Tuple[BlockDef, ...]
+    n_repeats: int
+    prefix: Tuple[BlockDef, ...] = ()
+
+    norm: str = "rms"                    # 'rms' | 'ln' | 'nonparam_ln'
+    activation: str = "silu"
+    rope: str = "rope"                   # 'rope' | 'mrope' | 'none'
+    rope_base: float = 10_000.0
+    mrope_sections: Tuple[int, ...] = (16, 24, 24)
+    causal: bool = True
+    embed_input: bool = False            # modality stub: takes (B,S,d) embeds
+    tie_embeddings: bool = False
+
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    moe_aux_weight: float = 0.01
+
+    # MLA (DeepSeek-V3)
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+
+    # Mamba
+    mamba_d_state: int = 16
+    mamba_d_conv: int = 4
+    mamba_expand: int = 2
+
+    # xLSTM
+    xlstm_expand: int = 2
+
+    # Multi-token prediction (DeepSeek-V3)
+    mtp: bool = False
+    mtp_weight: float = 0.3
+
+    # dtypes
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.float32
+    cache_dtype: Any = jnp.bfloat16
+
+    # ---------------------------------------------------------------- derived
+    @property
+    def n_layers(self) -> int:
+        return len(self.prefix) + self.n_repeats * len(self.pattern)
+
+    @property
+    def mamba_d_inner(self) -> int:
+        return self.mamba_expand * self.d_model
+
+    @property
+    def mamba_dt_rank(self) -> int:
+        return max(self.d_model // 16, 8)
+
+    @property
+    def xlstm_d_inner(self) -> int:
+        return self.xlstm_expand * self.d_model
+
+    @property
+    def slstm_d_ff(self) -> int:
+        """sLSTM post-up-projection width (xLSTM's 4/3 factor, 128-aligned)."""
+        return max(128, int(round(self.d_model * 4 / 3 / 128)) * 128)
+
+    def replace(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+    def smoke(self) -> "ArchConfig":
+        """Reduced same-family config for CPU smoke tests."""
+        scale = {
+            "d_model": 128, "n_heads": 4, "head_dim": 32,
+            "n_kv_heads": max(1, (4 * self.n_kv_heads) // max(self.n_heads, 1)),
+            "d_ff": 256 if self.d_ff else 0,
+            "vocab": 512,
+            "n_repeats": min(self.n_repeats, 2),
+            "prefix": tuple(BlockDef(b.mixer, b.ffn)
+                            for b in self.prefix[:1]),
+            "param_dtype": jnp.float32,
+            "compute_dtype": jnp.float32,
+        }
+        if self.rope == "mrope":
+            half = scale["head_dim"] // 2
+            orig = sum(self.mrope_sections)
+            secs = [max(1, s * half // orig) for s in self.mrope_sections]
+            secs[-1] += half - sum(secs)
+            scale["mrope_sections"] = tuple(secs)
+        if self.n_experts:
+            scale.update(n_experts=max(4, self.top_k), top_k=min(self.top_k, 2))
+        if self.q_lora_rank:
+            scale.update(q_lora_rank=64, kv_lora_rank=64, qk_nope_dim=32,
+                         qk_rope_dim=16, v_head_dim=32)
+        return self.replace(**scale)

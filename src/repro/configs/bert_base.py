@@ -1,0 +1,22 @@
+"""bert-base — the paper's own NLP benchmark (Table 2 / Fig. 5).
+
+12L d=768 12H d_ff=3072 vocab=30522, encoder-only, GeLU, LayerNorm.
+Used for the faithful-reproduction experiments (EAGL/ALPS frontier on a
+token-classification proxy of SQuAD span prediction).
+"""
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import BlockDef
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="bert-base",
+        d_model=768, n_heads=12, n_kv_heads=12, head_dim=64,
+        d_ff=3072, vocab=30522,
+        pattern=(BlockDef("bidir", "gelu"),), n_repeats=12,
+        norm="ln", activation="gelu", rope="rope",
+        causal=False,
+        param_dtype=jnp.float32, compute_dtype=jnp.float32,
+    )

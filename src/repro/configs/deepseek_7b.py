@@ -1,0 +1,19 @@
+"""deepseek-7b [dense]: 30L d=4096 32H (MHA) d_ff=11008 vocab=102400.
+
+LLaMA architecture: RMSNorm, SwiGLU, RoPE [arXiv:2401.02954].
+"""
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import BlockDef
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="deepseek-7b",
+        d_model=4096, n_heads=32, n_kv_heads=32, head_dim=128,
+        d_ff=11008, vocab=102400,
+        pattern=(BlockDef("gqa", "swiglu"),), n_repeats=30,
+        norm="rms", activation="silu", rope="rope",
+        param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16,
+    )

@@ -1,0 +1,22 @@
+"""granite-20b [dense, code]: 52L d=6144 48H (MQA kv=1) d_ff=24576 vocab=49152.
+
+GPT-BigCode lineage: multi-query attention, non-gated GeLU MLP (d_ff = 4d),
+LayerNorm [arXiv:2405.04324].  RoPE substituted for learned absolute
+positions (positional scheme is orthogonal to the quantization study —
+DESIGN.md §8).
+"""
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import BlockDef
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="granite-20b",
+        d_model=6144, n_heads=48, n_kv_heads=1, head_dim=128,
+        d_ff=24576, vocab=49152,
+        pattern=(BlockDef("gqa", "gelu"),), n_repeats=52,
+        norm="ln", activation="gelu", rope="rope",
+        param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16,
+    )

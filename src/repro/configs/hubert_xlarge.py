@@ -1,0 +1,24 @@
+"""hubert-xlarge [audio]: 48L d=1280 16H d_ff=5120 vocab=504.
+
+Encoder-only (bidirectional), wav2vec2-style blocks. The CNN feature
+extractor / conv positional frontend is a STUB per the assignment:
+``input_specs`` provides pre-computed frame embeddings (B, S, 1280); the
+504-way head predicts the HuBERT cluster targets [arXiv:2106.07447].
+No autoregressive decode — decode/long shapes are skipped (DESIGN.md §4).
+"""
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import BlockDef
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="hubert-xlarge",
+        d_model=1280, n_heads=16, n_kv_heads=16, head_dim=80,
+        d_ff=5120, vocab=504,
+        pattern=(BlockDef("bidir", "gelu"),), n_repeats=48,
+        norm="ln", activation="gelu", rope="none",
+        causal=False, embed_input=True,
+        param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16,
+    )

@@ -1,0 +1,19 @@
+"""internlm2-1.8b [dense]: 24L d=2048 16H (GQA kv=8) d_ff=8192 vocab=92544.
+
+LLaMA-style with grouped-query attention [arXiv:2403.17297].
+"""
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import BlockDef
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="internlm2-1.8b",
+        d_model=2048, n_heads=16, n_kv_heads=8, head_dim=128,
+        d_ff=8192, vocab=92544,
+        pattern=(BlockDef("gqa", "swiglu"),), n_repeats=24,
+        norm="rms", activation="silu", rope="rope", rope_base=1_000_000.0,
+        param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16,
+    )

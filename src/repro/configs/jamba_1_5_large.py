@@ -1,0 +1,33 @@
+"""jamba-1.5-large-398b [hybrid]: 72L d=8192 64H (GQA kv=8) d_ff=24576
+vocab=65536.
+
+Mamba:attention 7:1 interleave (attention at position 0 of every 8-layer
+period); MoE (16 experts, top-2) every other layer, dense SwiGLU otherwise
+[arXiv:2403.19887].
+"""
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import BlockDef
+
+
+def _period():
+    blocks = []
+    for i in range(8):
+        mixer = "gqa" if i == 0 else "mamba"
+        ffn = "moe" if i % 2 == 1 else "swiglu"
+        blocks.append(BlockDef(mixer, ffn))
+    return tuple(blocks)
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="jamba-1.5-large-398b",
+        d_model=8192, n_heads=64, n_kv_heads=8, head_dim=128,
+        d_ff=24576, vocab=65536,
+        pattern=_period(), n_repeats=9,
+        norm="rms", activation="silu", rope="none",   # Jamba uses no RoPE
+        n_experts=16, top_k=2,
+        mamba_d_state=16, mamba_d_conv=4, mamba_expand=2,
+        param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16,
+    )

@@ -1,0 +1,24 @@
+"""qwen2-vl-7b [vlm]: 28L d=3584 28H (GQA kv=4) d_ff=18944 vocab=152064.
+
+M-RoPE (temporal/height/width sections 16/24/24), dynamic resolution
+[arXiv:2409.12191].  The vision frontend is a STUB per the assignment:
+``input_specs`` provides the (3, B, S) M-RoPE position streams (and, in a
+real pipeline, pre-computed patch embeddings via the 'embeds' input);
+the backbone below is the exact assigned transformer.
+"""
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import BlockDef
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="qwen2-vl-7b",
+        d_model=3584, n_heads=28, n_kv_heads=4, head_dim=128,
+        d_ff=18944, vocab=152064,
+        pattern=(BlockDef("gqa", "swiglu"),), n_repeats=28,
+        norm="rms", activation="silu", rope="mrope",
+        mrope_sections=(16, 24, 24), rope_base=1_000_000.0,
+        param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16,
+    )

@@ -1,0 +1,92 @@
+"""Assigned input shapes and per-(arch, shape) skip rules.
+
+LM transformer shapes are seq_len × global_batch.  ``decode_*``/``long_*``
+lower ``serve_step`` (one new token against a seq_len KV cache), not
+``train_step``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str          # 'train' | 'prefill' | 'decode'
+    seq: int
+    batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+
+def _has_subquadratic_mixer(cfg) -> bool:
+    mixers = {b.mixer for b in cfg.pattern} | {b.mixer for b in cfg.prefix}
+    return bool(mixers & {"mamba", "mlstm", "slstm"})
+
+
+def skip_reason(cfg, shape_name: str) -> Optional[str]:
+    """None => run this cell; otherwise the documented skip reason."""
+    spec = SHAPES[shape_name]
+    if not cfg.causal and spec.kind == "decode":
+        return "encoder-only architecture: no autoregressive decode step"
+    if shape_name == "long_500k" and not _has_subquadratic_mixer(cfg):
+        return ("pure full-attention architecture: 512k context requires a "
+                "sub-quadratic mixer (run only for SSM/hybrid archs)")
+    return None
+
+
+def batch_specs(cfg, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for the step's data inputs (no cache)."""
+    b, s = shape.batch, shape.seq
+    i32 = jnp.int32
+    if shape.kind == "train":
+        batch = {}
+        if cfg.embed_input:
+            batch["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                                   cfg.compute_dtype)
+        else:
+            batch["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+        batch["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+        if cfg.rope == "mrope":
+            batch["mrope_positions"] = jax.ShapeDtypeStruct((3, b, s), i32)
+        return batch
+    if shape.kind == "prefill":
+        batch = {}
+        if cfg.embed_input:
+            batch["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                                   cfg.compute_dtype)
+        else:
+            batch["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+        if cfg.rope == "mrope":
+            batch["mrope_positions"] = jax.ShapeDtypeStruct((3, b, s), i32)
+        return batch
+    if shape.kind == "decode":
+        batch = {}
+        if cfg.embed_input:
+            batch["embeds"] = jax.ShapeDtypeStruct((b, 1, cfg.d_model),
+                                                   cfg.compute_dtype)
+        else:
+            batch["tokens"] = jax.ShapeDtypeStruct((b, 1), i32)
+        batch["positions"] = jax.ShapeDtypeStruct((b, 1), i32)
+        if cfg.rope == "mrope":
+            batch["mrope_positions"] = jax.ShapeDtypeStruct((3, b, 1), i32)
+        return batch
+    raise ValueError(shape.kind)
+
+
+# Reduced shapes for CPU smoke tests (same kinds, tiny extents).
+SMOKE_SHAPES: Dict[str, ShapeSpec] = {
+    "train": ShapeSpec("smoke_train", "train", 128, 2),
+    "prefill": ShapeSpec("smoke_prefill", "prefill", 128, 2),
+    "decode": ShapeSpec("smoke_decode", "decode", 128, 2),
+}

@@ -1,0 +1,28 @@
+"""xlstm-1.3b [ssm]: 48 blocks d=2048 4H d_ff=0 vocab=50304.
+
+mLSTM:sLSTM 7:1 (sLSTM at position 7 of every 8-block period). mLSTM blocks
+carry their own 2x up-projection (no post-FFN, hence d_ff=0); sLSTM blocks
+have the xLSTM 4/3-factor gated post-projection [arXiv:2405.04517].
+"""
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import BlockDef
+
+
+def _period():
+    return tuple(
+        BlockDef("mlstm", "none") if i < 7 else BlockDef("slstm", "slstm_ffn")
+        for i in range(8))
+
+
+def config() -> ArchConfig:
+    return ArchConfig(
+        name="xlstm-1.3b",
+        d_model=2048, n_heads=4, n_kv_heads=4, head_dim=512,
+        d_ff=0, vocab=50304,
+        pattern=_period(), n_repeats=6,
+        norm="ln", activation="gelu", rope="none",
+        xlstm_expand=2, tie_embeddings=True,
+        param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16,
+    )

@@ -1,0 +1,5 @@
+from repro.core.policy import PrecisionPolicy, QuantUnit
+from repro.core import quant, knapsack, costs, frontier
+
+__all__ = ["PrecisionPolicy", "QuantUnit", "quant", "knapsack", "costs",
+           "frontier"]

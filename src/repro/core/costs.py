@@ -1,0 +1,63 @@
+"""Cost models for mixed-precision selection (paper §3.4.1) + TPU variants.
+
+The paper uses BMAC = bits × MAC as the computational-cost unit, with cost
+linear in bit-width, and sweeps budgets between the 4-bit and 2-bit network
+cost. On NorthPole that models native low-bit MAC throughput. On TPU v5e
+there is no sub-8-bit MAC path, so we also expose:
+
+  - BOPS  = MACs × b_w × b_a (Yao et al., 2021) — quadratic model, for the
+    paper's Table-1 comparison column.
+  - HBM bytes/token = n_params × b/8 — the *decode-time* cost on TPU, where
+    low-bit weights pay off as bandwidth, not ALU throughput. Because both
+    are linear in b, knapsack solutions under BMAC and HBM-bytes coincide
+    when activations are negligible (decode); the knob exists so budgets can
+    be specified in either unit.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+
+def bmacs(policy, bits_override: Dict[str, float] | None = None) -> float:
+    """Σ bits × MACs/token over selectable units."""
+    total = 0.0
+    for u in policy.selectable_units():
+        b = (bits_override or {}).get(u.name, policy.bits_of(u.name))
+        total += b * u.macs_per_token
+    return total
+
+
+def bops(policy) -> float:
+    """Σ MACs × b_w × b_a; weights and activations share bits per the paper."""
+    total = 0.0
+    for u in policy.units:
+        b = policy.bits_of(u.name)
+        total += u.macs_per_token * b * b
+    return total
+
+
+def hbm_bytes_per_token(policy) -> float:
+    """Weight bytes streamed per decoded token (TPU decode cost)."""
+    total = 0.0
+    for u in policy.units:
+        total += u.n_params * policy.bits_of(u.name) / 8.0
+    return total
+
+
+def budget_sweep(fracs: List[float] | None = None) -> List[float]:
+    """Paper's evaluation budgets: fractions of the all-4-bit network cost."""
+    return list(fracs) if fracs else [0.95, 0.90, 0.85, 0.80, 0.75, 0.70, 0.65, 0.60]
+
+
+def frontier_axis(policy, budget_frac: float) -> Dict[str, float]:
+    """X-axis bookkeeping for frontier plots at a given budget."""
+    hi = policy.uniform(policy.b_hi)
+    lo = policy.uniform(policy.b_lo)
+    return {
+        "budget_frac": budget_frac,
+        "bmacs_hi": bmacs(hi),
+        "bmacs_lo": bmacs(lo),
+        "bmacs_budget": budget_frac * bmacs(hi),
+    }

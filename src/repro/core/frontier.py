@@ -1,0 +1,70 @@
+"""Budget-sweep frontier driver (paper Fig. 3/4/5 methodology).
+
+For each budget in the sweep and each gain metric under comparison:
+  1. select per-layer precisions with the 0-1 knapsack (or greedy baseline),
+  2. build the mixed-precision policy,
+  3. fine-tune (callable supplied by the experiment), and
+  4. record the task metric -> one point on the accuracy-throughput frontier.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+from repro.core import costs, knapsack
+from repro.core.metrics import baselines
+
+
+@dataclasses.dataclass
+class FrontierPoint:
+    method: str
+    budget_frac: float
+    achieved_cost_frac: float     # realized BMACs / all-b_hi BMACs
+    n_dropped: int                # units at b_lo
+    task_metrics: Dict[str, float]
+    compression_ratio: float
+
+
+def select_policy(policy, method: str, gains: Optional[Dict[str, float]],
+                  budget_frac: float):
+    """Apply one selection method at one budget; returns the mixed policy."""
+    if method == "first_to_last":
+        keep = baselines.greedy_prefix_selection(policy, budget_frac)
+    elif method == "last_to_first":
+        keep = baselines.greedy_prefix_selection(policy, budget_frac,
+                                                 reverse=True)
+    else:
+        assert gains is not None, f"method {method} needs gains"
+        res = knapsack.select_for_budget(policy, gains, budget_frac)
+        keep = res.take
+    return policy.apply_selection(keep)
+
+
+def sweep(policy, methods: Dict[str, Optional[Dict[str, float]]],
+          finetune_eval: Callable[..., Dict[str, float]],
+          budget_fracs: Optional[List[float]] = None) -> List[FrontierPoint]:
+    """methods: name -> gains dict (None for the greedy baselines).
+
+    finetune_eval(policy=<mixed policy>) -> task metrics dict, e.g.
+    {"loss": ..., "accuracy": ...}; the callable owns fine-tuning from the
+    b_hi checkpoint (paper: until convergence; tests/benchmarks: few steps).
+    """
+    points: List[FrontierPoint] = []
+    fracs = costs.budget_sweep(budget_fracs)
+    bmacs_hi = costs.bmacs(policy.uniform(policy.b_hi))
+    for frac in fracs:
+        for name, gains in methods.items():
+            mixed = select_policy(policy, name, gains, frac)
+            dropped = sum(
+                1 for u in mixed.selectable_units()
+                if mixed.bits_of(u.name) == mixed.b_lo)
+            metrics = finetune_eval(policy=mixed)
+            points.append(FrontierPoint(
+                method=name,
+                budget_frac=frac,
+                achieved_cost_frac=costs.bmacs(mixed) / max(bmacs_hi, 1e-30),
+                n_dropped=dropped,
+                task_metrics=metrics,
+                compression_ratio=mixed.compression_ratio(),
+            ))
+    return points

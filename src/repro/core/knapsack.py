@@ -1,0 +1,129 @@
+"""0-1 Integer Knapsack solver (paper §3.1).
+
+The layer-selection problem — maximize Σ G_l·P_l subject to Σ C_l ≤ B — maps
+onto the 0-1 knapsack: items are (selectable) link-groups, the value of item
+l is its accuracy gain G_l, the weight is the *extra* cost of keeping it at
+b1 instead of b2, and the capacity is the budget minus the all-b2 floor.
+
+Per the paper (footnote 2), values are quantized to integers in [1, 10000]
+(ε-optimal to 1e-5); weights are scaled to an integer grid so the DP table
+stays bounded (default ≤ 2^17 buckets — resolution noted in the result).
+
+DP is O(capacity × n_items), vectorized over the capacity axis with numpy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+VALUE_LEVELS = 10_000
+DEFAULT_MAX_CAPACITY = 1 << 17
+
+
+@dataclasses.dataclass
+class KnapsackResult:
+    take: Dict[str, bool]          # item key -> keep at higher precision?
+    total_value: float             # Σ G_l of kept items (original scale)
+    total_weight: float            # Σ C_l of kept items (original scale)
+    capacity: float                # requested capacity (original scale)
+    n_items: int
+    weight_resolution: float       # grid size of the weight quantization
+    solve_seconds: float
+
+
+def quantize_values(values: np.ndarray, levels: int = VALUE_LEVELS) -> np.ndarray:
+    """Map float gains to integers in [1, levels] (paper footnote 2).
+
+    Scale-only (no offset): an affine shift would change the *ratios*
+    between item values and therefore the optimization problem itself.
+    Gains are non-negative by construction (entropies, loss/accuracy
+    deltas, Hessian-trace products); negatives are clamped to the floor.
+    """
+    v = np.clip(np.asarray(values, np.float64), 0.0, None)
+    hi = float(v.max())
+    if hi <= 0:
+        return np.ones(v.shape, np.int64)
+    q = np.maximum(1, np.round(v / hi * levels))
+    return q.astype(np.int64)
+
+
+def solve(keys: Sequence[str], values: Sequence[float], weights: Sequence[float],
+          capacity: float, max_capacity_buckets: int = DEFAULT_MAX_CAPACITY,
+          ) -> KnapsackResult:
+    """Solve 0-1 knapsack. All weights/capacity in any consistent float unit."""
+    t0 = time.perf_counter()
+    keys = list(keys)
+    v_raw = np.asarray(values, np.float64)
+    w_raw = np.asarray(weights, np.float64)
+    n = len(keys)
+    assert v_raw.shape == (n,) and w_raw.shape == (n,)
+    if n == 0:
+        return KnapsackResult({}, 0.0, 0.0, capacity, 0, 0.0,
+                              time.perf_counter() - t0)
+    if np.any(w_raw < 0):
+        raise ValueError("negative weights not supported")
+
+    # Trivial case: everything fits.
+    if w_raw.sum() <= capacity:
+        return KnapsackResult({k: True for k in keys}, float(v_raw.sum()),
+                              float(w_raw.sum()), capacity, n, 0.0,
+                              time.perf_counter() - t0)
+    if capacity <= 0:
+        return KnapsackResult({k: False for k in keys}, 0.0, 0.0, capacity, n,
+                              0.0, time.perf_counter() - t0)
+
+    # Integer grids. Weights are FLOORED so every truly-feasible subset stays
+    # feasible on the grid (optimum never lost); realized weight can overshoot
+    # the capacity by at most n_items × resolution (reported in the result).
+    v = quantize_values(v_raw)
+    resolution = max(capacity / max_capacity_buckets,
+                     max(w_raw.max() / max_capacity_buckets, 1e-30))
+    w = np.maximum(np.floor(w_raw / resolution).astype(np.int64), 1)
+    cap = int(np.floor(capacity / resolution))
+
+    # DP over capacity, keep per-item take bits for reconstruction.
+    dp = np.zeros(cap + 1, np.int64)
+    take = np.zeros((n, cap + 1), np.bool_)
+    for i in range(n):
+        wi, vi = int(w[i]), int(v[i])
+        if wi > cap:
+            continue
+        cand = dp[:-wi] + vi
+        improved = cand > dp[wi:]
+        dp[wi:] = np.where(improved, cand, dp[wi:])
+        take[i, wi:] = improved
+
+    # Reconstruct.
+    chosen = {k: False for k in keys}
+    c = cap
+    for i in range(n - 1, -1, -1):
+        if take[i, c]:
+            chosen[keys[i]] = True
+            c -= int(w[i])
+    tv = float(v_raw[[chosen[k] for k in keys]].sum())
+    tw = float(w_raw[[chosen[k] for k in keys]].sum())
+    return KnapsackResult(chosen, tv, tw, capacity, n, float(resolution),
+                          time.perf_counter() - t0)
+
+
+def select_for_budget(policy, gains: Dict[str, float], budget_frac: float,
+                      ) -> "KnapsackResult":
+    """Paper's end-to-end selection step.
+
+    budget_frac: target cost as a fraction of the all-b_hi network cost
+    (paper sweeps 0.95 .. 0.60; the all-b_lo network sits at b_lo/b_hi = 0.5).
+
+    gains: unit name -> G_l (any float scale; ordering is what matters).
+    """
+    units = policy.selectable_units()
+    keys = [u.name for u in units]
+    values = [gains[k] for k in keys]
+    # Item weight: extra BMACs for keeping the unit at b_hi instead of b_lo.
+    weights = [(policy.b_hi - policy.b_lo) * u.macs_per_token for u in units]
+    total_hi = sum(policy.b_hi * u.macs_per_token for u in units)
+    floor_lo = sum(policy.b_lo * u.macs_per_token for u in units)
+    capacity = budget_frac * total_hi - floor_lo
+    return solve(keys, values, weights, capacity)

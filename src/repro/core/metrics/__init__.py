@@ -1,0 +1,12 @@
+from repro.core.metrics.eagl import eagl_gains, unit_entropy
+from repro.core.metrics.alps import alps_gains, AlpsConfig
+from repro.core.metrics.hawq import hawq_gains, HawqConfig
+from repro.core.metrics.baselines import (
+    uniform_gains, first_to_last_gains, last_to_first_gains,
+)
+
+__all__ = [
+    "eagl_gains", "unit_entropy", "alps_gains", "AlpsConfig",
+    "hawq_gains", "HawqConfig", "uniform_gains", "first_to_last_gains",
+    "last_to_first_gains",
+]

@@ -1,0 +1,64 @@
+"""ALPS — Accuracy-aware Layer Precision Selection (paper §3.2, Alg. 1).
+
+For each selectable link-group: drop it from b_hi to b_lo (all others stay at
+b_hi), fine-tune the network briefly (paper: 1 epoch; here: ``steps_per_probe``
+optimizer steps — the cluster-native unit), and record the average training
+metric over the probe window.
+
+  - metric_mode="accuracy" (paper's ResNet path): G_l = max_l(A) - A_l
+  - metric_mode="loss"     (paper's PSPNet path, natural for LMs): G_l = Loss_l
+
+The probe fine-tune starts from the same b_hi checkpoint every time and uses
+the same train_step/optimizer as production training (paper: "the default
+training parameters used for training the higher precision model are used").
+Step-size re-init on the dropped group follows §3.4.3: s_new = s * b_hi/b_lo·…
+(factor 4 for 4->2), handled by quant.rescale_step_for_bits.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class AlpsConfig:
+    steps_per_probe: int = 32          # "1 epoch" equivalent in steps
+    metric_mode: str = "loss"          # "loss" | "accuracy"
+    log_every: int = 0                 # 0 = silent
+
+
+def alps_gains(policy, *,
+               probe_finetune: Callable[..., Dict[str, float]],
+               cfg: Optional[AlpsConfig] = None,
+               progress: Optional[Callable[[str, int, int, float], None]] = None,
+               ) -> Dict[str, float]:
+    """Run the ALPS probe loop over all selectable link-groups.
+
+    probe_finetune(policy=<mixed policy>, steps=<int>) -> {"loss": float,
+    "accuracy": float} — average *training-set* metrics over the probe window,
+    starting from the b_hi checkpoint (the callable owns checkpoint reset).
+
+    Returns link-group key -> G_l.
+    """
+    cfg = cfg or AlpsConfig()
+    units = policy.selectable_units()
+    raw: Dict[str, Dict[str, float]] = {}
+    for i, u in enumerate(units):
+        t0 = time.perf_counter()
+        probe_policy = policy.apply_selection(
+            {v.name: (v.name != u.name) for v in units})
+        metrics = probe_finetune(policy=probe_policy, steps=cfg.steps_per_probe)
+        raw[u.name] = metrics
+        if progress is not None:
+            progress(u.name, i, len(units), time.perf_counter() - t0)
+
+    if cfg.metric_mode == "accuracy":
+        a_max = max(m["accuracy"] for m in raw.values())
+        return {k: a_max - m["accuracy"] for k, m in raw.items()}
+    if cfg.metric_mode == "loss":
+        return {k: m["loss"] for k, m in raw.items()}
+    raise ValueError(f"unknown metric_mode {cfg.metric_mode!r}")

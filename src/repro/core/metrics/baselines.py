@@ -1,0 +1,53 @@
+"""Baseline layer-selection strategies from the paper §4.1/§4.3.
+
+  - uniform:        every layer gets the same value for staying at b_hi; the
+                    knapsack then keeps as many (cheap) layers as fit.
+  - first-to-last:  rank layers topologically; drop the first n layers to
+                    b_lo greedily until the budget is met.
+  - last-to-first:  the reverse.
+
+The greedy baselines are implemented directly (greedy_prefix_selection), not
+via the knapsack — value quantization to [1, 10000] would otherwise blur the
+strict ordering for deep networks.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+
+def _ordered_keys(policy) -> List[str]:
+    """Selectable unit names in topological (definition) order."""
+    return [u.name for u in policy.selectable_units()]
+
+
+def uniform_gains(policy) -> Dict[str, float]:
+    return {k: 1.0 for k in _ordered_keys(policy)}
+
+
+def first_to_last_gains(policy) -> Dict[str, float]:
+    """Higher value = kept longer; earliest layers dropped first."""
+    return {k: float(i) for i, k in enumerate(_ordered_keys(policy))}
+
+
+def last_to_first_gains(policy) -> Dict[str, float]:
+    keys = _ordered_keys(policy)
+    return {k: float(len(keys) - 1 - i) for i, k in enumerate(keys)}
+
+
+def greedy_prefix_selection(policy, budget_frac: float,
+                            reverse: bool = False) -> Dict[str, bool]:
+    """Drop units to b_lo in topological (or reverse) order until the
+    budget is met. Returns unit name -> keep-at-b_hi."""
+    units = policy.selectable_units()
+    if reverse:
+        units = units[::-1]
+    total_hi = sum(policy.b_hi * u.macs_per_token for u in units)
+    budget = budget_frac * total_hi
+    cost = total_hi
+    keep = {u.name: True for u in units}
+    for u in units:
+        if cost <= budget:
+            break
+        keep[u.name] = False
+        cost -= (policy.b_hi - policy.b_lo) * u.macs_per_token
+    return keep

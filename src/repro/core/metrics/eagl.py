@@ -1,0 +1,52 @@
+"""EAGL — Entropy Approximation Guided Layer selection (paper §3.3, Alg. 2).
+
+G_l = H(p̂_l^b): the entropy of the empirical distribution of layer l's
+quantized weights at the current precision b.  Layers whose entropy is close
+to the allocated bit-width need those bits; layers with low entropy compress
+further with little accuracy cost.  Units with multiple linked tensors sum
+their member entropies (paper §3.4.1).
+
+Needs only the trained checkpoint — no data, no gradients.  The histogram +
+entropy computation has a Pallas kernel (kernels/entropy_hist.py) with a
+pure-jnp oracle; this module dispatches through kernels/ops.py.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.kernels import ops as kops
+
+
+def unit_entropy(w: jax.Array, step: jax.Array, bits: float,
+                 impl: str = "auto") -> jax.Array:
+    """H(p̂^b) in bits for one weight tensor (paper Eq. 1-3 / Appendix E)."""
+    codes = quant.quantize_int(w.astype(jnp.float32).reshape(-1),
+                               jnp.asarray(step, jnp.float32),
+                               jnp.float32(bits))
+    n_bins = int(2 ** round(bits))
+    offset = n_bins // 2                  # [-2^(b-1), 2^(b-1)-1] -> [0, 2^b)
+    return kops.entropy_bits(codes.astype(jnp.int32) + offset, n_bins,
+                             impl=impl)
+
+
+def eagl_gains(policy,
+               tensor_fn: Callable[[object, str], Tuple[jax.Array, jax.Array]],
+               impl: str = "auto") -> Dict[str, float]:
+    """Per-unit gains: G = Σ_member-tensors H(p̂^b).
+
+    tensor_fn(unit, tensor_path) -> (weight tensor, LSQ step size).
+    Entropy is evaluated at the unit's *current* policy bits (normally b_hi).
+    """
+    gains: Dict[str, float] = {}
+    for u in policy.selectable_units():
+        total = 0.0
+        for t in u.tensors:
+            w, step = tensor_fn(u, t)
+            total += float(unit_entropy(w, step, policy.bits_of(u.name),
+                                        impl=impl))
+        gains[u.name] = total
+    return gains

@@ -1,0 +1,104 @@
+"""HAWQ-v3 re-implementation (paper Appendix C) for commensurate comparison.
+
+G_l = avg-Hessian-trace(l) × ||Q_4(W_l) - Q_2(W_l)||²
+
+The average Hessian trace of each layer's diagonal block is estimated with
+the Hutchinson estimator: for Rademacher v, E[v_l · (Hv)_l] = trace(H_ll).
+One full-model HVP per probe vector yields *all* layers' trace estimates
+simultaneously (v restricted to layer l is independent of other blocks).
+
+HVPs use forward-over-reverse: jvp(grad(loss)).  The quantization
+perturbation term follows Appendix C: step init = range/2^(b-1) with the
+range symmetrized to ±max(|min W|, |max W|).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quant
+
+
+@dataclasses.dataclass
+class HawqConfig:
+    n_probes: int = 8
+    seed: int = 0
+
+
+def hutchinson_traces(loss_fn: Callable, params, unit_paths: Dict[str, Sequence],
+                      cfg: HawqConfig, *batches) -> Dict[str, float]:
+    """Per-unit avg diagonal-block Hessian trace estimates.
+
+    loss_fn(params, *batches) -> scalar loss.
+    unit_paths: unit name -> pytree path (tuple of keys) of its weight leaf.
+    Returns unit name -> trace(H_ll)/n_l  (average Hessian trace).
+    """
+    grad_fn = jax.grad(loss_fn)
+
+    def hvp(v):
+        return jax.jvp(lambda p: grad_fn(p, *batches), (params,), (v,))[1]
+
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    key = jax.random.PRNGKey(cfg.seed)
+    acc = {name: 0.0 for name in unit_paths}
+    for probe in range(cfg.n_probes):
+        key, sub = jax.random.split(key)
+        subkeys = jax.random.split(sub, len(leaves))
+        v_leaves = [
+            (jax.random.rademacher(k, l.shape, jnp.float32).astype(l.dtype)
+             if jnp.issubdtype(l.dtype, jnp.floating) else jnp.zeros_like(l))
+            for k, l in zip(subkeys, leaves)
+        ]
+        v = jax.tree_util.tree_unflatten(treedef, v_leaves)
+        hv = hvp(v)
+        for name, path in unit_paths.items():
+            vl = _get_path(v, path)
+            hvl = _get_path(hv, path)
+            acc[name] += float(jnp.vdot(vl.astype(jnp.float32),
+                                        hvl.astype(jnp.float32)))
+    return {name: acc[name] / (cfg.n_probes * _get_path(params, path).size)
+            for name, path in unit_paths.items()}
+
+
+def quant_perturbation_l2sq(w: jax.Array, b_hi: float, b_lo: float) -> float:
+    """||Q_hi(W) - Q_lo(W)||² with HAWQ's range-based step init (Appendix C)."""
+    w = w.astype(jnp.float32)
+    rng = jnp.maximum(jnp.abs(w.min()), jnp.abs(w.max()))
+    out = 0.0
+    deq = {}
+    for b in (b_hi, b_lo):
+        step = rng / (2.0 ** (b - 1.0))
+        codes = quant.quantize_int(w, step, jnp.float32(b))
+        deq[b] = codes * step
+    return float(jnp.sum((deq[b_hi] - deq[b_lo]) ** 2))
+
+
+def hawq_gains(policy, loss_fn, params, tensor_paths: Dict[str, Sequence],
+               cfg: HawqConfig, *batches) -> Dict[str, float]:
+    """Per-unit gains: Σ_member-tensors trace̅(H_tt)·||Q4(W)-Q2(W)||².
+
+    tensor_paths: "<unit name>/<tensor path>" -> pytree path of the leaf.
+    (One entry per member tensor of each selectable unit.)
+    """
+    traces = hutchinson_traces(loss_fn, params, tensor_paths, cfg, *batches)
+    gains: Dict[str, float] = {}
+    for u in policy.selectable_units():
+        total = 0.0
+        for t in u.tensors:
+            key = f"{u.name}/{t}"
+            w = _get_path(params, tensor_paths[key])
+            total += traces[key] * quant_perturbation_l2sq(
+                w, policy.b_hi, policy.b_lo)
+        gains[u.name] = total
+    return gains
+
+
+def _get_path(tree, path):
+    node = tree
+    for p in path:
+        node = node[p]
+    return node

@@ -1,0 +1,148 @@
+"""PrecisionPolicy: named quantizable units -> per-layer bit-widths.
+
+The paper's framework operates on "layers" (quant-units here): a unit is one
+or more linear projections that share an input activation tensor and must
+therefore share one precision (paper §3.4.1, "linked layers") — e.g. the
+q/k/v projections, or a SwiGLU gate+up pair.  A unit is the atom of
+selection: one knapsack item, with cost and gain summed over its member
+tensors.
+
+Models are built as stacked+scanned layer groups, so the policy materializes
+as a pytree of float32 bits arrays keyed {group: {slot: (n_layers[, n_sub])}}
+(``n_sub`` for per-expert units).  These arrays are *inputs* to the jitted
+step functions — changing a layer's precision never recompiles anything.
+
+Pinning rules (paper §3.4.1, enforced structurally):
+  - first & last layers (embedding / LM head)  -> 8-bit, not selectable
+  - units with < 128 input features            -> 4-bit, not selectable
+  - softmax inputs (router/LM-head activations)-> 8-bit (handled in models)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+PIN_MIN_IN_FEATURES = 128
+PIN_EDGE_BITS = 8.0
+PIN_NARROW_BITS = 4.0
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantUnit:
+    """One selectable precision atom (>=1 linked projections)."""
+    name: str                     # unique, e.g. "pat0.attn_qkv.L3"
+    group: str                    # scan-group name, e.g. "pat0", "prefix1"
+    layer: int                    # index within the scan group
+    slot: str                     # bits-dict key used by the model's apply
+    tensors: Tuple[str, ...]      # param paths inside the layer subtree
+    n_params: int                 # total parameter count across tensors
+    macs_per_token: float         # total MACs per processed token
+    in_features: int
+    sub: Optional[int] = None     # e.g. expert index (policy array gains a dim)
+    pinned_bits: Optional[float] = None   # None => selectable
+
+    @property
+    def selectable(self) -> bool:
+        return self.pinned_bits is None
+
+
+class PrecisionPolicy:
+    """Unit registry + current bits assignment."""
+
+    def __init__(self, units: Sequence[QuantUnit], b_hi: float = 4.0,
+                 b_lo: float = 2.0):
+        names = [u.name for u in units]
+        if len(set(names)) != len(names):
+            dupes = sorted({n for n in names if names.count(n) > 1})
+            raise ValueError(f"duplicate quant-unit names: {dupes[:5]}")
+        self.units: List[QuantUnit] = list(units)
+        self.by_name: Dict[str, QuantUnit] = {u.name: u for u in units}
+        self.b_hi = float(b_hi)
+        self.b_lo = float(b_lo)
+        self._bits: Dict[str, float] = {
+            u.name: (u.pinned_bits if u.pinned_bits is not None else self.b_hi)
+            for u in units
+        }
+
+    # ----------------------------------------------------------------- basic
+    def bits_of(self, name: str) -> float:
+        return self._bits[name]
+
+    def set_bits(self, name: str, bits: float) -> None:
+        u = self.by_name[name]
+        if not u.selectable:
+            raise ValueError(f"unit {name} is pinned at {u.pinned_bits} bits")
+        self._bits[name] = float(bits)
+
+    def selectable_units(self) -> List[QuantUnit]:
+        return [u for u in self.units if u.selectable]
+
+    # ------------------------------------------------------------ assignment
+    def apply_selection(self, keep_hi: Dict[str, bool]) -> "PrecisionPolicy":
+        """Copy with selections applied: unit name -> keep at b_hi?"""
+        new = self.copy()
+        for u in self.selectable_units():
+            bits = self.b_hi if keep_hi.get(u.name, True) else self.b_lo
+            new._bits[u.name] = bits
+        return new
+
+    def uniform(self, bits: float) -> "PrecisionPolicy":
+        new = self.copy()
+        for u in self.selectable_units():
+            new._bits[u.name] = float(bits)
+        return new
+
+    def copy(self) -> "PrecisionPolicy":
+        new = PrecisionPolicy(self.units, self.b_hi, self.b_lo)
+        new._bits = dict(self._bits)
+        return new
+
+    # -------------------------------------------------------------- exports
+    def as_arrays(self) -> Dict[str, Dict[str, np.ndarray]]:
+        """{group: {slot: float32 (n_layers,) or (n_layers, n_sub)}}."""
+        lens: Dict[Tuple[str, str], int] = {}
+        subs: Dict[Tuple[str, str], int] = {}
+        for u in self.units:
+            key = (u.group, u.slot)
+            lens[key] = max(lens.get(key, 0), u.layer + 1)
+            if u.sub is not None:
+                subs[key] = max(subs.get(key, 0), u.sub + 1)
+        out: Dict[str, Dict[str, np.ndarray]] = {}
+        for u in self.units:
+            key = (u.group, u.slot)
+            grp = out.setdefault(u.group, {})
+            if u.slot not in grp:
+                shape = ((lens[key], subs[key]) if key in subs
+                         else (lens[key],))
+                grp[u.slot] = np.full(shape, self.b_hi, np.float32)
+            if u.sub is not None:
+                grp[u.slot][u.layer, u.sub] = self._bits[u.name]
+            else:
+                grp[u.slot][u.layer] = self._bits[u.name]
+        return out
+
+    # ------------------------------------------------------------ accounting
+    def cost_bmacs_per_token(self, selectable_only: bool = True) -> float:
+        total = 0.0
+        for u in self.units:
+            if selectable_only and not u.selectable:
+                continue
+            total += self._bits[u.name] * u.macs_per_token
+        return total
+
+    def model_bits(self) -> float:
+        return float(sum(self._bits[u.name] * u.n_params for u in self.units))
+
+    def compression_ratio(self) -> float:
+        n = sum(u.n_params for u in self.units)
+        return 32.0 * n / max(self.model_bits(), 1.0)
+
+    def summary(self) -> str:
+        lines = []
+        for u in self.units:
+            tag = "pinned" if not u.selectable else ""
+            lines.append(f"{u.name:48s} {self._bits[u.name]:.0f}b "
+                         f"macs/tok={u.macs_per_token:.3e} {tag}")
+        return "\n".join(lines)

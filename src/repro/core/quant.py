@@ -1,0 +1,184 @@
+"""Quantization primitives: LSQ fake-quant, integer quantization, packing.
+
+The paper fine-tunes mixed-precision networks with LSQ (Esser et al., 2020):
+weights and activations are quantized with a *learned* step size ``s``::
+
+    q      = clamp(round(x / s), qmin, qmax)
+    x_hat  = q * s
+
+Gradients flow through a straight-through estimator for ``x`` and through the
+LSQ step-size gradient for ``s`` (scaled by ``g = 1/sqrt(n * qmax)``).
+
+Bit-widths are **traced values** (float32 scalars/arrays), not Python ints, so
+one compiled train step serves every mixed-precision policy the knapsack can
+produce — changing a layer from 4-bit to 2-bit does not recompile anything.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def qrange(bits: jax.Array, signed: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """(qmin, qmax) for a traced bit-width. bits may be any float/int array."""
+    b = jnp.asarray(bits, jnp.float32)
+    if signed:
+        qmax = jnp.exp2(b - 1.0) - 1.0
+        qmin = -jnp.exp2(b - 1.0)
+    else:
+        qmax = jnp.exp2(b) - 1.0
+        qmin = jnp.zeros_like(qmax)
+    return qmin, qmax
+
+
+def quantize_int(x: jax.Array, step: jax.Array, bits: jax.Array,
+                 signed: bool = True) -> jax.Array:
+    """Integer codes q = clamp(round(x/s)) — the paper's Q_b(W) before rescale."""
+    qmin, qmax = qrange(bits, signed)
+    return jnp.clip(jnp.round(x / step), qmin, qmax)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def lsq_fake_quant(x: jax.Array, step: jax.Array, bits: jax.Array,
+                   signed: bool = True) -> jax.Array:
+    """LSQ quantize-dequantize with learned step size.
+
+    x:    tensor to fake-quantize (weights or activations)
+    step: positive scalar (or broadcastable) learned step size
+    bits: traced bit-width (scalar or broadcastable), e.g. 2.0 / 4.0 / 8.0
+    """
+    qmin, qmax = qrange(bits, signed)
+    s = jnp.maximum(jnp.abs(step), 1e-9).astype(jnp.float32)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s), qmin, qmax)
+    return (q * s).astype(x.dtype)
+
+
+def _lsq_fwd(x, step, bits, signed):
+    # quantization arithmetic in f32 regardless of storage dtype (bf16's 8
+    # mantissa bits would mis-round codes near bin boundaries).
+    #
+    # RESIDUALS ARE THE RAW INPUTS ONLY. Saving xs/q (two f32 tensors the
+    # size of the weights, per quant-unit, per layer, per microbatch) was
+    # the dominant HBM/collective cost of QAT at scale — the backward
+    # recomputes them elementwise instead (EXPERIMENTS.md §Perf A1).
+    # (primal inlined — calling the decorated fn would break jvp-of-vjp,
+    # e.g. HAWQ's Hutchinson HVPs)
+    qmin, qmax = qrange(bits, signed)
+    s = jnp.maximum(jnp.abs(step), 1e-9).astype(jnp.float32)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s), qmin, qmax)
+    return (q * s).astype(x.dtype), (x, step, bits)
+
+
+def _lsq_bwd(signed, res, g):
+    x, step, bits = res
+    qmin, qmax = qrange(bits, signed)
+    s = jnp.maximum(jnp.abs(step), 1e-9).astype(jnp.float32)
+    xs = x.astype(jnp.float32) / s
+    in_range = (xs >= qmin) & (xs <= qmax)
+    # STE for x: pass-through inside the clip range, zero outside.
+    # Cotangent dtype follows the PRIMAL (bf16 params/activations keep the
+    # whole backward chain — and its psums/reduce-scatters — in bf16;
+    # returning g.dtype here silently upcast every QAT backward to f32 and
+    # doubled the collective wire: EXPERIMENTS.md §Perf A2).
+    gx = jnp.where(in_range, g, 0).astype(x.dtype)
+    # LSQ grad for s:  d(q*s)/ds = (round(xs) - xs) inside range; qmin/qmax
+    # outside.
+    ds_elem = jnp.where(in_range, jnp.round(xs) - xs,
+                        jnp.clip(xs, qmin, qmax))
+    # float, not int: element counts of full-scale layers exceed int32
+    n = float(max(1, x.size // _size(step)))
+    # LSQ grad scale g = 1/sqrt(n*qmax) for stability (Esser et al., 2020).
+    gscale = jax.lax.rsqrt(jnp.maximum(
+        n * jnp.mean(qmax).astype(jnp.float32), 1.0))
+    gs_full = (g.astype(jnp.float32) * ds_elem) * gscale
+    # Reduce to the step's shape (step is usually a scalar per quant-unit).
+    gs = _reduce_to_shape(gs_full, jnp.shape(step)).astype(
+        step.dtype if hasattr(step, "dtype") else jnp.float32)
+    gbits = jnp.zeros_like(bits)       # bits come from the policy, not SGD
+    return gx, gs, gbits
+
+
+def _size(a) -> int:
+    n = 1
+    for d in jnp.shape(a):
+        n *= d
+    return max(n, 1)
+
+
+def _reduce_to_shape(x: jax.Array, shape) -> jax.Array:
+    """Sum-reduce x down to `shape` (supporting scalar or broadcast shapes)."""
+    if shape == ():
+        return jnp.sum(x)
+    # Sum over leading axes until ranks match, then over broadcasted dims.
+    while x.ndim > len(shape):
+        x = jnp.sum(x, axis=0)
+    for i, (xd, sd) in enumerate(zip(x.shape, shape)):
+        if sd == 1 and xd != 1:
+            x = jnp.sum(x, axis=i, keepdims=True)
+    return x
+
+
+lsq_fake_quant.defvjp(_lsq_fwd, _lsq_bwd)
+
+
+def init_step_from_tensor(w: jax.Array, bits: float) -> jax.Array:
+    """LSQ step-size init: 2*mean(|w|)/sqrt(qmax) (Esser et al., 2020)."""
+    qmax = 2.0 ** (bits - 1) - 1.0
+    return 2.0 * jnp.mean(jnp.abs(w)).astype(jnp.float32) / jnp.sqrt(qmax)
+
+
+def rescale_step_for_bits(step: jax.Array, old_bits: float, new_bits: float) -> jax.Array:
+    """Paper §3.4.3: when dropping 4-bit -> 2-bit, init new step = 4 * old step.
+
+    Generalized: step scales by 2**(old_bits - new_bits) so the representable
+    range (step * 2^(b-1)) is preserved.
+    """
+    return step * (2.0 ** (old_bits - new_bits))
+
+
+# ---------------------------------------------------------------------------
+# Real integer quantization + packing for the serving path.
+# ---------------------------------------------------------------------------
+
+def quantize_weights_int(w: jax.Array, step: jax.Array, bits: int):
+    """Quantize to integer codes for storage. Returns (codes_int8, step)."""
+    q = quantize_int(w, step, jnp.float32(bits))
+    return q.astype(jnp.int8), step
+
+
+def pack_int4(codes: jax.Array) -> jax.Array:
+    """Store int8 codes in native jnp.int4 (XLA packs 2 per byte)."""
+    return codes.astype(jnp.int4)
+
+
+def unpack_int4(packed: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    return packed.astype(dtype)
+
+
+def pack_int2(codes: jax.Array) -> jax.Array:
+    """Pack 2-bit codes (values in [-2,1]) 4-per-uint8 along the last axis.
+
+    Last axis length must be a multiple of 4.
+    """
+    assert codes.shape[-1] % 4 == 0, codes.shape
+    u = (codes.astype(jnp.int32) & 0x3).astype(jnp.uint8)
+    u = u.reshape(*codes.shape[:-1], codes.shape[-1] // 4, 4)
+    shifts = jnp.array([0, 2, 4, 6], jnp.uint8)
+    return jnp.sum(u << shifts, axis=-1).astype(jnp.uint8)
+
+
+def unpack_int2(packed: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    """Inverse of pack_int2: uint8 -> 4x signed 2-bit values in [-2, 1]."""
+    shifts = jnp.array([0, 2, 4, 6], jnp.uint8)
+    u = (packed[..., None] >> shifts) & 0x3          # (..., n//4, 4) in [0,3]
+    s = u.astype(jnp.int8)
+    s = jnp.where(s >= 2, s - 4, s)                   # sign-extend 2-bit
+    out = s.reshape(*packed.shape[:-1], packed.shape[-1] * 4)
+    return out.astype(dtype)
+
+
+def dequantize(codes: jax.Array, step: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    return codes.astype(dtype) * step.astype(dtype)

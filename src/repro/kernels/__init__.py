@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+  quant_matmul     packed W4/W2 dequant-matmul (decode path, HBM-bound)
+  lsq_fakequant    fused LSQ quantize-dequantize (QAT inner loop)
+  entropy_hist     histogram for the EAGL entropy metric
+  flash_attention  blocked online-softmax attention (32k prefill)
+
+Each kernel has a pure-jnp oracle in ref.py; ops.py dispatches by backend.
+"""

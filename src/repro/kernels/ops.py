@@ -1,0 +1,78 @@
+"""Dispatch wrappers: Pallas kernels on TPU, pure-jnp refs elsewhere.
+
+``impl`` semantics:
+  - "auto":      Pallas (compiled) on TPU; ref (plain XLA) on CPU/GPU.
+                 This is what models/serving call — the dry-run therefore
+                 lowers the ref path, whose HLO carries the true packed-byte
+                 traffic for the roofline.
+  - "pallas":    force-compile the Pallas kernel (TPU only).
+  - "interpret": Pallas kernel body interpreted on CPU — used by the test
+                 suite to validate kernels against the refs.
+  - "ref":       force the pure-jnp oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import entropy_hist as _hist
+from repro.kernels import flash_attention as _flash
+from repro.kernels import lsq_fakequant as _lsq
+from repro.kernels import quant_matmul as _qmm
+from repro.kernels import ref
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(impl: str) -> str:
+    if impl == "auto":
+        return "pallas" if on_tpu() else "ref"
+    return impl
+
+
+def histogram(codes: jax.Array, n_bins: int, impl: str = "auto") -> jax.Array:
+    impl = _resolve(impl)
+    if impl == "ref":
+        return ref.histogram(codes, n_bins)
+    return _hist.histogram(codes, n_bins, interpret=(impl == "interpret"))
+
+
+def entropy_bits(codes: jax.Array, n_bins: int, impl: str = "auto") -> jax.Array:
+    counts = histogram(codes, n_bins, impl=impl)
+    p = counts / jnp.maximum(jnp.sum(counts), 1.0) + 1e-10
+    return -jnp.sum(p * jnp.log2(p))
+
+
+def lsq_fakequant(x: jax.Array, step: jax.Array, bits, impl: str = "auto",
+                  ) -> jax.Array:
+    """Forward-only fake-quant (inference/eval). QAT uses
+    repro.core.quant.lsq_fake_quant, which carries the LSQ custom VJP."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return ref.lsq_fakequant(x, step, jnp.asarray(bits, jnp.float32))
+    return _lsq.lsq_fakequant(x, step, jnp.asarray(bits, jnp.float32),
+                              interpret=(impl == "interpret"))
+
+
+def quant_matmul(x: jax.Array, w_packed: jax.Array, scale: jax.Array,
+                 bits: int, impl: str = "auto", **kw) -> jax.Array:
+    impl = _resolve(impl)
+    if impl == "ref":
+        f = ref.quant_matmul_w4 if bits == 4 else ref.quant_matmul_w2
+        return f(x, w_packed, scale)
+    return _qmm.quant_matmul(x, w_packed, scale, bits=bits,
+                             interpret=(impl == "interpret"), **kw)
+
+
+def flash_attention(q, k, v, causal: bool = True, impl: str = "auto", **kw):
+    impl = _resolve(impl)
+    if impl == "ref":
+        group = q.shape[1] // k.shape[1]
+        if group > 1:
+            k = jnp.repeat(k, group, axis=1)
+            v = jnp.repeat(v, group, axis=1)
+        return ref.attention(q, k, v, causal=causal)
+    return _flash.flash_attention(q, k, v, causal=causal,
+                                  interpret=(impl == "interpret"), **kw)

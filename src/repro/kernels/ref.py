@@ -1,0 +1,119 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+These are also the production CPU/dry-run implementations: they lower to
+plain XLA HLO, so the dry-run roofline sees the true byte traffic (packed
+integer weights stay packed in HBM until the unpack op).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+
+
+# ------------------------------------------------------------- entropy_hist
+def histogram(codes: jax.Array, n_bins: int) -> jax.Array:
+    """Counts of integer codes in [0, n_bins). codes: int32 (n,)."""
+    one_hot = (codes[:, None] == jnp.arange(n_bins, dtype=codes.dtype)[None, :])
+    return jnp.sum(one_hot.astype(jnp.float32), axis=0)
+
+
+def entropy_bits(codes: jax.Array, n_bins: int) -> jax.Array:
+    """H(p̂) in bits (paper Eq. 3 / Appendix E; +1e-10 exactly as Appendix E)."""
+    counts = histogram(codes, n_bins)
+    p = counts / jnp.maximum(jnp.sum(counts), 1.0) + 1e-10
+    return -jnp.sum(p * jnp.log2(p))
+
+
+# ------------------------------------------------------------ lsq_fakequant
+def lsq_fakequant(x: jax.Array, step: jax.Array, bits: jax.Array) -> jax.Array:
+    """Quantize-dequantize forward (no VJP here — oracle only).
+    Arithmetic in f32 (matches core/quant.py and the Pallas kernel)."""
+    qmin, qmax = quant.qrange(bits)
+    s = jnp.maximum(jnp.abs(step), 1e-9).astype(jnp.float32)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s), qmin, qmax)
+    return (q * s).astype(x.dtype)
+
+
+# ------------------------------------------------------------- quant_matmul
+def quant_matmul_w4(x: jax.Array, w_packed: jax.Array, scale: jax.Array,
+                    ) -> jax.Array:
+    """x (M,K) bf16 @ int4-weights packed 2-per-uint8 along K.
+
+    w_packed: (K//2, N) uint8; row r holds K-rows 2r (low nibble) and 2r+1
+    (high nibble), sign-extended 4-bit codes. scale: (N,) f32 per-channel.
+    """
+    w = unpack_w4(w_packed)                       # (K, N) bf16 codes
+    acc = jnp.dot(x.astype(jnp.bfloat16), w,
+                  preferred_element_type=jnp.float32)
+    return acc * scale[None, :].astype(jnp.float32)
+
+
+def quant_matmul_w2(x: jax.Array, w_packed: jax.Array, scale: jax.Array,
+                    ) -> jax.Array:
+    """x (M,K) bf16 @ 2-bit weights packed 4-per-uint8 along K.
+
+    w_packed: (K//4, N) uint8; row r holds K-rows 4r..4r+3 in bit-pairs
+    (LSB first). scale: (N,) f32.
+    """
+    w = unpack_w2(w_packed)                       # (K, N) bf16 codes
+    acc = jnp.dot(x.astype(jnp.bfloat16), w,
+                  preferred_element_type=jnp.float32)
+    return acc * scale[None, :].astype(jnp.float32)
+
+
+def unpack_w4(w_packed: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    """(K//2, N) uint8 -> (K, N) sign-extended codes."""
+    lo = (w_packed & 0xF).astype(jnp.int8)
+    hi = ((w_packed >> 4) & 0xF).astype(jnp.int8)
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    w = jnp.stack([lo, hi], axis=1)               # (K//2, 2, N)
+    return w.reshape(w_packed.shape[0] * 2, w_packed.shape[1]).astype(dtype)
+
+
+def unpack_w2(w_packed: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    """(K//4, N) uint8 -> (K, N) sign-extended 2-bit codes in [-2, 1]."""
+    parts = []
+    for i in range(4):
+        c = ((w_packed >> (2 * i)) & 0x3).astype(jnp.int8)
+        c = jnp.where(c >= 2, c - 4, c)
+        parts.append(c)
+    w = jnp.stack(parts, axis=1)                  # (K//4, 4, N)
+    return w.reshape(w_packed.shape[0] * 4, w_packed.shape[1]).astype(dtype)
+
+
+def pack_w4(codes: jax.Array) -> jax.Array:
+    """(K, N) int codes in [-8,7] -> (K//2, N) uint8 (K-major nibbles)."""
+    assert codes.shape[0] % 2 == 0
+    c = (codes.astype(jnp.int32) & 0xF).astype(jnp.uint8)
+    c = c.reshape(codes.shape[0] // 2, 2, codes.shape[1])
+    return (c[:, 0, :] | (c[:, 1, :] << 4)).astype(jnp.uint8)
+
+
+def pack_w2(codes: jax.Array) -> jax.Array:
+    """(K, N) int codes in [-2,1] -> (K//4, N) uint8 (K-major bit-pairs)."""
+    assert codes.shape[0] % 4 == 0
+    c = (codes.astype(jnp.int32) & 0x3).astype(jnp.uint8)
+    c = c.reshape(codes.shape[0] // 4, 4, codes.shape[1])
+    out = c[:, 0, :]
+    for i in range(1, 4):
+        out = out | (c[:, i, :] << (2 * i))
+    return out.astype(jnp.uint8)
+
+
+# ---------------------------------------------------------- flash_attention
+def attention(q: jax.Array, k: jax.Array, v: jax.Array,
+              causal: bool = True, scale: float | None = None) -> jax.Array:
+    """Naive softmax attention oracle. q,k,v: (B, H, S, D) (H = q heads;
+    k/v may have fewer heads — pre-broadcast before calling)."""
+    if scale is None:
+        scale = q.shape[-1] ** -0.5
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        s_q, s_k = q.shape[2], k.shape[2]
+        mask = jnp.tril(jnp.ones((s_q, s_k), bool), k=s_k - s_q)
+        logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)

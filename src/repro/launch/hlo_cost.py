@@ -1,0 +1,346 @@
+"""HLO cost analysis that understands while-loops (scan-over-layers).
+
+XLA's built-in ``compiled.cost_analysis()`` visits each computation once, so
+a scan-over-layers model under-counts FLOPs/bytes/collectives by ~n_layers
+(and by the microbatch count again).  This module re-derives the three
+roofline inputs from the compiled HLO text, multiplying every op by the
+product of its enclosing while-loop trip counts:
+
+  flops       2·M·N·K for dot ops (contracting dims parsed from the op),
+              + 1/elem for elementwise/fusion/reduce outputs (VPU work)
+  bytes       Σ (operand bytes + result bytes) over computational ops;
+              fusions count their boundary traffic only (fused interiors
+              live in registers/VMEM, matching HBM-traffic intent)
+  collectives per-chip wire bytes under a ring model (all-gather: out,
+              reduce-scatter: in, all-reduce: 2×, all-to-all/permute: 1×)
+
+Trip counts come from the loop-condition's comparison constant — exact for
+lax.scan/fori_loop lowerings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 0.125, "s2": 0.25, "u2": 0.25, "s4": 0.5, "u4": 0.5,
+    "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z]\w*)\[([\d,]*)\]")
+_SKIP_BYTES = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "call", "conditional", "after-all", "partition-id",
+    "replica-id", "iota", "get-dimension-size", "custom-call", "domain",
+    "opt-barrier", "rng-get-and-update-state",
+}
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "ragged-all-to-all")
+
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\((?:[^()]|\([^()]*\))*\)"
+    r"|[a-z]\w*\[[\d,]*\](?:\{[^}]*\})?))\s*([\w\-]+)\((.*)$")
+
+
+def _shape_elems_bytes(type_str: str) -> Tuple[float, float]:
+    elems = 0.0
+    total = 0.0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        total += n * _DTYPE_BYTES[dtype]
+    return elems, total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    result_type: str
+    opcode: str
+    rest: str          # operand list + attributes
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0                       # per-chip wire bytes
+    coll_detail: Dict[str, float] = dataclasses.field(default_factory=dict)
+    coll_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+    dot_flops: float = 0.0
+    elem_flops: float = 0.0
+    while_trips: List[int] = dataclasses.field(default_factory=list)
+
+
+def parse_computations(hlo: str) -> Tuple[Dict[str, List[Op]], str]:
+    comps: Dict[str, List[Op]] = {}
+    entry = None
+    current: Optional[str] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        m = re.match(r"^(ENTRY\s+)?%?([\w.\-]+)\s*(?:\(.*\))?\s*->.*\{\s*$",
+                     line)
+        if m:
+            current = m.group(2)
+            comps[current] = []
+            if m.group(1):
+                entry = current
+            continue
+        if line.strip() == "}":
+            current = None
+            continue
+        if current is None:
+            continue
+        om = _OP_RE.match(line)
+        if om:
+            comps[current].append(
+                Op(om.group(1), om.group(2), om.group(3), om.group(4)))
+    if entry is None:
+        # fall back: the computation named like main
+        for name in comps:
+            if "main" in name:
+                entry = name
+        entry = entry or next(iter(comps))
+    return comps, entry
+
+
+def _types_by_name(comps: Dict[str, List[Op]]) -> Dict[str, str]:
+    return {op.name: op.result_type
+            for ops in comps.values() for op in ops}
+
+
+_ATTR_COMP_RE = re.compile(
+    r"(?:body|condition|to_apply|calls)=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _trip_count(cond_ops: List[Op]) -> int:
+    """Max integer constant in the loop condition ≈ trip count (exact for
+    lax.scan / fori_loop)."""
+    best = 1
+    for op in cond_ops:
+        if op.opcode == "constant":
+            # op.rest starts right after 'constant(' -> "10), metadata=..."
+            m = re.match(r"(\d+)\)", op.rest or "")
+            if m:
+                best = max(best, int(m.group(1)))
+        for m in _CONST_RE.finditer(op.rest or ""):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _operand_types(op: Op, types: Dict[str, str]) -> List[str]:
+    # operands are before the first "),"-ish boundary; just scan names and
+    # keep those that resolve to known op types.
+    args = op.rest.split(")", 1)[0]
+    out = []
+    for m in _OPERAND_RE.finditer(args):
+        t = types.get(m.group(1))
+        if t is not None:
+            out.append(t)
+    return out
+
+
+# Bytes model (ideal-fusion HBM traffic): bytes are charged only at
+# *materialization points* — dots, reduces, collectives, copies, gathers,
+# scatters, DUS, sorts — as out_bytes + Σ effective-read-bytes(operands).
+# Elementwise / broadcast / reshape / select chains are contracted: reading
+# their output costs reading their (recursively effective) inputs, capped at
+# 4× the tensor size (bounded fan-in).  This matches what a TPU compile
+# fuses; the CPU backend's tiny wrapper-fusions would otherwise charge every
+# exp/where/max a full HBM round-trip (~30× inflation on attention chains).
+_REAL_OPS = {
+    "dot", "convolution", "reduce", "reduce-window", "sort", "copy",
+    "transpose", "concatenate", "rng", "rng-bit-generator", "cholesky",
+    "triangular-solve", "fft", "select-and-scatter", "custom-call",
+}
+_BOUNDARY_OPS = {"parameter", "get-tuple-element", "tuple", "while",
+                 "conditional", "call", "after-all", "optimization-barrier",
+                 "opt-barrier"}
+
+
+def analyze_hlo(hlo: str) -> HloCost:
+    comps, entry = parse_computations(hlo)
+    types = _types_by_name(comps)
+    cost = HloCost()
+
+    def visit(comp: str, mult: float, inside_fusion: bool):
+        eff: Dict[str, float] = {}
+
+        def operand_names(op: Op) -> List[str]:
+            args = op.rest.split(")", 1)[0]
+            return [m.group(1) for m in _OPERAND_RE.finditer(args)]
+
+        def eff_of(name: str) -> float:
+            if name in eff:
+                return eff[name]
+            t = types.get(name)
+            if t is None:
+                return 0.0
+            return _shape_elems_bytes(t)[1]
+
+        for op in comps.get(comp, []):
+            oc = op.opcode
+            # ---- control flow recursion ----
+            if oc == "while":
+                bm = re.search(r"body=%?([\w.\-]+)", op.rest)
+                cm_ = re.search(r"condition=%?([\w.\-]+)", op.rest)
+                # authoritative trip count from the backend config if present
+                km = re.search(r"known_trip_count.*?\"n\":\"(\d+)\"", op.rest)
+                if km:
+                    trips = int(km.group(1))
+                elif cm_:
+                    trips = _trip_count(comps.get(cm_.group(1), []))
+                else:
+                    trips = 1
+                cost.while_trips.append(trips)
+                if bm:
+                    visit(bm.group(1), mult * trips, inside_fusion)
+                continue
+            if oc == "conditional":
+                bm = _BRANCH_RE.search(op.rest)
+                if bm:
+                    for ref in re.findall(r"%?([\w.\-]+)", bm.group(1)):
+                        if ref in comps:
+                            visit(ref, mult, inside_fusion)
+                continue
+
+            out_elems, out_b = _shape_elems_bytes(op.result_type)
+            ops_in = operand_names(op)
+            in_eff = sum(eff_of(n) for n in ops_in)
+
+            if oc == "fusion":
+                # virtual for bytes (contracted); descend for dot flops only
+                eff[op.name] = min(in_eff, 4.0 * out_b)
+                cost.elem_flops += mult * out_elems
+                cost.flops += mult * out_elems
+                for m in _ATTR_COMP_RE.finditer(op.rest):
+                    if m.group(0).startswith("calls"):
+                        visit(m.group(1), mult, True)
+                continue
+            if oc == "call":
+                for m in _ATTR_COMP_RE.finditer(op.rest):
+                    if m.group(0).startswith("to_apply"):
+                        visit(m.group(1), mult, inside_fusion)
+                eff[op.name] = out_b
+                continue
+
+            # ---- collectives ----
+            base = oc[:-6] if oc.endswith("-start") else oc
+            if base in _COLLECTIVES:
+                eff[op.name] = out_b
+                if oc.endswith("-done"):
+                    continue
+                in_b = sum(_shape_elems_bytes(types.get(n, ""))[1]
+                           for n in ops_in)
+                if base == "all-gather":
+                    wire = out_b
+                elif base == "reduce-scatter":
+                    wire = in_b or out_b
+                elif base == "all-reduce":
+                    wire = 2.0 * max(out_b, in_b)
+                else:
+                    wire = max(out_b, in_b)
+                cost.coll_bytes += mult * wire
+                cost.coll_detail[base] = cost.coll_detail.get(base, 0.0) \
+                    + mult * wire
+                cost.coll_counts[base] = cost.coll_counts.get(base, 0) + 1
+                cost.bytes += mult * (out_b + in_eff)   # HBM side of the wire
+                continue
+
+            # ---- dots (FLOPs + materialized bytes) ----
+            if oc in ("dot", "convolution"):
+                k = 1.0
+                cm = _CONTRACT_RE.search(op.rest)
+                op_types = [types.get(n, "") for n in ops_in]
+                if cm and op_types:
+                    lhs_dims = _SHAPE_RE.search(op_types[0])
+                    if lhs_dims:
+                        dims = [int(d) for d in lhs_dims.group(2).split(",")
+                                if d]
+                        for idx in cm.group(1).split(","):
+                            if idx and int(idx) < len(dims):
+                                k *= dims[int(idx)]
+                fl = 2.0 * out_elems * k
+                cost.dot_flops += mult * fl
+                cost.flops += mult * fl
+                if not inside_fusion:
+                    cost.bytes += mult * (out_b + in_eff)
+                eff[op.name] = out_b
+                continue
+
+            if inside_fusion:
+                # inside a CPU wrapper-fusion: only FLOPs matter
+                if oc == "reduce":
+                    in_elems = sum(_shape_elems_bytes(types.get(n, ""))[0]
+                                   for n in ops_in)
+                    cost.elem_flops += mult * in_elems
+                    cost.flops += mult * in_elems
+                continue
+
+            # ---- boundary ops: effective size, no charge ----
+            if oc in _BOUNDARY_OPS:
+                eff[op.name] = out_b
+                continue
+            if oc in ("constant", "iota", "replica-id", "partition-id",
+                      "rng-get-and-update-state", "domain",
+                      "get-dimension-size", "bitcast", "after-all"):
+                eff[op.name] = out_b if oc == "constant" else 0.0
+                if oc == "bitcast":
+                    eff[op.name] = in_eff
+                continue
+
+            # ---- in-place updates: charge the update, not the buffer ----
+            if oc in ("dynamic-update-slice", "scatter"):
+                upd = sum(eff_of(n) for n in ops_in[1:])
+                cost.bytes += mult * upd
+                eff[op.name] = out_b
+                continue
+            if oc == "gather":
+                idx_eff = sum(eff_of(n) for n in ops_in[1:])
+                cost.bytes += mult * (2.0 * out_b + idx_eff)
+                eff[op.name] = out_b
+                continue
+            if oc in ("slice", "dynamic-slice"):
+                eff[op.name] = min(out_b, in_eff)
+                continue
+            if oc in ("broadcast", "reshape", "pad", "reverse", "convert",
+                      "select", "compare", "and", "or", "not", "xor"):
+                eff[op.name] = min(in_eff, 4.0 * out_b)
+                if oc == "convert":
+                    eff[op.name] = min(max(in_eff, 0.0), out_b) or out_b
+                continue
+
+            # ---- materializing real ops ----
+            if oc in _REAL_OPS:
+                cost.bytes += mult * (out_b + in_eff)
+                eff[op.name] = out_b
+                if oc == "reduce":
+                    in_elems = sum(_shape_elems_bytes(types.get(n, ""))[0]
+                                   for n in ops_in)
+                    cost.elem_flops += mult * in_elems
+                    cost.flops += mult * in_elems
+                elif oc not in ("copy", "transpose", "concatenate"):
+                    cost.elem_flops += mult * out_elems
+                    cost.flops += mult * out_elems
+                continue
+
+            # ---- default: contracted elementwise ----
+            eff[op.name] = min(in_eff, 4.0 * out_b)
+            cost.elem_flops += mult * out_elems
+            cost.flops += mult * out_elems
+
+    visit(entry, 1.0, False)
+    return cost

@@ -1,0 +1,158 @@
+"""Roofline analysis from compiled dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Three terms per (arch × shape × mesh), all in seconds:
+
+  compute    = HLO_FLOPs            / (chips × peak_FLOP/s)
+  memory     = HLO_bytes            / (chips × HBM_bw)
+  collective = collective_bytes     / (chips × link_bw)
+
+``cost_analysis`` yields per-chip FLOPs/bytes of the SPMD module (multiplied
+back to global).  collective_bytes comes from parsing the compiled HLO:
+per-chip *wire* bytes per op under a ring model —
+
+  all-gather: output bytes | reduce-scatter: input bytes
+  all-reduce: 2 × bytes (RS+AG) | all-to-all / collective-permute: bytes
+
+summed over ops, × chips (ring sends (N-1)/N ≈ 1× the payload per chip).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+# TPU v5e hardware constants (assignment §ROOFLINE).
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+LINK_BW = 50e9             # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 0.125, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2,
+    "u16": 2, "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1,
+    "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> float:
+    """Bytes of an HLO type string, incl. tuples '(bf16[2,3], f32[4])'."""
+    total = 0.0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    wire_bytes_per_chip: float
+    op_bytes: Dict[str, float]      # per collective kind (wire bytes)
+    op_counts: Dict[str, int]
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Parse per-chip wire bytes of every collective in an SPMD module."""
+    op_bytes: Dict[str, float] = {}
+    op_counts: Dict[str, int] = {}
+    total = 0.0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"^(?:%[\w.\-]+|ROOT %[\w.\-]+)\s*=\s*(.*)$", s)
+        if not m:
+            continue
+        rest = m.group(1)
+        op_m = re.search(
+            r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|"
+            r"collective-permute)(-start)?\(", rest)
+        if not op_m:
+            continue
+        kind = op_m.group(1)
+        # result type precedes the op name; operands follow in parens.
+        result_type = rest[:op_m.start()].strip()
+        operands = rest[op_m.end():]
+        out_b = _shape_bytes(result_type)
+        in_b = _shape_bytes(operands.split(")", 1)[0])
+        if kind == "all-gather":
+            wire = out_b
+        elif kind == "reduce-scatter":
+            wire = in_b
+        elif kind == "all-reduce":
+            wire = 2.0 * max(out_b, in_b)
+        else:   # all-to-all / collective-permute
+            wire = max(out_b, in_b)
+        total += wire
+        op_bytes[kind] = op_bytes.get(kind, 0.0) + wire
+        op_counts[kind] = op_counts.get(kind, 0) + 1
+    return CollectiveStats(total, op_bytes, op_counts)
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float               # global (per-chip × chips)
+    hlo_bytes: float               # global
+    coll_bytes: float              # global wire bytes
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float             # 6·N_active·D (train) / 2·N_active·D (inf)
+    useful_ratio: float            # model_flops / hlo_flops
+    bytes_per_device: Optional[float] = None
+    coll_detail: Optional[Dict[str, float]] = None
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Lower bound assuming perfect overlap: max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful compute / achievable compute at the bound: how close the
+        step is to the compute roofline if it ran at the dominant term."""
+        if self.step_time_s <= 0:
+            return 0.0
+        chips_peak = self.chips * PEAK_FLOPS
+        return self.model_flops / (self.step_time_s * chips_peak)
+
+
+def analyze(arch: str, shape: str, mesh_name: str, chips: int,
+            cost: dict, hlo_text: str, model_flops: float,
+            bytes_per_device: Optional[float] = None) -> Roofline:
+    """Derives the three terms from the compiled SPMD module's HLO text via
+    launch/hlo_cost.py (XLA's cost_analysis() visits while bodies once, so
+    scan-over-layers models would under-count by ~n_layers; `cost` is kept
+    as the raw-XLA cross-check in the record)."""
+    from repro.launch import hlo_cost
+    hc = hlo_cost.analyze_hlo(hlo_text)
+    hlo_flops = hc.flops * chips
+    hlo_bytes = hc.bytes * chips
+    coll_total = hc.coll_bytes * chips
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_flops=hlo_flops, hlo_bytes=hlo_bytes, coll_bytes=coll_total,
+        compute_s=hlo_flops / (chips * PEAK_FLOPS),
+        memory_s=hlo_bytes / (chips * HBM_BW),
+        collective_s=coll_total / (chips * LINK_BW),
+        model_flops=model_flops,
+        useful_ratio=(model_flops / hlo_flops) if hlo_flops else 0.0,
+        bytes_per_device=bytes_per_device,
+        coll_detail=hc.coll_detail,
+    )

@@ -1,0 +1,275 @@
+"""Attention variants: GQA/MQA, MLA (DeepSeek-V3), bidirectional encoder.
+
+Memory strategy (TPU-adapted): anything past ~2k sequence runs through
+``chunked_attention`` — a pure-JAX online-softmax scan over KV chunks whose
+HLO is the XLA counterpart of kernels/flash_attention.py (on TPU the Pallas
+kernel takes over via kernels/ops dispatch).  The (S, S) score matrix is
+never materialized.
+
+MLA keeps the *compressed* KV cache (c_kv ⊕ k_rope = 576 floats/token):
+  - prefill/train: K/V are expanded lazily per KV-chunk inside the scan, so
+    expansion memory is O(chunk), not O(S).
+  - decode: the absorbed form — q̃ = W_uk^T q attends directly over c_kv and
+    the value path up-projects once after the softmax (never materializes
+    per-head K/V at 32k context).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.models import common
+from repro.models.common import init_qdense, qproj
+
+DEFAULT_CHUNK = 512
+
+
+# ----------------------------------------------------------------- chunked
+def chunked_attention(q: jax.Array,
+                      kv_fn: Callable[[jax.Array], Tuple[jax.Array, jax.Array]],
+                      n_chunks: int, chunk: int,
+                      causal: bool, q_offset: int = 0,
+                      scale: Optional[float] = None) -> jax.Array:
+    """Online-softmax attention over lazily-produced KV chunks.
+
+    q: (B, S, H, D). kv_fn(i) -> (k, v) each (B, chunk, H, D) for chunk i.
+    Returns (B, S, H, D).
+    """
+    b, s, h, d = q.shape
+    if scale is None:
+        scale = d ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    q_pos = q_offset + jnp.arange(s)
+
+    def step(carry, i):
+        m, l, acc = carry
+        k, v = kv_fn(i)
+        kf = k.astype(jnp.float32)
+        logits = jnp.einsum("bshd,bchd->bhsc", qf, kf)       # (B,H,S,c)
+        if causal:
+            k_pos = i * chunk + jnp.arange(chunk)
+            mask = q_pos[:, None] >= k_pos[None, :]
+            logits = jnp.where(mask[None, None], logits, -1e30)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1, keepdims=True))
+        p = jnp.exp(logits - m_new)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        pv = jnp.einsum("bhsc,bchd->bhsd", p, v.astype(jnp.float32))
+        acc_new = acc * alpha[..., 0][..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, s, 1), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, h, s, 1), jnp.float32)
+    a0 = jnp.zeros((b, h, s, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), jnp.arange(n_chunks))
+    out = acc / jnp.maximum(l[..., 0][..., None], 1e-30)
+    return jnp.transpose(out, (0, 2, 1, 3)).astype(q.dtype)   # (B,S,H,D)
+
+
+def _repeat_kv(x: jax.Array, group: int) -> jax.Array:
+    """(B, S, Hkv, D) -> (B, S, Hkv*group, D)."""
+    if group == 1:
+        return x
+    b, s, hkv, d = x.shape
+    x = jnp.broadcast_to(x[:, :, :, None, :], (b, s, hkv, group, d))
+    return x.reshape(b, s, hkv * group, d)
+
+
+# --------------------------------------------------------------------- GQA
+def init_gqa(key, cfg) -> dict:
+    d, h, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": init_qdense(ks[0], d, h * dh, cfg.param_dtype),
+        "wk": init_qdense(ks[1], d, hkv * dh, cfg.param_dtype),
+        "wv": init_qdense(ks[2], d, hkv * dh, cfg.param_dtype),
+        "wo": init_qdense(ks[3], h * dh, d, cfg.param_dtype),
+    }
+
+
+def gqa_apply(p, x, bits, cfg, mode: str, cache, positions,
+              mrope_positions=None):
+    """x: (B, S, d). bits: {'attn_qkv', 'attn_wo'}. Returns (y, cache)."""
+    b, s, d = x.shape
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    group = h // hkv
+    causal = cfg.causal
+
+    q = qproj(x, p["wq"], bits["attn_qkv"]).reshape(b, s, h, dh)
+    k = qproj(x, p["wk"], bits["attn_qkv"]).reshape(b, s, hkv, dh)
+    v = qproj(x, p["wv"], bits["attn_qkv"]).reshape(b, s, hkv, dh)
+
+    if cfg.rope == "rope":
+        cos, sin = common.rope_angles(positions, dh, cfg.rope_base)
+        q, k = common.apply_rope(q, cos, sin), common.apply_rope(k, cos, sin)
+    elif cfg.rope == "mrope":
+        cos, sin = common.mrope_angles(mrope_positions, dh,
+                                       cfg.mrope_sections, cfg.rope_base)
+        q, k = common.apply_rope(q, cos, sin), common.apply_rope(k, cos, sin)
+
+    if mode == "decode":
+        # cache: {'k','v'} (B, S_max, Hkv, dh); positions: (B, 1) abs pos.
+        pos = positions[0, 0]
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, pos, 0, 0))
+        kk = _repeat_kv(ck, group)
+        vv = _repeat_kv(cv, group)
+        logits = jnp.einsum("bqhd,bshd->bhqs", q.astype(jnp.float32),
+                            kk.astype(jnp.float32)) * (dh ** -0.5)
+        s_pos = jnp.arange(cache["k"].shape[1])
+        mask = s_pos[None, None, None, :] <= positions[:, None, None, :]
+        logits = jnp.where(mask, logits, -1e30)
+        pr = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bhqs,bshd->bqhd", pr, vv.astype(jnp.float32))
+        out = out.astype(x.dtype).reshape(b, s, h * dh)
+        y = qproj(out, p["wo"], bits["attn_wo"])
+        return y, {"k": ck, "v": cv}
+
+    # train / prefill: chunked flash-style attention.
+    chunk = min(DEFAULT_CHUNK, s)
+    n_chunks = s // chunk if s % chunk == 0 else -(-s // chunk)
+    pad = n_chunks * chunk - s
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    if pad and not causal:
+        # mask padded keys for bidirectional attention via -inf value trick:
+        # handled by masking in kv_fn below using a large negative logit is
+        # not possible here, so pad keys attend-nowhere by zero v and
+        # duplicate k — acceptable only if pad==0; enforce instead:
+        raise ValueError("bidirectional attention requires S % chunk == 0")
+
+    def kv_fn(i):
+        kc = jax.lax.dynamic_slice_in_dim(kp, i * chunk, chunk, axis=1)
+        vc = jax.lax.dynamic_slice_in_dim(vp, i * chunk, chunk, axis=1)
+        return _repeat_kv(kc, group), _repeat_kv(vc, group)
+
+    out = chunked_attention(q, kv_fn, n_chunks, chunk, causal)
+    out = out.reshape(b, s, h * dh)
+    y = qproj(out, p["wo"], bits["attn_wo"])
+    new_cache = None
+    if mode == "prefill":
+        new_cache = {"k": k.astype(cfg.cache_dtype), "v": v.astype(cfg.cache_dtype)}
+    return y, new_cache
+
+
+# --------------------------------------------------------------------- MLA
+def init_mla(key, cfg) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    ql, kvl = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": init_qdense(ks[0], d, ql, cfg.param_dtype),
+        "q_norm": common.init_norm("rms", ql, cfg.param_dtype),
+        "wq_b": init_qdense(ks[1], ql, h * (dn + dr), cfg.param_dtype),
+        "wkv_a": init_qdense(ks[2], d, kvl + dr, cfg.param_dtype),
+        "kv_norm": common.init_norm("rms", kvl, cfg.param_dtype),
+        "wk_b": init_qdense(ks[3], kvl, h * dn, cfg.param_dtype),
+        "wv_b": init_qdense(ks[4], kvl, h * dv, cfg.param_dtype),
+        "wo": init_qdense(ks[5], h * dv, d, cfg.param_dtype),
+    }
+
+
+def mla_apply(p, x, bits, cfg, mode: str, cache, positions,
+              mrope_positions=None):
+    """DeepSeek-V3 Multi-head Latent Attention with compressed KV cache."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    kvl = cfg.kv_lora_rank
+    scale = (dn + dr) ** -0.5
+
+    # Queries.
+    q_c = common.rms_norm(qproj(x, p["wq_a"], bits["attn_q_a"]),
+                          p["q_norm"]["scale"])
+    q_full = qproj(q_c, p["wq_b"], bits["attn_q_b"]).reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q_full[..., :dn], q_full[..., dn:]
+    cos, sin = common.rope_angles(positions, dr, cfg.rope_base)
+    q_rope = common.apply_rope(q_rope, cos, sin)
+
+    # Compressed KV.
+    kv_full = qproj(x, p["wkv_a"], bits["attn_q_a"])          # linked with wq_a
+    c_kv = common.rms_norm(kv_full[..., :kvl], p["kv_norm"]["scale"])
+    k_rope = kv_full[..., kvl:].reshape(b, s, 1, dr)
+    k_rope = common.apply_rope(k_rope, cos, sin)              # (B,S,1,dr)
+
+    wk_b_q = common.weight_of(p["wk_b"], bits["attn_kv_b"]).reshape(
+        kvl, h, dn)
+    wv_b_q = common.weight_of(p["wv_b"], bits["attn_kv_b"]).reshape(
+        kvl, h, dv)
+
+    if mode == "decode":
+        pos = positions[0, 0]
+        ckv = jax.lax.dynamic_update_slice(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, pos, 0))
+        ckr = jax.lax.dynamic_update_slice(
+            cache["k_rope"], k_rope[:, :, 0].astype(cache["k_rope"].dtype),
+            (0, pos, 0))
+        # Absorbed decode: q̃ = W_uk^T q_nope, attend over c_kv directly.
+        q_t = jnp.einsum("bqhd,chd->bqhc", q_nope,
+                         wk_b_q.astype(q_nope.dtype))         # (B,1,H,kvl)
+        logits = (jnp.einsum("bqhc,bsc->bhqs", q_t.astype(jnp.float32),
+                             ckv.astype(jnp.float32)) +
+                  jnp.einsum("bqhr,bsr->bhqs", q_rope.astype(jnp.float32),
+                             ckr.astype(jnp.float32))) * scale
+        s_pos = jnp.arange(ckv.shape[1])
+        mask = s_pos[None, None, None, :] <= positions[:, None, None, :]
+        logits = jnp.where(mask, logits, -1e30)
+        pr = jax.nn.softmax(logits, axis=-1)
+        o_c = jnp.einsum("bhqs,bsc->bqhc", pr, ckv.astype(jnp.float32))
+        out = jnp.einsum("bqhc,chd->bqhd", o_c.astype(x.dtype),
+                         wv_b_q.astype(x.dtype))
+        out = out.reshape(b, s, h * dv)
+        y = qproj(out, p["wo"], bits["attn_wo"])
+        return y, {"c_kv": ckv, "k_rope": ckr}
+
+    # train / prefill: lazy per-chunk K/V expansion.
+    chunk = min(DEFAULT_CHUNK, s)
+    assert s % chunk == 0, (s, chunk)
+    n_chunks = s // chunk
+    wk_q = wk_b_q.astype(x.dtype)
+    wv_q = wv_b_q.astype(x.dtype)
+    q_cat = jnp.concatenate([q_nope, q_rope], axis=-1)        # (B,S,H,dn+dr)
+
+    def kv_fn(i):
+        cc = jax.lax.dynamic_slice_in_dim(c_kv, i * chunk, chunk, axis=1)
+        cr = jax.lax.dynamic_slice_in_dim(k_rope, i * chunk, chunk, axis=1)
+        k_nope = jnp.einsum("bsc,chd->bshd", cc, wk_q)
+        k_cat = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(cr, (b, chunk, h, dr))], axis=-1)
+        v = jnp.einsum("bsc,chd->bshd", cc, wv_q)
+        # pad v's head_dim up to k's so one scan handles both; slice after.
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, dn + dr - dv)))
+        return k_cat, v
+
+    out = chunked_attention(q_cat, kv_fn, n_chunks, chunk, causal=True,
+                            scale=scale)
+    out = out[..., :dv].reshape(b, s, h * dv)
+    y = qproj(out, p["wo"], bits["attn_wo"])
+    new_cache = None
+    if mode == "prefill":
+        new_cache = {"c_kv": c_kv.astype(cfg.cache_dtype),
+                     "k_rope": k_rope[:, :, 0].astype(cfg.cache_dtype)}
+    return y, new_cache
+
+
+# ------------------------------------------------------------------- cache
+def init_gqa_cache(cfg, batch: int, max_seq: int) -> dict:
+    return {
+        "k": jnp.zeros((batch, max_seq, cfg.n_kv_heads, cfg.head_dim),
+                       cfg.cache_dtype),
+        "v": jnp.zeros((batch, max_seq, cfg.n_kv_heads, cfg.head_dim),
+                       cfg.cache_dtype),
+    }
+
+
+def init_mla_cache(cfg, batch: int, max_seq: int) -> dict:
+    return {
+        "c_kv": jnp.zeros((batch, max_seq, cfg.kv_lora_rank), cfg.cache_dtype),
+        "k_rope": jnp.zeros((batch, max_seq, cfg.qk_rope_dim), cfg.cache_dtype),
+    }

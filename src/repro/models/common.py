@@ -1,0 +1,158 @@
+"""Shared model building blocks: norms, RoPE/M-RoPE, quantized dense.
+
+Every matmul-bearing projection goes through ``qdense`` — the paper's
+quant-unit: weights *and* input activations fake-quantized with LSQ at the
+unit's policy bits.  Bits ride in as traced arrays so one compiled step
+serves every knapsack outcome.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+
+
+# --------------------------------------------------------------------- norms
+def rms_norm(x: jax.Array, scale: Optional[jax.Array], eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    if scale is not None:
+        x = x * scale.astype(jnp.float32)
+    return x.astype(dtype)
+
+
+def layer_norm(x: jax.Array, scale: Optional[jax.Array],
+               bias: Optional[jax.Array], eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        x = x * scale.astype(jnp.float32)
+    if bias is not None:
+        x = x + bias.astype(jnp.float32)
+    return x.astype(dtype)
+
+
+def apply_norm(kind: str, x: jax.Array, params) -> jax.Array:
+    """kind: 'rms' | 'ln' | 'nonparam_ln' (OLMo's parameter-free LN)."""
+    if kind == "rms":
+        return rms_norm(x, params["scale"])
+    if kind == "ln":
+        return layer_norm(x, params["scale"], params["bias"])
+    if kind == "nonparam_ln":
+        return layer_norm(x, None, None)
+    raise ValueError(kind)
+
+
+def init_norm(kind: str, d: int, dtype) -> dict:
+    if kind == "rms":
+        return {"scale": jnp.ones((d,), dtype)}
+    if kind == "ln":
+        return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+    if kind == "nonparam_ln":
+        return {}
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------- RoPE
+def rope_angles(positions: jax.Array, dim: int, base: float = 10_000.0):
+    """positions: (..., S) int -> cos/sin (..., S, dim//2) f32."""
+    half = dim // 2
+    freqs = base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, S, H, D) with cos/sin (B, S, D//2) (or broadcastable)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    cos = cos[..., None, :]  # (B, S, 1, D//2)
+    sin = sin[..., None, :]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def mrope_angles(positions: jax.Array, dim: int, sections=(16, 24, 24),
+                 base: float = 10_000.0):
+    """Qwen2-VL M-RoPE: positions (3, B, S) for (temporal, h, w) axes; the
+    head-dim halves are split into `sections` (sum = dim//2), each section
+    rotated by its own position stream."""
+    half = dim // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang_all = positions.astype(jnp.float32)[..., None] * freqs  # (3,B,S,half)
+    chunks = []
+    start = 0
+    for axis, sec in enumerate(sections):
+        chunks.append(ang_all[axis, ..., start:start + sec])
+        start += sec
+    ang = jnp.concatenate(chunks, axis=-1)                      # (B,S,half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+# ----------------------------------------------------------- quantized dense
+def qdense(x: jax.Array, w: jax.Array, sw: jax.Array, sa: jax.Array,
+           bits: jax.Array) -> jax.Array:
+    """Fake-quantized x @ w (paper §3.4.1: acts+weights share the bits).
+
+    x: (..., d_in); w: (d_in, d_out) (or (E, d_in, d_out) with per-expert
+    sw/sa/bits of shape (E,) — broadcast handled by the caller's einsum).
+    """
+    xq = quant.lsq_fake_quant(x, sa.astype(jnp.float32), bits)
+    wq = quant.lsq_fake_quant(w, sw.astype(jnp.float32), bits)
+    return xq @ wq
+
+
+def weight_of(p: dict, bits) -> jax.Array:
+    """The (de)quantized weight of a param dict.
+
+    Training/eval dicts hold {'w','sw'} -> LSQ fake-quant at `bits`.
+    Serving dicts hold {'wq' int4-codes, 'scale'} (serve/engine.py) -> the
+    codes stream from HBM at 4 bits and dequantize at use.
+    """
+    if "wpre" in p:
+        return p["wpre"]          # pre-quantized once per step (§Perf A3)
+    if "wq" in p:
+        # dequant arithmetic in f32; the caller casts to the compute dtype
+        # (bf16 on TPU) — avoids double-rounding the scales.
+        return p["wq"].astype(jnp.float32) * p["scale"].astype(jnp.float32)
+    return quant.lsq_fake_quant(p["w"], p["sw"].astype(jnp.float32), bits)
+
+
+def qproj(x, p: dict, bits) -> jax.Array:
+    """Quantized projection over a param dict (train or serve layout)."""
+    xq = quant.lsq_fake_quant(x, p["sa"].astype(jnp.float32), bits)
+    w = weight_of(p, bits)
+    return xq @ w.astype(xq.dtype)
+
+
+def init_qdense(key, d_in: int, d_out: int, dtype, init_bits: float = 4.0,
+                scale: float | None = None) -> dict:
+    """Weight + LSQ step sizes (weight & activation)."""
+    if scale is None:
+        scale = d_in ** -0.5
+    w = jax.random.normal(key, (d_in, d_out), dtype) * scale
+    return {
+        "w": w,
+        "sw": quant.init_step_from_tensor(w, init_bits),
+        # Activation step init: assume unit-variance activations.
+        "sa": jnp.float32(2.0 / jnp.sqrt(2.0 ** (init_bits - 1) - 1)),
+    }
+
+
+# -------------------------------------------------------------------- config
+@dataclasses.dataclass(frozen=True)
+class BlockDef:
+    """One layer of the repeating pattern."""
+    mixer: str      # 'gqa' | 'mla' | 'bidir' | 'mamba' | 'mlstm' | 'slstm'
+    ffn: str        # 'swiglu' | 'gelu' | 'moe' | 'slstm_ffn' | 'none'
+    d_ff: Optional[int] = None   # per-block override (e.g. DeepSeek-V3's
+                                 # dense prefix layers vs its MoE expert ff)

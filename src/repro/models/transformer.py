@@ -1,0 +1,523 @@
+"""Unified model stack: prefix blocks (unrolled) + scanned repeat pattern.
+
+Depth never appears in the HLO: the repeating pattern is stacked (vmap-init)
+and scanned (lax.scan), so lower+compile cost is O(1) in n_layers — this is
+what makes the 61-layer/671B dry-run tractable and is also the right answer
+for 1000-node compile times.
+
+Quantization policy bits ride through the scan as stacked (n_repeats,)
+arrays next to the stacked params; caches likewise.  Modes:
+
+  train   — full sequence, loss-ready logits, per-block remat
+  prefill — full sequence + returns per-layer caches/states
+  decode  — one token, cache update, logits for the new position
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.core.policy import (PIN_MIN_IN_FEATURES, PIN_EDGE_BITS,
+                               PIN_NARROW_BITS, PrecisionPolicy, QuantUnit)
+from repro.models import attention as attn
+from repro.models import common, mlp, ssm
+from repro.models.common import BlockDef
+
+
+# ==================================================================== blocks
+def init_block(key, cfg, bdef: BlockDef) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {"norm1": common.init_norm(cfg.norm, cfg.d_model, cfg.param_dtype)}
+    if bdef.mixer in ("gqa", "bidir"):
+        p["attn"] = attn.init_gqa(k1, cfg)
+    elif bdef.mixer == "mla":
+        p["attn"] = attn.init_mla(k1, cfg)
+    elif bdef.mixer == "mamba":
+        p["mamba"] = ssm.init_mamba(k1, cfg)
+    elif bdef.mixer == "mlstm":
+        p["lstm"] = ssm.init_mlstm(k1, cfg)
+    elif bdef.mixer == "slstm":
+        p["lstm"] = ssm.init_slstm(k1, cfg)
+    else:
+        raise ValueError(bdef.mixer)
+
+    if bdef.ffn != "none":
+        p["norm2"] = common.init_norm(cfg.norm, cfg.d_model, cfg.param_dtype)
+    if bdef.ffn == "swiglu":
+        p["mlp"] = mlp.init_dense_mlp(k2, cfg, d_ff=bdef.d_ff, gated=True)
+    elif bdef.ffn == "gelu":
+        p["mlp"] = mlp.init_dense_mlp(k2, cfg, d_ff=bdef.d_ff, gated=False)
+    elif bdef.ffn == "moe":
+        p["moe"] = mlp.init_moe(k2, cfg)
+    elif bdef.ffn == "slstm_ffn":
+        p["mlp"] = mlp.init_dense_mlp(k2, cfg, d_ff=cfg.slstm_d_ff, gated=True)
+    elif bdef.ffn != "none":
+        raise ValueError(bdef.ffn)
+    return p
+
+
+def block_apply(p, x, bits, cfg, ctx, bdef: BlockDef, mode: str, cache,
+                positions, mrope_positions=None):
+    """Returns (x, new_cache, aux)."""
+    aux = jnp.float32(0.0)
+    h = common.apply_norm(cfg.norm, x, p["norm1"])
+    if bdef.mixer in ("gqa", "bidir"):
+        y, new_cache = attn.gqa_apply(p["attn"], h, bits, cfg, mode, cache,
+                                      positions, mrope_positions)
+    elif bdef.mixer == "mla":
+        y, new_cache = attn.mla_apply(p["attn"], h, bits, cfg, mode, cache,
+                                      positions, mrope_positions)
+    elif bdef.mixer == "mamba":
+        y, new_cache = ssm.mamba_apply(p["mamba"], h, bits, cfg, mode, cache)
+    elif bdef.mixer == "mlstm":
+        y, new_cache = ssm.mlstm_apply(p["lstm"], h, bits, cfg, mode, cache)
+    elif bdef.mixer == "slstm":
+        y, new_cache = ssm.slstm_apply(p["lstm"], h, bits, cfg, mode, cache,
+                                       ctx)
+    else:
+        raise ValueError(bdef.mixer)
+    x = x + y
+    x = ctx.constrain(x, ctx.batch_spec, None, None)
+
+    if bdef.ffn in ("swiglu", "gelu", "slstm_ffn"):
+        h = common.apply_norm(cfg.norm, x, p["norm2"])
+        act = "gelu" if bdef.ffn == "gelu" else cfg.activation
+        x = x + mlp.dense_mlp_apply(p["mlp"], h, bits, act)
+    elif bdef.ffn == "moe":
+        h = common.apply_norm(cfg.norm, x, p["norm2"])
+        y, aux = mlp.moe_apply(p["moe"], h, bits, cfg, ctx)
+        x = x + y
+    x = ctx.constrain(x, ctx.batch_spec, None, None)
+    return x, new_cache, aux
+
+
+def init_block_cache(cfg, bdef: BlockDef, batch: int, max_seq: int):
+    if bdef.mixer in ("gqa",):
+        return attn.init_gqa_cache(cfg, batch, max_seq)
+    if bdef.mixer == "mla":
+        return attn.init_mla_cache(cfg, batch, max_seq)
+    if bdef.mixer == "mamba":
+        return ssm.init_mamba_state(cfg, batch)
+    if bdef.mixer == "mlstm":
+        return ssm.init_mlstm_state(cfg, batch)
+    if bdef.mixer == "slstm":
+        return ssm.init_slstm_state(cfg, batch)
+    return None  # bidir encoder: no cache
+
+
+# ===================================================================== model
+def init_params(cfg, key) -> dict:
+    keys = jax.random.split(key, 4 + len(cfg.prefix))
+    params: dict = {}
+    if not cfg.embed_input:
+        table = jax.random.normal(keys[0], (cfg.vocab, cfg.d_model),
+                                  cfg.param_dtype) * 0.02
+        params["embed"] = {"w": table,
+                           "sw": quant.init_step_from_tensor(table, 8.0)}
+    for i, bdef in enumerate(cfg.prefix):
+        params[f"prefix{i}"] = init_block(keys[1 + i], cfg, bdef)
+
+    if cfg.n_repeats:
+        def one_repeat(k):
+            ks = jax.random.split(k, len(cfg.pattern))
+            return {f"p{j}": init_block(ks[j], cfg, bd)
+                    for j, bd in enumerate(cfg.pattern)}
+        rep_keys = jax.random.split(keys[-3], cfg.n_repeats)
+        params["pat"] = jax.vmap(one_repeat)(rep_keys)
+
+    params["final_norm"] = common.init_norm(cfg.norm, cfg.d_model,
+                                            cfg.param_dtype)
+    if not cfg.tie_embeddings:
+        head = jax.random.normal(keys[-2], (cfg.d_model, cfg.vocab),
+                                 cfg.param_dtype) * (cfg.d_model ** -0.5)
+        params["head"] = {"w": head,
+                          "sw": quant.init_step_from_tensor(head, 8.0),
+                          "sa": jnp.float32(0.05)}
+    if cfg.mtp:
+        params["mtp"] = {
+            "norm": common.init_norm(cfg.norm, cfg.d_model, cfg.param_dtype),
+            "proj": common.init_qdense(keys[-1], 2 * cfg.d_model, cfg.d_model,
+                                       cfg.param_dtype),
+        }
+    return params
+
+
+def init_caches(cfg, batch: int, max_seq: int) -> dict:
+    caches: dict = {}
+    for i, bdef in enumerate(cfg.prefix):
+        caches[f"prefix{i}"] = init_block_cache(cfg, bdef, batch, max_seq)
+    if cfg.n_repeats:
+        def stack(c):
+            return jax.tree.map(
+                lambda l: jnp.broadcast_to(l, (cfg.n_repeats,) + l.shape), c)
+        caches["pat"] = {
+            f"p{j}": stack(init_block_cache(cfg, bd, batch, max_seq))
+            for j, bd in enumerate(cfg.pattern)}
+    return caches
+
+
+def _embed(params, cfg, batch: Dict) -> jax.Array:
+    if "embeds" in batch:
+        x = batch["embeds"]
+    elif "wq" in params["embed"]:     # serve layout: int8 codes, gather-first
+        rows = jnp.take(params["embed"]["wq"], batch["tokens"], axis=0)
+        x = rows.astype(cfg.compute_dtype) \
+            * params["embed"]["scale"].astype(cfg.compute_dtype)
+    else:
+        table = quant.lsq_fake_quant(params["embed"]["w"],
+                                     params["embed"]["sw"],
+                                     jnp.float32(PIN_EDGE_BITS))
+        x = jnp.take(table, batch["tokens"], axis=0)
+    return x.astype(cfg.compute_dtype)
+
+
+def _head(params, cfg, x: jax.Array) -> jax.Array:
+    """LM head; weights and input activations pinned 8-bit (softmax rule)."""
+    if cfg.tie_embeddings:
+        p = params["embed"]
+        if "wq" in p:
+            w = (p["wq"].astype(x.dtype) * p["scale"].astype(x.dtype)).T
+        else:
+            w = quant.lsq_fake_quant(p["w"], p["sw"],
+                                     jnp.float32(PIN_EDGE_BITS)).T
+        sa = jnp.float32(0.05)
+    else:
+        p = params["head"]
+        if "wq" in p:
+            w = p["wq"].astype(x.dtype) * p["scale"].astype(x.dtype)
+        else:
+            w = quant.lsq_fake_quant(p["w"], p["sw"],
+                                     jnp.float32(PIN_EDGE_BITS))
+        sa = p.get("sa", jnp.float32(0.05))
+    xq = quant.lsq_fake_quant(x, sa, jnp.float32(PIN_EDGE_BITS))
+    return xq @ w.astype(x.dtype)
+
+
+def _pattern_bits(policy_arrays, cfg) -> list:
+    """Per-pattern-position bits dicts with stacked (n_repeats, ...) leaves."""
+    return [policy_arrays[f"pat{j}"] for j in range(len(cfg.pattern))]
+
+
+def _slot_index(cfg) -> Dict[tuple, tuple]:
+    """tensor-path prefix -> (group, slot) from the policy registry."""
+    index = {}
+    for u in build_policy(cfg).units:
+        for t in u.tensors:
+            index[t[:-1] if t[-1] == "w" else t] = (u.group, u.slot)
+    return index
+
+
+def prequantize_params(params, policy_arrays, cfg):
+    """Fake-quantize every registered weight ONCE per step, stacked, before
+    the layer scan (EXPERIMENTS.md §Perf A3).
+
+    Per-layer quantization inside the scan body gets loop-invariant-hoisted
+    by XLA as a full-stack f32 intermediate that then rides the scan and the
+    FSDP gathers at 2× the bytes; doing it explicitly here (a) keeps the
+    scan xs in bf16, (b) computes each weight's quantization once per step
+    instead of once per microbatch, and (c) leaves gradients identical (the
+    stacked fake-quant carries the same LSQ custom-VJP).
+    """
+    slot_of = _slot_index(cfg)
+
+    def walk(node, path):
+        if isinstance(node, dict) and "w" in node and "sw" in node \
+                and "sa" in node:
+            key = slot_of.get(path)
+            bits = (policy_arrays[key[0]][key[1]] if key is not None
+                    else jnp.float32(4.0))
+            w = node["w"]
+            step = jnp.asarray(node["sw"], jnp.float32)
+            b = jnp.asarray(bits, jnp.float32)
+            extra_s = w.ndim - step.ndim
+            extra_b = w.ndim - b.ndim
+            qw = quant.lsq_fake_quant(
+                w, step.reshape(step.shape + (1,) * extra_s),
+                b.reshape(b.shape + (1,) * extra_b))
+            return {"wpre": qw, "sa": node["sa"]}
+        if isinstance(node, dict):
+            return {k: walk(v, path + (k,)) for k, v in node.items()}
+        return node
+
+    return walk(params, ())
+
+
+def apply(params, policy_arrays, batch: Dict, cfg, ctx, mode: str = "train",
+          caches: Optional[dict] = None, positions=None):
+    """Returns (logits, new_caches, aux_loss).
+
+    batch: {'tokens': (B,S) int32} and/or {'embeds': (B,S,d)}, plus
+    'mrope_positions': (3,B,S) when cfg.rope == 'mrope'.
+    positions: (B,S) absolute positions (decode: (B,1)); defaults to arange.
+    """
+    x = _embed(params, cfg, batch)
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    mrope_positions = batch.get("mrope_positions")
+    x = ctx.constrain(x, ctx.batch_spec, None, None)
+
+    # train/prefill: quantize all weights once, outside the scan (§Perf A3).
+    # decode reuses caller-provided (already-quantized serve) weights; a raw
+    # checkpoint decodes via the per-layer path.
+    if mode in ("train", "prefill"):
+        block_params = {k: v for k, v in params.items()
+                        if k == "pat" or k.startswith("prefix")}
+        block_params = prequantize_params(block_params, policy_arrays, cfg)
+        params = dict(params, **block_params)
+
+    aux_total = jnp.float32(0.0)
+    new_caches: dict = {}
+
+    # ---- prefix blocks (unrolled) ----
+    for i, bdef in enumerate(cfg.prefix):
+        bits = {k: v[0] for k, v in policy_arrays[f"prefix{i}"].items()}
+        cache = (caches or {}).get(f"prefix{i}")
+        x, nc, aux = block_apply(params[f"prefix{i}"], x, bits, cfg, ctx,
+                                 bdef, mode, cache, positions,
+                                 mrope_positions)
+        new_caches[f"prefix{i}"] = nc
+        aux_total = aux_total + aux
+
+    # ---- scanned repeats ----
+    if cfg.n_repeats:
+        pat_bits = _pattern_bits(policy_arrays, cfg)
+        pat_caches = (caches or {}).get("pat")
+
+        def body(carry, xs):
+            xx, aux_c = carry
+            layer_params, layer_bits, layer_cache = xs
+            out_cache = {}
+            for j, bdef in enumerate(cfg.pattern):
+                cache_j = None if layer_cache is None else layer_cache[f"p{j}"]
+                xx, nc, aux = block_apply(
+                    layer_params[f"p{j}"], xx, layer_bits[j], cfg, ctx, bdef,
+                    mode, cache_j, positions, mrope_positions)
+                out_cache[f"p{j}"] = nc if nc is not None else 0
+            return (xx, aux_c + aux), out_cache
+
+        body_fn = jax.checkpoint(body) if mode == "train" else body
+        xs = (params["pat"], pat_bits, pat_caches)
+        (x, aux_total), cache_stack = jax.lax.scan(body_fn, (x, aux_total), xs)
+        new_caches["pat"] = cache_stack
+
+    x = common.apply_norm(cfg.norm, x, params["final_norm"])
+    logits = _head(params, cfg, x)
+    return logits, new_caches, {"aux": aux_total, "hidden": x}
+
+
+# ===================================================================== loss
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None,
+                  z_weight: float = 1e-4):
+    """Mean CE + z-loss; SPMD-safe (no gather over the sharded vocab dim)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)            # (B,S)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+    label_logit = jnp.sum(
+        jnp.where(vocab_iota == labels[..., None], logits, 0.0), axis=-1)
+    nll = lse - label_logit
+    zloss = z_weight * lse ** 2
+    per_tok = nll + zloss
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    mask = mask.astype(jnp.float32)
+    loss = jnp.sum(per_tok * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    acc = jnp.sum((jnp.argmax(logits, -1) == labels) * mask) \
+        / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss, acc
+
+
+def loss_fn(params, policy_arrays, batch: Dict, cfg, ctx):
+    """Next-token LM loss (or masked classification for encoders).
+
+    batch: inputs + 'labels' (B,S) [+ 'loss_mask'].  Returns (loss, metrics).
+    """
+    logits, _, extras = apply(params, policy_arrays, batch, cfg, ctx,
+                              mode="train")
+    labels = batch["labels"]
+    mask = batch.get("loss_mask")
+    loss, acc = cross_entropy(logits, labels, mask)
+    total = loss + extras["aux"]
+    metrics = {"loss": loss, "accuracy": acc, "aux_loss": extras["aux"]}
+
+    if cfg.mtp and "tokens" in batch and labels.shape[1] > 2:
+        # Multi-token prediction: predict t+2 from [h_t ; embed(tok_{t+1})]
+        # through a lightweight projection + the shared LM head
+        # (single-depth MTP head, simplified vs the paper's extra block —
+        # DESIGN.md §8).
+        hidden = extras["hidden"]
+        e = _embed(params, cfg, batch)
+        hh = common.apply_norm(cfg.norm, hidden[:, :-1, :],
+                               params["mtp"]["norm"])
+        zcat = jnp.concatenate([hh, e[:, 1:, :]], axis=-1)
+        hm = common.qproj(zcat, params["mtp"]["proj"], jnp.float32(4.0))
+        mtp_logits = _head(params, cfg, hm)
+        mtp_loss, _ = cross_entropy(mtp_logits, labels[:, 1:],
+                                    None if mask is None else mask[:, 1:])
+        total = total + cfg.mtp_weight * mtp_loss
+        metrics["mtp_loss"] = mtp_loss
+    return total, metrics
+
+
+# ============================================================ policy builder
+def _unit(group, layer, slot, tensors, n_params, macs, in_features, sub=None,
+          pinned=None) -> QuantUnit:
+    name = f"{group}.{slot}" + (f".e{sub}" if sub is not None else "") \
+        + f".L{layer}"
+    if pinned is None and in_features < PIN_MIN_IN_FEATURES:
+        pinned = PIN_NARROW_BITS
+    return QuantUnit(name=name, group=group, layer=layer, slot=slot,
+                     tensors=tuple(tensors), n_params=int(n_params),
+                     macs_per_token=float(macs), in_features=int(in_features),
+                     sub=sub, pinned_bits=pinned)
+
+
+def _block_units(cfg, bdef: BlockDef, group: str, layer: int, base: tuple):
+    """Quant units of one block; `base` = param path prefix of the block."""
+    d, h, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    f = cfg.d_ff
+    units = []
+    if bdef.mixer in ("gqa", "bidir"):
+        nqkv = d * (h * dh + 2 * hkv * dh)
+        units.append(_unit(group, layer, "attn_qkv",
+                           [base + ("attn", w, "w") for w in
+                            ("wq", "wk", "wv")], nqkv, nqkv, d))
+        units.append(_unit(group, layer, "attn_wo",
+                           [base + ("attn", "wo", "w")], h * dh * d,
+                           h * dh * d, h * dh))
+    elif bdef.mixer == "mla":
+        ql, kvl = cfg.q_lora_rank, cfg.kv_lora_rank
+        dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+        n_a = d * ql + d * (kvl + dr)
+        units.append(_unit(group, layer, "attn_q_a",
+                           [base + ("attn", "wq_a", "w"),
+                            base + ("attn", "wkv_a", "w")], n_a, n_a, d))
+        n_qb = ql * h * (dn + dr)
+        units.append(_unit(group, layer, "attn_q_b",
+                           [base + ("attn", "wq_b", "w")], n_qb, n_qb, ql))
+        n_kvb = kvl * h * (dn + dv)
+        units.append(_unit(group, layer, "attn_kv_b",
+                           [base + ("attn", "wk_b", "w"),
+                            base + ("attn", "wv_b", "w")], n_kvb, n_kvb, kvl))
+        units.append(_unit(group, layer, "attn_wo",
+                           [base + ("attn", "wo", "w")], h * dv * d,
+                           h * dv * d, h * dv))
+    elif bdef.mixer == "mamba":
+        di, ds, dtr = cfg.mamba_d_inner, cfg.mamba_d_state, cfg.mamba_dt_rank
+        units.append(_unit(group, layer, "mamba_in",
+                           [base + ("mamba", "in", "w")], d * 2 * di,
+                           d * 2 * di, d))
+        nx = di * (dtr + 2 * ds)
+        units.append(_unit(group, layer, "mamba_x",
+                           [base + ("mamba", "x", "w")], nx, nx, di))
+        units.append(_unit(group, layer, "mamba_dt",
+                           [base + ("mamba", "dt", "w")], dtr * di, dtr * di,
+                           dtr))
+        units.append(_unit(group, layer, "mamba_out",
+                           [base + ("mamba", "out", "w")], di * d, di * d, di))
+    elif bdef.mixer == "mlstm":
+        di, nh = cfg.xlstm_d_inner, cfg.n_heads
+        units.append(_unit(group, layer, "lstm_up",
+                           [base + ("lstm", "up", "w")], d * 2 * di,
+                           d * 2 * di, d))
+        units.append(_unit(group, layer, "lstm_qkv",
+                           [base + ("lstm", w, "w") for w in
+                            ("wq", "wk", "wv")], 3 * di * di, 3 * di * di, di))
+        units.append(_unit(group, layer, "lstm_if",
+                           [base + ("lstm", "wif", "w")], di * 2 * nh,
+                           di * 2 * nh, di))
+        units.append(_unit(group, layer, "lstm_down",
+                           [base + ("lstm", "down", "w")], di * d, di * d, di))
+    elif bdef.mixer == "slstm":
+        nh = cfg.n_heads
+        dh_s = d // nh
+        units.append(_unit(group, layer, "lstm_w",
+                           [base + ("lstm", "w", "w")], d * 4 * d, d * 4 * d,
+                           d))
+        units.append(_unit(group, layer, "lstm_r",
+                           [base + ("lstm", "r")], nh * dh_s * 4 * dh_s,
+                           nh * dh_s * 4 * dh_s, dh_s))
+
+    if bdef.ffn in ("swiglu", "gelu", "slstm_ffn"):
+        ff = cfg.slstm_d_ff if bdef.ffn == "slstm_ffn" else (bdef.d_ff or f)
+        gated = bdef.ffn != "gelu"
+        tensors = ([base + ("mlp", "gate", "w"), base + ("mlp", "up", "w")]
+                   if gated else [base + ("mlp", "up", "w")])
+        n_up = (2 if gated else 1) * d * ff
+        units.append(_unit(group, layer, "mlp_gateup", tensors, n_up, n_up, d))
+        units.append(_unit(group, layer, "mlp_down",
+                           [base + ("mlp", "down", "w")], ff * d, ff * d, ff))
+    elif bdef.ffn == "moe":
+        e, k = cfg.n_experts, cfg.top_k
+        units.append(_unit(group, layer, "moe_router",
+                           [base + ("moe", "router", "w")], d * e, d * e, d,
+                           pinned=PIN_EDGE_BITS))
+        for ei in range(e):
+            n_gu = 2 * d * f
+            units.append(_unit(group, layer, "moe_gateup",
+                               [base + ("moe", "gate", "w"),
+                                base + ("moe", "up", "w")], n_gu,
+                               n_gu * k / e, d, sub=ei))
+            units.append(_unit(group, layer, "moe_down",
+                               [base + ("moe", "down", "w")], f * d,
+                               f * d * k / e, f, sub=ei))
+        if cfg.n_shared_experts:
+            fs = f * cfg.n_shared_experts
+            units.append(_unit(group, layer, "mlp_gateup",
+                               [base + ("moe", "shared", "gate", "w"),
+                                base + ("moe", "shared", "up", "w")],
+                               2 * d * fs, 2 * d * fs, d))
+            units.append(_unit(group, layer, "mlp_down",
+                               [base + ("moe", "shared", "down", "w")],
+                               fs * d, fs * d, fs))
+    return units
+
+
+def build_policy(cfg, b_hi: float = 4.0, b_lo: float = 2.0) -> PrecisionPolicy:
+    """Enumerate every quant-unit of an architecture (+ pinned edges)."""
+    units = []
+    if not cfg.embed_input:
+        units.append(_unit("embed", 0, "embed", [("embed", "w")],
+                           cfg.vocab * cfg.d_model, 0.0, cfg.vocab,
+                           pinned=PIN_EDGE_BITS))
+    for i, bdef in enumerate(cfg.prefix):
+        units.extend(_block_units(cfg, bdef, f"prefix{i}", 0, (f"prefix{i}",)))
+    for r in range(cfg.n_repeats):
+        for j, bdef in enumerate(cfg.pattern):
+            units.extend(_block_units(cfg, bdef, f"pat{j}", r,
+                                      ("pat", f"p{j}")))
+    if not cfg.tie_embeddings:
+        units.append(_unit("head", 0, "head", [("head", "w")],
+                           cfg.d_model * cfg.vocab, cfg.d_model * cfg.vocab,
+                           cfg.d_model, pinned=PIN_EDGE_BITS))
+    return PrecisionPolicy(units, b_hi=b_hi, b_lo=b_lo)
+
+
+def fetch_unit_tensor(params, unit: QuantUnit, path: tuple):
+    """Weight tensor + LSQ step for one member tensor of a unit."""
+    node = params
+    for pth in path:
+        node = node[pth]
+    w = node
+    # step: sibling 'sw' (slstm 'r' stores it as 'r_sw' next to 'r')
+    parent = params
+    for pth in path[:-1]:
+        parent = parent[pth]
+    step = parent.get(path[-1] + "_sw", None)
+    if step is None:
+        step = parent["sw"] if "sw" in parent else None
+    if step is None:
+        raise KeyError(f"no step size for {path}")
+    if unit.group.startswith("pat"):
+        w = w[unit.layer]
+        step = step[unit.layer] if getattr(step, "ndim", 0) >= 1 else step
+    if unit.sub is not None:
+        w = w[unit.sub]
+        step = step[unit.sub] if getattr(step, "ndim", 0) >= 1 else step
+    return w, step

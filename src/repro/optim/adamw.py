@@ -1,0 +1,158 @@
+"""From-scratch AdamW with optionally quantized (bf16 / rowwise-int8) state.
+
+The int8 mode reuses the paper's own quantization idea on the optimizer:
+m and v are stored as int8 codes with one f32 scale per last-dim row
+(sharding-friendly: no reshapes/padding, scales inherit the leaf's
+leading-dim sharding).  This is what lets 671B-class QAT fit 256×16 GB
+(DESIGN.md §6): fp32 m+v = 5.4 TB -> int8 m+v = 1.35 TB.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ----------------------------------------------------- rowwise int8 storage
+# m (signed): linear int8 per last-dim row.  v (non-negative, huge dynamic
+# range): sqrt-space uint8 — code = round(255*sqrt(v/amax)) — which keeps
+# relative error tolerable for small second moments (the same reason 8-bit
+# Adam uses non-linear quantization maps).
+def _q8_encode(x: jax.Array, signed: bool = True):
+    xf = x.astype(jnp.float32)
+    if xf.ndim == 0:
+        amax = jnp.maximum(jnp.abs(xf), 1e-30)
+    else:
+        amax = jnp.maximum(jnp.max(jnp.abs(xf), axis=-1, keepdims=True),
+                           1e-30)
+    if signed:
+        q = jnp.clip(jnp.round(xf / amax * 127.0), -127, 127).astype(jnp.int8)
+    else:
+        q = jnp.clip(jnp.round(jnp.sqrt(jnp.maximum(xf, 0.0) / amax) * 255.0),
+                     0, 255).astype(jnp.uint8)
+    return {"q": q, "s": amax}
+
+
+def _q8_decode(e) -> jax.Array:
+    q = e["q"]
+    if q.dtype == jnp.uint8:
+        c = q.astype(jnp.float32) / 255.0
+        return c * c * e["s"]
+    return q.astype(jnp.float32) / 127.0 * e["s"]
+
+
+def _encode(x: jax.Array, dtype: str, signed: bool = True):
+    if dtype == "int8":
+        return _q8_encode(x, signed)
+    if dtype == "bf16":
+        return x.astype(jnp.bfloat16)
+    return x.astype(jnp.float32)
+
+
+def _decode(e, dtype: str) -> jax.Array:
+    if dtype == "int8":
+        return _q8_decode(e)
+    return e.astype(jnp.float32)
+
+
+# ------------------------------------------------------------------- AdamW
+class AdamWState(NamedTuple):
+    count: jax.Array
+    m: dict
+    v: dict
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    learning_rate: Callable[[jax.Array], jax.Array] | float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    state_dtype: str = "f32"       # 'f32' | 'bf16' | 'int8'
+    grad_clip: float = 0.0         # global-norm clip; 0 = off
+
+    def init(self, params) -> AdamWState:
+        zeros = jax.tree.map(
+            lambda p: _encode(jnp.zeros_like(p, jnp.float32),
+                              self.state_dtype, signed=True), params)
+        zeros2 = jax.tree.map(
+            lambda p: _encode(jnp.zeros_like(p, jnp.float32),
+                              self.state_dtype, signed=False), params)
+        return AdamWState(count=jnp.zeros((), jnp.int32), m=zeros, v=zeros2)
+
+    def _lr(self, count):
+        if callable(self.learning_rate):
+            return self.learning_rate(count)
+        return jnp.float32(self.learning_rate)
+
+    def update(self, grads, state: AdamWState, params):
+        count = state.count + 1
+        lr = self._lr(count)
+        if self.grad_clip > 0:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+        b1, b2 = self.b1, self.b2
+        bc1 = 1 - b1 ** count.astype(jnp.float32)
+        bc2 = 1 - b2 ** count.astype(jnp.float32)
+        is_q8 = self.state_dtype == "int8"
+        # int8 storage already bounds precision — do the moment math in bf16
+        # to keep update temporaries at half the f32 footprint.
+        mdt = jnp.bfloat16 if is_q8 else jnp.float32
+
+        def upd(g, m_e, v_e, p):
+            gf = g.astype(jnp.float32)
+            m = (b1 * _decode(m_e, self.state_dtype).astype(jnp.float32)
+                 + (1 - b1) * gf).astype(mdt)
+            v = (b2 * _decode(v_e, self.state_dtype).astype(jnp.float32)
+                 + (1 - b2) * gf * gf).astype(mdt)
+            mhat = m.astype(jnp.float32) / bc1
+            vhat = v.astype(jnp.float32) / bc2
+            step = mhat / (jnp.sqrt(vhat) + self.eps)
+            if self.weight_decay and p.ndim >= 2:   # decay matrices only
+                step = step + self.weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+            return (new_p, _encode(m, self.state_dtype, signed=True),
+                    _encode(v, self.state_dtype, signed=False))
+
+        def upd_leaf(g, m_e, v_e, p):
+            # stacked (n_layers, ...) leaves update under a scan so only one
+            # layer's f32/bf16 temporaries are ever live (671B-class leaves
+            # would otherwise materialize multi-GiB update intermediates)
+            if p.ndim >= 3 and p.shape[0] > 1:
+                def body(_, xs):
+                    return None, upd(*xs)
+                _, out = jax.lax.scan(body, None, (g, m_e, v_e, p))
+                return out
+            return upd(g, m_e, v_e, p)
+
+        flat_g, tree = jax.tree.flatten(grads)
+        flat_m = _flatten_like(state.m, tree, is_q8)
+        flat_v = _flatten_like(state.v, tree, is_q8)
+        flat_p = jax.tree.flatten(params)[0]
+        out = [upd_leaf(g, m, v, p)
+               for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = jax.tree.unflatten(tree, [o[0] for o in out])
+        new_m = jax.tree.unflatten(tree, [o[1] for o in out])
+        new_v = jax.tree.unflatten(tree, [o[2] for o in out])
+        return new_p, AdamWState(count=count, m=new_m, v=new_v)
+
+
+def _flatten_like(state_tree, grad_treedef, is_q8: bool):
+    """Flatten m/v trees whose int8 leaves are {'q','s'} dicts."""
+    if not is_q8:
+        return jax.tree.flatten(state_tree)[0]
+    leaves = jax.tree.flatten(
+        state_tree, is_leaf=lambda x: isinstance(x, dict) and "q" in x
+        and "s" in x)[0]
+    return leaves
+
+
+def global_norm(tree) -> jax.Array:
+    sq = jax.tree.reduce(
+        lambda a, l: a + jnp.sum(jnp.square(l.astype(jnp.float32))),
+        tree, jnp.float32(0.0))
+    return jnp.sqrt(sq)

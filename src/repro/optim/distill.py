@@ -1,0 +1,39 @@
+"""Knowledge distillation (paper §3.4.3: ResNet & BERT fine-tune with KD).
+
+The teacher is the same network evaluated at effectively-unquantized
+precision (16-bit LSQ ≙ negligible quantization error); the student is the
+mixed-precision policy under fine-tuning.  loss = α·CE + (1-α)·T²·KL.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def teacher_policy_arrays(policy_arrays):
+    """Bits arrays at 16 everywhere (quantization error ~0 at LSQ steps)."""
+    return jax.tree.map(lambda b: jnp.full_like(b, 16.0), policy_arrays)
+
+
+def kd_loss(student_logits: jax.Array, teacher_logits: jax.Array,
+            temperature: float = 2.0) -> jax.Array:
+    t = temperature
+    sp = jax.nn.log_softmax(student_logits.astype(jnp.float32) / t, axis=-1)
+    tp = jax.nn.softmax(teacher_logits.astype(jnp.float32) / t, axis=-1)
+    return -jnp.mean(jnp.sum(tp * sp, axis=-1)) * t * t
+
+
+def make_distill_loss(base_loss_fn, apply_fn, alpha: float = 0.5,
+                      temperature: float = 2.0):
+    """Wrap a (params, policy, batch) -> (loss, metrics) with KD."""
+    def loss(params, policy_arrays, batch, cfg, ctx):
+        task, metrics = base_loss_fn(params, policy_arrays, batch, cfg, ctx)
+        s_logits, _, _ = apply_fn(params, policy_arrays, batch, cfg, ctx,
+                                  mode="train")
+        t_arrays = teacher_policy_arrays(policy_arrays)
+        t_logits, _, _ = apply_fn(jax.lax.stop_gradient(params), t_arrays,
+                                  batch, cfg, ctx, mode="train")
+        kd = kd_loss(s_logits, jax.lax.stop_gradient(t_logits), temperature)
+        metrics = dict(metrics, kd_loss=kd)
+        return alpha * task + (1 - alpha) * kd, metrics
+    return loss

@@ -1,0 +1,68 @@
+"""LAMB optimizer (the paper's BERT fine-tuning recipe, §3.4.3).
+
+Adam moments + per-leaf trust ratio ||w|| / ||update||, enabling the large
+batch (192) high-LR (3.8e-3) schedule the paper uses for mixed-precision
+BERT fine-tuning.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class LambState(NamedTuple):
+    count: jax.Array
+    m: dict
+    v: dict
+
+
+@dataclasses.dataclass(frozen=True)
+class Lamb:
+    learning_rate: Callable[[jax.Array], jax.Array] | float = 3.8e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-6
+    weight_decay: float = 0.01
+
+    def init(self, params) -> LambState:
+        z = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        z2 = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return LambState(count=jnp.zeros((), jnp.int32), m=z, v=z2)
+
+    def _lr(self, count):
+        if callable(self.learning_rate):
+            return self.learning_rate(count)
+        return jnp.float32(self.learning_rate)
+
+    def update(self, grads, state: LambState, params):
+        count = state.count + 1
+        lr = self._lr(count)
+        b1, b2 = self.b1, self.b2
+        bc1 = 1 - b1 ** count.astype(jnp.float32)
+        bc2 = 1 - b2 ** count.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            m_new = b1 * m + (1 - b1) * gf
+            v_new = b2 * v + (1 - b2) * gf * gf
+            u = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + self.eps)
+            if self.weight_decay and p.ndim >= 2:
+                u = u + self.weight_decay * p.astype(jnp.float32)
+            w_norm = jnp.linalg.norm(p.astype(jnp.float32))
+            u_norm = jnp.linalg.norm(u)
+            trust = jnp.where((w_norm > 0) & (u_norm > 0),
+                              w_norm / u_norm, 1.0)
+            new_p = (p.astype(jnp.float32) - lr * trust * u).astype(p.dtype)
+            return new_p, m_new, v_new
+
+        new = jax.tree.map(upd, grads, state.m, state.v, params)
+        new_p = jax.tree.map(lambda t: t[0], new,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t: t[1], new,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda t: t[2], new,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, LambState(count=count, m=new_m, v=new_v)

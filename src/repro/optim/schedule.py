@@ -1,0 +1,22 @@
+"""LR schedules: cosine decay with linear warmup (paper §3.4.3)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_with_warmup(peak_lr: float, total_steps: int,
+                       warmup_steps: int = 0, final_frac: float = 0.0):
+    def lr(count):
+        c = count.astype(jnp.float32)
+        warm = c / jnp.maximum(warmup_steps, 1)
+        prog = jnp.clip((c - warmup_steps)
+                        / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return peak_lr * jnp.where(c < warmup_steps, warm, cos)
+    return lr
+
+
+def constant(peak_lr: float):
+    def lr(count):
+        return jnp.float32(peak_lr)
+    return lr

@@ -1,0 +1,3 @@
+from repro.parallel.context import ParallelContext
+
+__all__ = ["ParallelContext"]

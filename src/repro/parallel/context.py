@@ -1,0 +1,61 @@
+"""ParallelContext: the mesh + axis-name contract threaded through models.
+
+Axis convention (launch/mesh.py):
+  batch/FSDP axes : ("data",) single-pod, ("pod", "data") multi-pod
+  tensor/expert   : "model"
+
+A context with mesh=None (or all axes of size 1) degrades every collective
+path to its local equivalent — smoke tests and single-host examples run the
+exact same model code.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelContext:
+    mesh: Optional[Mesh] = None
+    batch_axes: Tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+
+    @property
+    def model_size(self) -> int:
+        if self.mesh is None:
+            return 1
+        return self.mesh.shape[self.model_axis]
+
+    @property
+    def batch_size(self) -> int:
+        if self.mesh is None:
+            return 1
+        n = 1
+        for a in self.batch_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    @property
+    def batch_spec(self):
+        """PartitionSpec entry for a batch dimension."""
+        return self.batch_axes if len(self.batch_axes) > 1 else self.batch_axes[0]
+
+    def sharding(self, *spec) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, P(*spec))
+
+    def constrain(self, x, *spec):
+        """with_sharding_constraint if a mesh is present, else identity."""
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*spec)))
+
+
+def local_context() -> ParallelContext:
+    return ParallelContext(mesh=None)

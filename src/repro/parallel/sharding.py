@@ -1,0 +1,263 @@
+"""PartitionSpec rules: params (TP ⊗ FSDP), optimizer state, batches, caches.
+
+Scheme (DESIGN.md §5):
+  - TP over "model": attention heads / MoE experts / MLP hidden / vocab.
+  - FSDP over the batch axes ("data", or ("pod","data") multi-pod) on the
+    *other* matrix dim when ``fsdp=True`` — XLA inserts the per-layer
+    all-gather inside the scan (weights stored 2D-sharded).
+  - Sequence parallelism for decode caches: when KV heads (or batch) can't
+    fill the axis, the cache's *sequence* dim is sharded and the decode
+    attention becomes a GSPMD distributed flash-decode (partial max/sum
+    + all-reduce emitted by the partitioner).
+
+Rules are path-driven: they match the param pytree produced by
+models/transformer.init_params for every architecture in the pool.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+MODEL = "model"
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "name"):
+            out.append(str(p.name))
+        elif hasattr(p, "idx"):
+            out.append(f"#{p.idx}")
+    return tuple(out)
+
+
+def param_spec(path_names: Tuple[str, ...], ndim: int, fsdp_axes,
+               stacked: bool) -> P:
+    """PartitionSpec for one param leaf. `stacked`: leading n_repeats dim."""
+    names = path_names
+    name = names[-1] if names else ""
+    parent = names[-2] if len(names) >= 2 else ""
+    gparent = names[-3] if len(names) >= 3 else ""
+    F = fsdp_axes   # None or axis (tuple) for FSDP dim
+
+    def spec(*dims):
+        if stacked:
+            dims = (None,) + dims
+        assert len(dims) == ndim, (names, ndim, dims)
+        return P(*dims)
+
+    # ---- edges ----
+    if names[:1] == ("embed",) and name in ("w", "wq"):
+        return P(MODEL, F)                           # vocab-parallel embedding
+    if names[:1] == ("head",) and name in ("w", "wq"):
+        return P(F, MODEL)                           # vocab-parallel head
+    if names[:1] == ("embed",) or names[:1] == ("head",):
+        return P()                                   # steps/scales
+
+    # ---- scalar steps / scales / norms ----
+    if name in ("sw", "sa", "scale", "bias", "r_sw", "r_sa") \
+            or parent in ("norm1", "norm2", "q_norm", "kv_norm", "norm",
+                          "final_norm"):
+        # MoE expert banks carry per-expert steps aligned with the E shard.
+        if gparent == "moe" and parent in ("gate", "up", "down") \
+                and name in ("sw", "sa"):
+            return spec(MODEL) if ndim == (2 if stacked else 1) else P()
+        return P()
+
+    # ---- MoE expert banks (E, din, dout) ----
+    if gparent == "moe" and name in ("w", "wq"):
+        if parent in ("gate", "up"):
+            return spec(MODEL, F, None)
+        if parent == "down":
+            return spec(MODEL, None, F)
+    if parent == "router":
+        return spec(None, None) if name in ("w", "wq") else P()
+
+    # ---- MLA ----
+    if parent in ("wq_a", "wkv_a") and name in ("w", "wq"):
+        return spec(F, None)
+    if parent in ("wq_b", "wk_b", "wv_b") and name in ("w", "wq"):
+        return spec(None, MODEL)
+
+    # ---- Mamba ----
+    if gparent == "mamba" or parent == "mamba" or "mamba" in names:
+        if parent == "in" and name in ("w", "wq"):
+            return spec(F, MODEL)
+        if parent == "x" and name in ("w", "wq"):
+            return spec(MODEL, None)
+        if parent == "dt" and name in ("w", "wq"):
+            return spec(None, MODEL)
+        if parent == "out" and name in ("w", "wq"):
+            return spec(MODEL, F)
+        if name == "conv":
+            return spec(None, MODEL)
+        if name in ("conv_b", "D", "dt_bias"):
+            return spec(MODEL)
+        if name == "A_log":
+            return spec(MODEL, None)
+
+    # ---- xLSTM ----
+    if parent == "lstm" or gparent == "lstm":
+        if parent in ("wq", "wk", "wv") and name in ("w", "wq"):
+            return spec(None, MODEL)
+        if parent == "up" and name in ("w", "wq"):
+            return spec(F, MODEL)
+        if parent == "down" and name in ("w", "wq"):
+            return spec(MODEL, F)
+        if parent == "wif" and name in ("w", "wq"):
+            return spec(None, None)
+        if parent == "w" and name in ("w", "wq"):                # sLSTM W
+            return spec(F, MODEL)
+        if name == "r":
+            return spec(None, None, None)
+
+    # ---- dense attention / MLP ----
+    if parent in ("wq", "wk", "wv") and name in ("w", "wq"):
+        return spec(F, MODEL)
+    if parent == "wo" and name in ("w", "wq"):
+        return spec(MODEL, F)
+    if parent in ("gate", "up") and name in ("w", "wq"):
+        return spec(F, MODEL)
+    if parent == "down" and name in ("w", "wq"):
+        return spec(MODEL, F)
+    if parent == "proj" and name in ("w", "wq"):                 # MTP
+        return spec(F, None)
+
+    return P()   # fallback: replicated
+
+
+def params_shardings(cfg, shapes, mesh: Mesh, ctx, fsdp: bool = True,
+                     tp: bool = True):
+    """NamedSharding tree matching an (eval_shape) params tree.
+
+    tp=False: small-model regime — the 'model' axis serves as extra data
+    parallelism instead (params replicated over it; the optimizer state can
+    still be FSDP-sharded over ALL axes via ctx.batch_spec)."""
+    F = ctx.batch_spec if fsdp else None
+
+    def one(path, leaf):
+        names = _path_names(path)
+        stacked = len(names) >= 1 and names[0] == "pat"
+        sp = param_spec(names, len(leaf.shape), F, stacked)
+        if not tp:
+            sp = P(*[None if e == MODEL else e for e in sp])
+        sp = _validate(sp, leaf.shape, mesh, names)
+        return NamedSharding(mesh, sp)
+
+    return jax.tree_util.tree_map_with_path(one, shapes)
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, tuple):
+        return int(np.prod([mesh.shape[a] for a in entry]))
+    return mesh.shape[entry]
+
+
+def _validate(sp: P, shape, mesh: Mesh, names) -> P:
+    """Drop spec entries that don't divide the dim (e.g. MQA's 1 kv head)."""
+    entries = list(sp) + [None] * (len(shape) - len(sp))
+    out = []
+    for dim, entry in zip(shape, entries):
+        size = _axis_size(mesh, entry)
+        out.append(entry if size > 1 and dim % size == 0 else None)
+    return P(*out)
+
+
+# ------------------------------------------------------------------ batches
+def batch_shardings(batch_shapes, mesh: Mesh, ctx):
+    bs = ctx.batch_spec
+
+    def one(path, leaf):
+        names = _path_names(path)
+        key = names[-1] if names else ""
+        if key == "mrope_positions":
+            sp = P(None, bs, None)
+        elif len(leaf.shape) >= 1:
+            sp = P(bs, *([None] * (len(leaf.shape) - 1)))
+        else:
+            sp = P()
+        return NamedSharding(mesh, _validate(sp, leaf.shape, mesh, names))
+
+    return jax.tree_util.tree_map_with_path(one, batch_shapes)
+
+
+# ------------------------------------------------------------------- caches
+def cache_shardings(cfg, cache_shapes, mesh: Mesh, ctx):
+    """Decode caches: batch over the batch axes when divisible; otherwise
+    (and for the seq dim when heads can't fill 'model') sequence-parallel."""
+    bs = ctx.batch_spec
+
+    def one(path, leaf):
+        names = _path_names(path)
+        key = names[-1] if names else ""
+        shape = leaf.shape
+        stacked = names and names[0] == "pat"
+        core = shape[1:] if stacked else shape
+        batch_ok = core[0] % max(ctx.batch_size, 1) == 0
+
+        b_entry = bs if batch_ok else None
+        if key in ("k", "v"):                       # (B, S, Hkv, dh)
+            if core[2] % ctx.model_size == 0:
+                sp = (b_entry, None, MODEL, None)
+            elif batch_ok:
+                sp = (b_entry, MODEL, None, None)   # SP over seq
+            else:
+                sp = (None, (tuple(ctx.batch_axes) + (MODEL,)), None, None)
+        elif key in ("c_kv", "k_rope"):             # (B, S, C)
+            sp = ((b_entry, MODEL, None) if batch_ok
+                  else (None, tuple(ctx.batch_axes) + (MODEL,), None))
+        elif key == "conv":                         # (B, dc-1, di)
+            sp = (b_entry, None, MODEL)
+        elif key == "ssm":                          # (B, di, ds)
+            sp = (b_entry, MODEL, None)
+        elif key == "C":                            # (B, nh, dh, dh)
+            sp = (b_entry, None, MODEL, None)
+        elif key in ("n", "h", "c"):                # (B, nh, dh)
+            sp = (b_entry, None, MODEL)
+        elif key == "m":                            # (B, nh) or (B, nh, dh)
+            sp = (b_entry,) + (None,) * (len(core) - 1)
+        else:
+            sp = (None,) * len(core)
+        if stacked:
+            sp = (None,) + tuple(sp)
+        return NamedSharding(mesh, _validate(P(*sp), shape, mesh, names))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+
+# ---------------------------------------------------------------- opt state
+def opt_state_shardings(param_shardings, opt_shapes, mesh: Mesh):
+    """Adam m/v inherit the param spec; int8 {'q','s'} leaves: q like the
+    param, s like the param with the last dim dropped (rowwise scales).
+    count/scalars: replicated."""
+    pflat = {tuple(_path_names(p)): s
+             for p, s in jax.tree_util.tree_flatten_with_path(
+                 param_shardings)[0]}
+
+    def one(path, leaf):
+        names = _path_names(path)
+        # strip the AdamW state prefix ('m'/'v'/'count', NamedTuple idx)
+        for i in range(len(names)):
+            cand = names[i + 1:]
+            q8 = cand[-1:] in (("q",), ("s",))
+            base = cand[:-1] if q8 else cand
+            if base in pflat:
+                psp = pflat[base].spec
+                if q8 and names[-1] == "s":
+                    ent = list(psp) + [None] * (len(leaf.shape) - len(psp))
+                    ent = ent[:len(leaf.shape) - 1] + [None]
+                    return NamedSharding(mesh, _validate(P(*ent), leaf.shape,
+                                                         mesh, names))
+                return NamedSharding(mesh, _validate(psp, leaf.shape, mesh,
+                                                     names))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(one, opt_shapes)

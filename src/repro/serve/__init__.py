@@ -1,0 +1,3 @@
+from repro.serve.engine import ServeEngine, quantize_for_serving
+
+__all__ = ["ServeEngine", "quantize_for_serving"]

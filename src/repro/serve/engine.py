@@ -1,0 +1,149 @@
+"""Serving engine: real integer-quantized weights, prefill + batched decode.
+
+``quantize_for_serving`` converts a QAT checkpoint into the serve layout:
+every quant-unit's weights become **int4 codes + fp32 scale** (2-bit layers
+keep a ±2 code range inside int4 — scan-stacked layers must share a dtype;
+the extra 2-bit packing is a kernel-granularity optimization handled by
+kernels/quant_matmul.py on TPU — DESIGN.md §3).  Embedding/LM-head codes
+are int8 (pinned 8-bit).
+
+The decode-time roofline is HBM-bound; int4 streams 4× fewer weight bytes
+than bf16 — this is the paper's NorthPole speed/energy claim re-derived for
+TPU and measured in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.models import transformer as tf
+
+
+def _quantize_qdense(p: dict, bits) -> dict:
+    """{'w','sw','sa'} -> {'wq','scale','sa'}; bits: scalar or (L,)/(L,E)."""
+    w = p["w"].astype(jnp.float32)
+    step = jnp.maximum(jnp.abs(p["sw"]).astype(jnp.float32), 1e-9)
+    b = jnp.asarray(bits, jnp.float32)
+    # broadcast step/bits over trailing dims of w
+    extra = w.ndim - step.ndim
+    stepb = step.reshape(step.shape + (1,) * extra)
+    bb = b.reshape(b.shape + (1,) * max(w.ndim - b.ndim, 0))
+    codes = quant.quantize_int(w, stepb, bb)
+    # static dtype decision (bits come from the *host-side* policy arrays)
+    import numpy as np
+    int_dtype = jnp.int8 if float(np.max(np.asarray(bits))) > 4 else jnp.int4
+    return {"wq": codes.astype(int_dtype), "scale": step, "sa": p["sa"]}
+
+
+def quantize_for_serving(params: dict, policy_arrays: dict, cfg) -> dict:
+    """Tree-walk a trained param pytree into the serve layout.
+
+    policy_arrays: the knapsack outcome ({group: {slot: bits array}}) — each
+    unit's codes are clamped to its selected bit range.
+    """
+    slot_of = _slot_index(cfg)
+
+    def walk(node, path):
+        if isinstance(node, dict) and "w" in node and "sw" in node \
+                and "sa" in node:
+            bits = _bits_for(policy_arrays, slot_of, path)
+            return _quantize_qdense(node, bits)
+        if isinstance(node, dict):
+            return {k: walk(v, path + (k,)) for k, v in node.items()}
+        return node
+
+    out = walk(params, ())
+    # embedding / head: int8 (pinned 8-bit)
+    for edge in ("embed", "head"):
+        if edge in params and isinstance(params[edge], dict) \
+                and "w" in params[edge]:
+            p = params[edge]
+            w = p["w"].astype(jnp.float32)
+            step = jnp.maximum(jnp.abs(p["sw"]).astype(jnp.float32), 1e-9)
+            codes = quant.quantize_int(w, step, jnp.float32(8.0))
+            out[edge] = {"wq": codes.astype(jnp.int8), "scale": step}
+            if "sa" in p:
+                out[edge]["sa"] = p["sa"]
+    return out
+
+
+def _slot_index(cfg) -> Dict[tuple, tuple]:
+    """tensor-path prefix -> (group, slot) from the policy registry."""
+    policy = tf.build_policy(cfg)
+    index = {}
+    for u in policy.units:
+        for t in u.tensors:
+            index[t[:-1] if t[-1] == "w" else t] = (u.group, u.slot)
+    return index
+
+
+def _bits_for(policy_arrays, slot_of, path) -> Any:
+    key = slot_of.get(path)
+    if key is None:
+        return 4.0                      # not a registered unit: safe default
+    group, slot = key
+    return policy_arrays[group][slot]
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    """Batched greedy decoding with a prefilled KV cache.
+
+    All requests in a batch share a prompt length (static-shape serving;
+    production continuous batching slots requests into fixed (B, S_max)
+    buffers the same way).
+    """
+    cfg: Any
+    params: Any                     # serve-layout params
+    policy_arrays: Any
+    ctx: Any
+    max_seq: int
+
+    def __post_init__(self):
+        self._prefill = jax.jit(self._prefill_impl)
+        self._decode = jax.jit(self._decode_impl)
+
+    def _prefill_impl(self, batch):
+        logits, caches, _ = tf.apply(self.params, self.policy_arrays, batch,
+                                     self.cfg, self.ctx, mode="prefill")
+        return logits, caches
+
+    def _decode_impl(self, batch, caches):
+        logits, caches, _ = tf.apply(self.params, self.policy_arrays, batch,
+                                     self.cfg, self.ctx, mode="decode",
+                                     caches=caches,
+                                     positions=batch["positions"])
+        return logits, caches
+
+    def generate(self, tokens: jax.Array, n_new: int) -> jax.Array:
+        """tokens: (B, S_prompt) -> (B, n_new) greedy continuation."""
+        b, s_prompt = tokens.shape
+        logits, pre = self._prefill({"tokens": tokens})
+        caches = jax.tree.map(
+            lambda full, got: _splice(full, got),
+            tf.init_caches(self.cfg, b, self.max_seq), pre)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None]
+        out = [next_tok]
+        for i in range(n_new - 1):
+            pos = jnp.full((b, 1), s_prompt + i, jnp.int32)
+            batch = {"tokens": next_tok.astype(jnp.int32), "positions": pos}
+            if self.cfg.rope == "mrope":
+                batch["mrope_positions"] = jnp.broadcast_to(
+                    pos[None, :, :], (3, b, 1)).astype(jnp.int32)
+            logits, caches = self._decode(batch, caches)
+            next_tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None]
+            out.append(next_tok)
+        return jnp.concatenate(out, axis=1)
+
+
+def _splice(full, got):
+    if got is None or isinstance(got, int):
+        return full
+    if full.shape == got.shape:
+        return got.astype(full.dtype)
+    return jax.lax.dynamic_update_slice(full, got.astype(full.dtype),
+                                        (0,) * full.ndim)

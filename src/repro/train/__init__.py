@@ -1,0 +1,5 @@
+from repro.train.step import TrainState, make_train_step, init_train_state
+from repro.train.loop import TrainLoop, TrainLoopConfig
+
+__all__ = ["TrainState", "make_train_step", "init_train_state", "TrainLoop",
+           "TrainLoopConfig"]

@@ -1,0 +1,103 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+# ------------------------------------------------------------ entropy_hist
+@pytest.mark.parametrize("n", [100, 8192, 50_000])
+@pytest.mark.parametrize("n_bins", [4, 16, 256])
+def test_histogram_sweep(rng, n, n_bins):
+    codes = jnp.asarray(rng.integers(0, n_bins, size=n), jnp.int32)
+    got = ops.histogram(codes, n_bins, impl="interpret")
+    want = ref.histogram(codes, n_bins)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert float(jnp.sum(got)) == n
+
+
+def test_entropy_bits_consistency(rng):
+    codes = jnp.asarray(rng.integers(0, 16, size=10_000), jnp.int32)
+    a = ops.entropy_bits(codes, 16, impl="interpret")
+    b = ops.entropy_bits(codes, 16, impl="ref")
+    np.testing.assert_allclose(float(a), float(b), atol=1e-5)
+
+
+# ----------------------------------------------------------- lsq_fakequant
+@pytest.mark.parametrize("shape", [(33,), (256, 129), (4, 7, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("bits", [2.0, 4.0, 8.0])
+def test_lsq_kernel_sweep(rng, shape, dtype, bits):
+    x = jnp.asarray(rng.normal(size=shape), dtype)
+    s = jnp.float32(0.1)
+    got = ops.lsq_fakequant(x, s, bits, impl="interpret")
+    want = ref.lsq_fakequant(x, s, jnp.float32(bits))
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=1e-3)
+    assert got.shape == shape and got.dtype == dtype
+
+
+# ------------------------------------------------------------ quant_matmul
+@pytest.mark.parametrize("m,k,n", [(128, 256, 128), (256, 512, 256),
+                                   (128, 1024, 384)])
+@pytest.mark.parametrize("bits", [4, 2])
+def test_quant_matmul_sweep(rng, m, k, n, bits):
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.bfloat16)
+    lo, hi = (-8, 8) if bits == 4 else (-2, 2)
+    codes = jnp.asarray(rng.integers(lo, hi, size=(k, n)), jnp.int8)
+    wp = ref.pack_w4(codes) if bits == 4 else ref.pack_w2(codes)
+    scale = jnp.asarray(rng.uniform(0.01, 0.1, size=(n,)), jnp.float32)
+    got = ops.quant_matmul(x, wp, scale, bits=bits, impl="interpret",
+                           bk=min(512, k))
+    want = (ref.quant_matmul_w4 if bits == 4 else ref.quant_matmul_w2)(
+        x, wp, scale)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_quant_matmul_vs_float(rng):
+    """End-to-end: pack(quantize(w)) @ x ~= fake-quant w @ x."""
+    from repro.core import quant
+    m, k, n = 128, 256, 128
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.bfloat16)
+    w = jnp.asarray(rng.normal(size=(k, n)) * 0.05, jnp.float32)
+    step = quant.init_step_from_tensor(w, 4.0)
+    codes = quant.quantize_int(w, step, jnp.float32(4.0)).astype(jnp.int8)
+    wp = ref.pack_w4(codes)
+    scale = jnp.broadcast_to(step, (n,))
+    got = ops.quant_matmul(x, wp, scale, bits=4, impl="interpret", bk=256)
+    wq = quant.lsq_fake_quant(w, step, jnp.float32(4.0))
+    want = x.astype(jnp.float32) @ wq
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=5e-2, atol=5e-2)
+
+
+# --------------------------------------------------------- flash_attention
+@pytest.mark.parametrize("s,d,h,hkv", [(128, 64, 4, 4), (256, 64, 8, 2),
+                                       (256, 128, 4, 1)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(rng, s, d, h, hkv, causal):
+    b = 2
+    q = jnp.asarray(rng.normal(size=(b, h, s, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, hkv, s, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, hkv, s, d)), jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=causal, impl="interpret",
+                              bq=64, bk=64)
+    want = ops.flash_attention(q, k, v, causal=causal, impl="ref")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_bf16(rng):
+    b, h, s, d = 1, 4, 128, 64
+    q = jnp.asarray(rng.normal(size=(b, h, s, d)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(b, h, s, d)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(b, h, s, d)), jnp.bfloat16)
+    got = ops.flash_attention(q, k, v, causal=True, impl="interpret",
+                              bq=64, bk=64)
+    want = ops.flash_attention(q, k, v, causal=True, impl="ref")
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=3e-2, atol=3e-2)

@@ -1,0 +1,71 @@
+"""0-1 knapsack solver: exactness vs brute force, budget semantics."""
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import knapsack
+
+
+def brute_force(values, weights, capacity):
+    n = len(values)
+    best = 0.0
+    for mask in itertools.product([0, 1], repeat=n):
+        w = sum(wi for wi, m in zip(weights, mask) if m)
+        if w <= capacity:
+            best = max(best, sum(vi for vi, m in zip(values, mask) if m))
+    return best
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 10),
+       st.lists(st.integers(1, 100), min_size=1, max_size=10),
+       st.lists(st.integers(1, 50), min_size=1, max_size=10))
+def test_matches_brute_force(seed, vals, wts):
+    n = min(len(vals), len(wts))
+    vals, wts = vals[:n], wts[:n]
+    capacity = max(1, sum(wts) * seed // 10)
+    res = knapsack.solve([f"i{k}" for k in range(n)],
+                         [float(v) for v in vals],
+                         [float(w) for w in wts], float(capacity))
+    expected = brute_force(vals, wts, capacity)
+    got = sum(v for v, k in zip(vals, res.take) if res.take[k])
+    # value quantization to 10k levels can cost at most one level gap
+    assert got >= expected * 0.999 - 1e-9
+    # floored weights: overshoot bounded by n_items * resolution
+    assert res.total_weight <= capacity * (1 + 1e-6) \
+        + n * res.weight_resolution
+
+
+def test_all_fit():
+    res = knapsack.solve(["a", "b"], [1.0, 2.0], [3.0, 4.0], 100.0)
+    assert all(res.take.values())
+
+
+def test_nothing_fits():
+    res = knapsack.solve(["a", "b"], [1.0, 2.0], [3.0, 4.0], 0.0)
+    assert not any(res.take.values())
+
+
+def test_value_quantization():
+    q = knapsack.quantize_values(np.array([0.0, 0.5, 1.0]))
+    assert q[0] == 1 and q[-1] == knapsack.VALUE_LEVELS
+    assert np.all(np.diff(q) > 0)
+
+
+def test_select_for_budget_semantics():
+    from repro import configs
+    from repro.models import transformer as tf
+    cfg = configs.get_config("olmo-1b").smoke()
+    policy = tf.build_policy(cfg)
+    units = policy.selectable_units()
+    gains = {u.name: float(i + 1) for i, u in enumerate(units)}
+    res = knapsack.select_for_budget(policy, gains, budget_frac=0.75)
+    mixed = policy.apply_selection(res.take)
+    hi = policy.uniform(4.0).cost_bmacs_per_token()
+    assert mixed.cost_bmacs_per_token() <= 0.75 * hi * 1.001 \
+        + res.weight_resolution * 2
+    # budget 1.0 keeps everything
+    res_full = knapsack.select_for_budget(policy, gains, budget_frac=1.0)
+    assert all(res_full.take.values())

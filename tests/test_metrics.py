@@ -1,0 +1,153 @@
+"""EAGL / HAWQ / ALPS / baseline gain metrics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import knapsack
+from repro.core.metrics import (alps, baselines, eagl, hawq)
+from repro.models import transformer as tf
+from repro.parallel.context import local_context
+
+
+# ------------------------------------------------------------------- EAGL
+def test_entropy_uniform_max():
+    # weights uniformly covering all 16 4-bit bins -> H == 4 bits
+    codes_per_bin = 100
+    vals = jnp.repeat(jnp.arange(-8, 8, dtype=jnp.float32), codes_per_bin)
+    w = vals * 0.1
+    h = eagl.unit_entropy(w, jnp.float32(0.1), 4.0, impl="ref")
+    assert float(h) == pytest.approx(4.0, abs=1e-4)
+
+
+def test_entropy_delta_zero():
+    w = jnp.zeros((1000,), jnp.float32)
+    h = eagl.unit_entropy(w, jnp.float32(0.1), 4.0, impl="ref")
+    assert float(h) == pytest.approx(0.0, abs=1e-4)
+
+
+def test_entropy_matches_paper_snippet(rng):
+    """Cross-check against a direct transcription of the paper's Appendix E
+    PyTorch snippet (numpy rendition)."""
+    w = jnp.asarray(rng.normal(size=(4096,)) * 0.3, jnp.float32)
+    scale, precision = 0.1, 4
+    qt = np.clip(np.round(np.asarray(w) / scale), -8, 7)
+    px = np.bincount((qt + 8).astype(int), minlength=16) / qt.size
+    expected = -np.sum((px + 1e-10) * np.log2(px + 1e-10))
+    h = eagl.unit_entropy(w, jnp.float32(scale), 4.0, impl="ref")
+    assert float(h) == pytest.approx(expected, abs=1e-3)
+
+
+def test_eagl_gains_full_model():
+    cfg = configs.get_config("olmo-1b").smoke()
+    policy = tf.build_policy(cfg)
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    gains = eagl.eagl_gains(
+        policy, lambda u, t: tf.fetch_unit_tensor(params, u, t), impl="ref")
+    assert set(gains) == {u.name for u in policy.selectable_units()}
+    for g in gains.values():
+        assert 0.0 <= g  # sums of entropies
+
+
+# ------------------------------------------------------------------- HAWQ
+def test_hutchinson_quadratic():
+    # loss = 0.5 x^T A x  =>  Hessian == A, avg trace == mean(diag(A))
+    rng = np.random.default_rng(1)
+    d = 16
+    a_half = rng.normal(size=(d, d))
+    a_mat = a_half @ a_half.T
+    A = jnp.asarray(a_mat, jnp.float32)
+    params = {"x": jnp.asarray(rng.normal(size=(d,)), jnp.float32)}
+
+    def loss(p):
+        return 0.5 * p["x"] @ A @ p["x"]
+
+    traces = hawq.hutchinson_traces(loss, params, {"u": ("x",)},
+                                    hawq.HawqConfig(n_probes=300, seed=0))
+    assert traces["u"] == pytest.approx(np.trace(a_mat) / d, rel=0.15)
+
+
+def test_hawq_gains_full_model():
+    cfg = configs.get_config("bert-base").smoke()
+    policy = tf.build_policy(cfg)
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    ctx = local_context()
+    pa = jax.tree.map(jnp.asarray, policy.as_arrays())
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (2, 64)),
+                                   jnp.int32),
+             "labels": jnp.asarray(rng.integers(0, cfg.vocab, (2, 64)),
+                                   jnp.int32)}
+
+    def loss(p, b):
+        return tf.loss_fn(p, pa, b, cfg, ctx)[0]
+
+    # whole-leaf traces (stacked groups share a leaf): finiteness check
+    paths = {f"{u.name}/{t}": t for u in policy.selectable_units()
+             for t in u.tensors}
+    gains = hawq.hawq_gains(policy, loss, params, paths,
+                            hawq.HawqConfig(n_probes=2), batch)
+    assert set(gains) == {u.name for u in policy.selectable_units()}
+    assert all(np.isfinite(v) for v in gains.values())
+
+
+# ------------------------------------------------------------------- ALPS
+def test_alps_driver_orders_probes():
+    cfg = configs.get_config("olmo-1b").smoke()
+    policy = tf.build_policy(cfg)
+    seen = []
+
+    def probe(policy=None, steps=0):
+        # count how many units were dropped to 2-bit in this probe
+        dropped = [u.name for u in policy.selectable_units()
+                   if policy.bits_of(u.name) == 2.0]
+        assert len(dropped) == 1
+        seen.append(dropped[0])
+        return {"loss": float(len(seen)), "accuracy": 1.0 / len(seen)}
+
+    gains = alps.alps_gains(policy, probe_finetune=probe,
+                            cfg=alps.AlpsConfig(steps_per_probe=1,
+                                                metric_mode="loss"))
+    assert seen == [u.name for u in policy.selectable_units()]
+    assert gains[seen[0]] == 1.0 and gains[seen[-1]] == float(len(seen))
+
+
+def test_alps_accuracy_mode():
+    cfg = configs.get_config("olmo-1b").smoke()
+    policy = tf.build_policy(cfg)
+    accs = iter([0.9, 0.5, 0.7] * 100)
+
+    def probe(policy=None, steps=0):
+        return {"loss": 0.0, "accuracy": next(accs)}
+
+    gains = alps.alps_gains(policy, probe_finetune=probe,
+                            cfg=alps.AlpsConfig(metric_mode="accuracy"))
+    vals = list(gains.values())
+    assert min(vals) == pytest.approx(0.0)           # best-accuracy unit
+    assert max(vals) == pytest.approx(0.4, abs=1e-9)  # 0.9 - 0.5
+
+
+# -------------------------------------------------------------- baselines
+def test_greedy_prefix_drop_order():
+    cfg = configs.get_config("olmo-1b").smoke()
+    policy = tf.build_policy(cfg)
+    keep = baselines.greedy_prefix_selection(policy, budget_frac=0.8)
+    units = policy.selectable_units()
+    flags = [keep[u.name] for u in units]
+    # dropped units form a prefix
+    first_kept = flags.index(True) if True in flags else len(flags)
+    assert all(flags[first_kept:])
+    keep_rev = baselines.greedy_prefix_selection(policy, budget_frac=0.8,
+                                                 reverse=True)
+    flags_rev = [keep_rev[u.name] for u in units]
+    first_kept_rev = len(flags_rev) - 1 - flags_rev[::-1].index(True) \
+        if True in flags_rev else -1
+    assert all(flags_rev[:first_kept_rev + 1])
+
+
+def test_uniform_gains_shape():
+    cfg = configs.get_config("olmo-1b").smoke()
+    policy = tf.build_policy(cfg)
+    g = baselines.uniform_gains(policy)
+    assert set(g.values()) == {1.0}

@@ -1,0 +1,84 @@
+"""Optimizers: AdamW (f32/bf16/int8 state), LAMB, schedules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim.adamw import AdamW, global_norm
+from repro.optim.lamb import Lamb
+from repro.optim.schedule import cosine_with_warmup
+
+
+def _quadratic_losses(optimizer, steps=60, d=32, seed=0):
+    rng = np.random.default_rng(seed)
+    target = jnp.asarray(rng.normal(size=(d, d)), jnp.float32)
+    params = {"w": jnp.zeros((d, d), jnp.float32)}
+    state = optimizer.init(params)
+    losses = []
+    for _ in range(steps):
+        loss, g = jax.value_and_grad(
+            lambda p: jnp.mean((p["w"] - target) ** 2))(params)
+        params, state = optimizer.update(g, state, params)
+        losses.append(float(loss))
+    return losses
+
+
+@pytest.mark.parametrize("dtype", ["f32", "bf16", "int8"])
+def test_adamw_converges(dtype):
+    losses = _quadratic_losses(AdamW(learning_rate=0.05, state_dtype=dtype))
+    assert losses[-1] < 0.2 * losses[0]
+
+
+def test_int8_state_tracks_f32():
+    l32 = _quadratic_losses(AdamW(learning_rate=0.05, state_dtype="f32"))
+    l8 = _quadratic_losses(AdamW(learning_rate=0.05, state_dtype="int8"))
+    assert abs(l8[-1] - l32[-1]) < 0.15 * l32[0] + 1e-3
+
+
+def test_scanned_update_matches_unscanned():
+    """ndim>=3 leaves (stacked layers) update under a scan — must be
+    numerically identical to the direct update."""
+    rng = np.random.default_rng(0)
+    opt = AdamW(learning_rate=0.01, weight_decay=0.1)
+    p_stacked = {"w": jnp.asarray(rng.normal(size=(4, 8, 8)), jnp.float32)}
+    g = {"w": jnp.asarray(rng.normal(size=(4, 8, 8)), jnp.float32)}
+    s = opt.init(p_stacked)
+    new_stacked, _ = opt.update(g, s, p_stacked)
+
+    outs = []
+    for i in range(4):
+        pi = {"w": p_stacked["w"][i][None]}           # (1,8,8): no scan path
+        gi = {"w": g["w"][i][None]}
+        si = opt.init(pi)
+        ni, _ = opt.update(gi, si, pi)
+        outs.append(ni["w"][0])
+    np.testing.assert_allclose(np.asarray(new_stacked["w"]),
+                               np.stack(outs), rtol=1e-5, atol=1e-6)
+
+
+def test_grad_clip():
+    opt = AdamW(learning_rate=0.1, grad_clip=1e-9)
+    params = {"w": jnp.ones((4,))}
+    g = {"w": jnp.full((4,), 100.0)}
+    state = opt.init(params)
+    new_p, _ = opt.update(g, state, params)
+    # tiny clip => effectively no movement beyond epsilon-scaled step
+    assert float(jnp.max(jnp.abs(new_p["w"] - params["w"]))) < 0.2
+
+
+def test_lamb_converges():
+    losses = _quadratic_losses(Lamb(learning_rate=0.05), steps=80)
+    assert losses[-1] < 0.3 * losses[0]
+
+
+def test_cosine_schedule():
+    lr = cosine_with_warmup(1.0, total_steps=100, warmup_steps=10)
+    assert float(lr(jnp.int32(0))) == pytest.approx(0.0)
+    assert float(lr(jnp.int32(10))) == pytest.approx(1.0, abs=1e-6)
+    assert float(lr(jnp.int32(100))) == pytest.approx(0.0, abs=1e-6)
+    assert float(lr(jnp.int32(55))) > float(lr(jnp.int32(90)))
+
+
+def test_global_norm():
+    t = {"a": jnp.ones((3,)), "b": jnp.full((4,), 2.0)}
+    assert float(global_norm(t)) == pytest.approx(np.sqrt(3 + 16))

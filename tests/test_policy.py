@@ -1,0 +1,86 @@
+"""PrecisionPolicy registry, pinning, arrays export, accounting."""
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.policy import PIN_EDGE_BITS, PIN_NARROW_BITS
+from repro.models import transformer as tf
+
+
+@pytest.fixture(scope="module")
+def policy():
+    return tf.build_policy(configs.get_config("olmo-1b").smoke())
+
+
+def test_edges_pinned(policy):
+    embed = [u for u in policy.units if u.group == "embed"]
+    assert embed and embed[0].pinned_bits == PIN_EDGE_BITS
+    assert not embed[0].selectable
+
+
+def test_narrow_pinned():
+    # jamba smoke: mamba dt_rank = 8 < 128 -> pinned at 4
+    p = tf.build_policy(configs.get_config("jamba-1.5-large-398b").smoke())
+    dt = [u for u in p.units if u.slot == "mamba_dt"]
+    assert dt and all(u.pinned_bits == PIN_NARROW_BITS for u in dt)
+    router = [u for u in p.units if u.slot == "moe_router"]
+    assert router and all(u.pinned_bits == PIN_EDGE_BITS for u in router)
+
+
+def test_as_arrays_shapes(policy):
+    arrays = policy.as_arrays()
+    cfg = configs.get_config("olmo-1b").smoke()
+    assert arrays["pat0"]["attn_qkv"].shape == (cfg.n_repeats,)
+    assert np.all(arrays["pat0"]["attn_qkv"] == 4.0)
+
+
+def test_as_arrays_expert_dim():
+    cfg = configs.get_config("dbrx-132b").smoke()
+    p = tf.build_policy(cfg)
+    arrays = p.as_arrays()
+    assert arrays["pat0"]["moe_gateup"].shape == (cfg.n_repeats,
+                                                  cfg.n_experts)
+
+
+def test_selection_roundtrip(policy):
+    units = policy.selectable_units()
+    keep = {u.name: (i % 2 == 0) for i, u in enumerate(units)}
+    mixed = policy.apply_selection(keep)
+    for i, u in enumerate(units):
+        assert mixed.bits_of(u.name) == (4.0 if i % 2 == 0 else 2.0)
+    # original untouched
+    assert all(policy.bits_of(u.name) == 4.0 for u in units)
+
+
+def test_cost_monotone(policy):
+    hi = policy.uniform(4.0).cost_bmacs_per_token()
+    lo = policy.uniform(2.0).cost_bmacs_per_token()
+    assert lo == pytest.approx(hi / 2)
+    assert policy.uniform(2.0).compression_ratio() \
+        > policy.uniform(4.0).compression_ratio()
+
+
+def test_macs_match_param_counts():
+    # dense projections: macs/token == n_params
+    p = tf.build_policy(configs.get_config("deepseek-7b").smoke())
+    for u in p.units:
+        if u.slot in ("attn_qkv", "attn_wo", "mlp_gateup", "mlp_down"):
+            assert u.macs_per_token == pytest.approx(u.n_params)
+
+
+def test_moe_expected_macs():
+    cfg = configs.get_config("dbrx-132b").smoke()
+    p = tf.build_policy(cfg)
+    for u in p.units:
+        if u.slot == "moe_gateup":
+            assert u.macs_per_token == pytest.approx(
+                u.n_params * cfg.top_k / cfg.n_experts)
+
+
+def test_all_archs_build_policies():
+    for arch in configs.ARCHS:
+        cfg = configs.get_config(arch).smoke()
+        p = tf.build_policy(cfg)
+        assert len(p.selectable_units()) > 0
+        arrays = p.as_arrays()
+        assert arrays

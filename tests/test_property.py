@@ -1,0 +1,143 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quant
+from repro.kernels import ref
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([2.0, 4.0, 8.0]),
+       st.floats(1e-3, 10.0))
+def test_fake_quant_idempotent_and_bounded(seed, bits, step):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(257,)) * 3, jnp.float32)
+    s = jnp.float32(step)
+    b = jnp.float32(bits)
+    once = quant.lsq_fake_quant(x, s, b)
+    twice = quant.lsq_fake_quant(once, s, b)
+    np.testing.assert_allclose(np.asarray(once), np.asarray(twice),
+                               rtol=1e-5, atol=1e-5)
+    qmax = 2.0 ** (bits - 1) - 1
+    assert float(jnp.max(jnp.abs(once))) <= (qmax + 1) * step * (1 + 1e-5)
+    # code count bounded by 2^bits
+    codes = np.unique(np.round(np.asarray(once) / step).astype(int))
+    assert len(codes) <= 2 ** int(bits)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 8), st.integers(1, 16))
+def test_pack_unpack_roundtrip(seed, rows8, cols):
+    rng = np.random.default_rng(seed)
+    k = rows8 * 8
+    codes4 = jnp.asarray(rng.integers(-8, 8, size=(k, cols)), jnp.int8)
+    np.testing.assert_array_equal(
+        np.asarray(ref.unpack_w4(ref.pack_w4(codes4), jnp.float32)),
+        np.asarray(codes4, np.float32))
+    codes2 = jnp.asarray(rng.integers(-2, 2, size=(k, cols)), jnp.int8)
+    np.testing.assert_array_equal(
+        np.asarray(ref.unpack_w2(ref.pack_w2(codes2), jnp.float32)),
+        np.asarray(codes2, np.float32))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([2.0, 4.0]))
+def test_entropy_bounds(seed, bits):
+    from repro.core.metrics.eagl import unit_entropy
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(1024,)) * rng.uniform(0.01, 2.0),
+                    jnp.float32)
+    h = float(unit_entropy(w, jnp.float32(0.1), bits, impl="ref"))
+    assert -1e-4 <= h <= bits + 1e-4
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_chunked_attention_matches_reference(seed):
+    from repro.models.attention import chunked_attention
+    rng = np.random.default_rng(seed)
+    b, s, h, d, chunk = 2, 128, 2, 32, 32
+    q = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+
+    def kv_fn(i):
+        sl = lambda t: jax.lax.dynamic_slice_in_dim(t, i * chunk, chunk, 1)
+        return sl(k), sl(v)
+
+    got = chunked_attention(q, kv_fn, s // chunk, chunk, causal=True)
+    want = ref.attention(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                         v.transpose(0, 2, 1, 3),
+                         causal=True).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_mlstm_chunked_matches_recurrent(seed):
+    """The chunkwise-parallel mLSTM must equal the step-by-step recurrence."""
+    from repro import configs
+    from repro.models import ssm
+    cfg = configs.get_config("xlstm-1.3b").smoke()
+    rng = np.random.default_rng(seed)
+    p = ssm.init_mlstm(jax.random.PRNGKey(seed % 1000), cfg)
+    b, s = 1, 64
+    x = jnp.asarray(rng.normal(size=(b, s, cfg.d_model)) * 0.3, jnp.float32)
+    bits = {"lstm_up": jnp.float32(8.0), "lstm_qkv": jnp.float32(8.0),
+            "lstm_if": jnp.float32(8.0), "lstm_down": jnp.float32(8.0)}
+    full, _ = ssm.mlstm_apply(p, x, bits, cfg, "train", None)
+
+    state = ssm.init_mlstm_state(cfg, b)
+    outs = []
+    for t in range(s):
+        y, state = ssm.mlstm_apply(p, x[:, t:t + 1], bits, cfg, "decode",
+                                   state)
+        outs.append(y)
+    step = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(step),
+                               rtol=2e-3, atol=2e-3)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_mamba_chunked_matches_recurrent(seed):
+    from repro import configs
+    from repro.models import ssm
+    cfg = configs.get_config("jamba-1.5-large-398b").smoke()
+    rng = np.random.default_rng(seed)
+    p = ssm.init_mamba(jax.random.PRNGKey(seed % 1000), cfg)
+    b, s = 1, 64
+    x = jnp.asarray(rng.normal(size=(b, s, cfg.d_model)) * 0.3, jnp.float32)
+    bits = {k: jnp.float32(8.0)
+            for k in ("mamba_in", "mamba_x", "mamba_dt", "mamba_out")}
+    full, _ = ssm.mamba_apply(p, x, bits, cfg, "train", None)
+
+    state = ssm.init_mamba_state(cfg, b)
+    outs = []
+    for t in range(s):
+        y, state = ssm.mamba_apply(p, x[:, t:t + 1], bits, cfg, "decode",
+                                   state)
+        outs.append(y)
+    step = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(step),
+                               rtol=2e-3, atol=2e-3)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 6), st.integers(0, 2**31 - 1))
+def test_knapsack_budget_monotone(n, seed):
+    """More budget never decreases achieved value."""
+    from repro.core import knapsack
+    rng = np.random.default_rng(seed)
+    keys = [f"k{i}" for i in range(n)]
+    vals = rng.uniform(0.1, 1, n).tolist()
+    wts = rng.uniform(0.1, 1, n).tolist()
+    prev = -1.0
+    for cap_frac in (0.2, 0.5, 0.8, 1.0):
+        res = knapsack.solve(keys, vals, wts, sum(wts) * cap_frac)
+        got = sum(v for v, k in zip(vals, keys) if res.take[k])
+        assert got >= prev - 1e-6
+        prev = got

@@ -1,0 +1,83 @@
+"""LSQ fake-quant, integer quantization, packing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quant
+
+
+def test_qrange():
+    qmin, qmax = quant.qrange(jnp.float32(4.0))
+    assert float(qmin) == -8.0 and float(qmax) == 7.0
+    qmin, qmax = quant.qrange(jnp.float32(2.0))
+    assert float(qmin) == -2.0 and float(qmax) == 1.0
+
+
+def test_fake_quant_levels(rng):
+    x = jnp.asarray(rng.normal(size=(1000,)), jnp.float32)
+    s = jnp.float32(0.1)
+    out = quant.lsq_fake_quant(x, s, jnp.float32(2.0))
+    levels = np.unique(np.asarray(out))
+    assert len(levels) <= 4                      # 2-bit: [-2,-1,0,1]*s
+    np.testing.assert_allclose(sorted(set(np.round(levels / 0.1))),
+                               [-2, -1, 0, 1])
+
+
+def test_fake_quant_idempotent(rng):
+    x = jnp.asarray(rng.normal(size=(512,)), jnp.float32)
+    s = jnp.float32(0.07)
+    once = quant.lsq_fake_quant(x, s, jnp.float32(4.0))
+    twice = quant.lsq_fake_quant(once, s, jnp.float32(4.0))
+    np.testing.assert_allclose(once, twice, atol=1e-6)
+
+
+def test_ste_gradient_zones():
+    # in-range: grad 1; out-of-range: grad 0
+    s = jnp.float32(1.0)
+    g = jax.grad(lambda x: jnp.sum(quant.lsq_fake_quant(x, s, jnp.float32(4.0))))
+    x = jnp.asarray([0.3, 5.0, -6.0, 100.0, -100.0], jnp.float32)
+    gx = g(x)
+    np.testing.assert_allclose(gx, [1, 1, 1, 0, 0], atol=1e-6)
+
+
+def test_step_gradient_sign():
+    # LSQ: enlarging s for clipped values should track the clip boundary
+    x = jnp.asarray([100.0], jnp.float32)         # far above qmax*s
+    s = jnp.asarray(1.0, jnp.float32)
+    gs = jax.grad(lambda s_: jnp.sum(
+        quant.lsq_fake_quant(x, s_, jnp.float32(4.0))), argnums=0)(s)
+    assert float(gs) > 0                          # increase s -> output grows
+
+
+def test_step_init_and_rescale(rng):
+    w = jnp.asarray(rng.normal(size=(64, 64)), jnp.float32)
+    s4 = quant.init_step_from_tensor(w, 4.0)
+    assert float(s4) > 0
+    s2 = quant.rescale_step_for_bits(s4, 4.0, 2.0)
+    np.testing.assert_allclose(float(s2), float(s4) * 4.0, rtol=1e-6)
+
+
+@pytest.mark.parametrize("bits,packer,unpacker", [
+    (4, None, None),
+    (2, quant.pack_int2, quant.unpack_int2),
+])
+def test_pack_roundtrip(rng, bits, packer, unpacker):
+    lo, hi = (-8, 7) if bits == 4 else (-2, 1)
+    codes = jnp.asarray(rng.integers(lo, hi + 1, size=(16, 64)), jnp.int8)
+    if bits == 4:
+        packed = quant.pack_int4(codes)
+        out = quant.unpack_int4(packed, jnp.float32)
+    else:
+        packed = packer(codes)
+        out = unpacker(packed, jnp.float32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(codes, np.float32))
+
+
+def test_quantize_int_matches_fake_quant(rng):
+    x = jnp.asarray(rng.normal(size=(256,)), jnp.float32)
+    s = jnp.float32(0.05)
+    codes = quant.quantize_int(x, s, jnp.float32(4.0))
+    np.testing.assert_allclose(codes * s,
+                               quant.lsq_fake_quant(x, s, jnp.float32(4.0)),
+                               atol=1e-6)

@@ -1,0 +1,86 @@
+"""Serving: int4/int8 weight layout, engine generation, QAT consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import transformer as tf
+from repro.parallel.context import local_context
+from repro.serve.engine import ServeEngine, quantize_for_serving
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = configs.get_config("olmo-1b").smoke()
+    ctx = local_context()
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    policy = tf.build_policy(cfg)
+    pa = jax.tree.map(jnp.asarray, policy.as_arrays())
+    qparams = quantize_for_serving(params, policy.as_arrays(), cfg)
+    return cfg, ctx, params, policy, pa, qparams
+
+
+def test_serve_layout_dtypes(setup):
+    cfg, ctx, params, policy, pa, qparams = setup
+    wq = qparams["pat"]["p0"]["attn"]["wq"]
+    assert "wq" in wq and wq["wq"].dtype == jnp.int4
+    assert wq["scale"].dtype == jnp.float32
+    assert qparams["embed"]["wq"].dtype == jnp.int8      # pinned 8-bit edge
+
+
+def test_code_range_respects_policy_bits(setup):
+    cfg, ctx, params, policy, pa, qparams = setup
+    mixed = policy.apply_selection(
+        {u.name: False for u in policy.selectable_units()})   # all 2-bit
+    q2 = quantize_for_serving(params, mixed.as_arrays(), cfg)
+    codes = np.asarray(q2["pat"]["p0"]["attn"]["wq"]["wq"], np.int8)
+    assert codes.max() <= 1 and codes.min() >= -2        # 2-bit range
+
+
+def test_serve_logits_match_fake_quant(setup):
+    cfg, ctx, params, policy, pa, qparams = setup
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (2, 32)),
+                                   jnp.int32)}
+    ref_logits, _, _ = tf.apply(params, pa, batch, cfg, ctx, mode="prefill")
+    q_logits, _, _ = tf.apply(qparams, pa, batch, cfg, ctx, mode="prefill")
+    a = np.asarray(ref_logits, np.float32)
+    b = np.asarray(q_logits, np.float32)
+    # int4 codes dequantized in bf16 vs f32 fake-quant: small numeric skew.
+    # (argmax agreement is meaningless on an untrained model's noise logits,
+    # so compare the logit surfaces directly)
+    corr = np.corrcoef(a.reshape(-1), b.reshape(-1))[0, 1]
+    assert corr > 0.99, corr
+    np.testing.assert_allclose(a, b, atol=0.2 * np.abs(a).max() + 1e-3)
+
+
+def test_engine_generates(setup):
+    cfg, ctx, params, policy, pa, qparams = setup
+    engine = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx,
+                         max_seq=64)
+    rng = np.random.default_rng(1)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab, (2, 16)), jnp.int32)
+    out = engine.generate(prompt, n_new=8)
+    assert out.shape == (2, 8)
+    assert int(out.max()) < cfg.vocab and int(out.min()) >= 0
+
+
+def test_engine_matches_stepwise_reference(setup):
+    """Greedy generation == manual decode loop over the fake-quant model."""
+    cfg, ctx, params, policy, pa, qparams = setup
+    engine = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx,
+                         max_seq=64)
+    rng = np.random.default_rng(2)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab, (1, 12)), jnp.int32)
+    got = np.asarray(engine.generate(prompt, n_new=4))
+
+    # reference: re-run prefill over growing context with the SAME qparams
+    toks = np.asarray(prompt)
+    for _ in range(4):
+        logits, _, _ = tf.apply(qparams, pa,
+                                {"tokens": jnp.asarray(toks)}, cfg, ctx,
+                                mode="train")
+        nxt = int(np.argmax(np.asarray(logits, np.float32)[0, -1]))
+        toks = np.concatenate([toks, [[nxt]]], axis=1)
+    np.testing.assert_array_equal(got[0], toks[0, 12:])

@@ -1,0 +1,184 @@
+"""Distribution tests (subprocess: needs multi host-device XLA_FLAGS)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(code: str, timeout=560):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("JAX_PLATFORMS", None)
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=timeout, env=env)
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-2000:]
+    return out.stdout
+
+
+HEADER = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+"""
+
+
+@pytest.mark.slow
+def test_sharded_train_step_runs_and_matches_local():
+    """(2,4) mesh train step == single-device step (same grads/params)."""
+    _run(HEADER + """
+from repro import configs
+from repro.models import transformer as tf
+from repro.optim.adamw import AdamW
+from repro.train.step import init_train_state, make_train_step
+from repro.parallel.context import ParallelContext, local_context
+from repro.data.synthetic import make_batch
+from repro.launch.mesh import make_test_mesh, make_context
+
+cfg = configs.get_config("internlm2-1.8b").smoke()
+opt = AdamW(learning_rate=1e-3)
+policy = tf.build_policy(cfg)
+batch = make_batch(0, 0, 8, 128, cfg.vocab)
+
+state_l = init_train_state(cfg, opt, jax.random.PRNGKey(0), policy)
+step_l = jax.jit(make_train_step(cfg, local_context(), opt))
+nl, ml = step_l(state_l, batch)
+
+mesh = make_test_mesh(2, 4)
+ctx = make_context(mesh)
+state_s = init_train_state(cfg, opt, jax.random.PRNGKey(0), policy)
+with mesh:
+    step_s = jax.jit(make_train_step(cfg, ctx, opt))
+    ns, ms = step_s(state_s, batch)
+np.testing.assert_allclose(float(ml["loss"]), float(ms["loss"]), rtol=1e-4)
+for a, b in zip(jax.tree.leaves(nl.params), jax.tree.leaves(ns.params)):
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), rtol=2e-3,
+                               atol=2e-4)
+print("OK")
+""")
+
+
+@pytest.mark.slow
+def test_moe_shard_map_matches_local():
+    """EP-as-TP MoE under a real mesh == local (single-shard) MoE."""
+    _run(HEADER + """
+from repro import configs
+from repro.models import mlp
+from repro.parallel.context import ParallelContext, local_context
+from repro.launch.mesh import make_test_mesh, make_context
+
+cfg = configs.get_config("dbrx-132b").smoke()
+p = mlp.init_moe(jax.random.PRNGKey(0), cfg)
+rng = np.random.default_rng(0)
+x = jnp.asarray(rng.normal(size=(4, 32, cfg.d_model)) * 0.3, jnp.float32)
+bits = {"moe_router": jnp.float32(8.0),
+        "moe_gateup": jnp.full((cfg.n_experts,), 4.0, jnp.float32),
+        "moe_down": jnp.full((cfg.n_experts,), 4.0, jnp.float32)}
+
+y_local, aux_l = mlp.moe_apply(p, x, bits, cfg, local_context())
+
+mesh = make_test_mesh(2, 4)
+ctx = make_context(mesh)
+with mesh:
+    y_shard, aux_s = jax.jit(
+        lambda p, x: mlp.moe_apply(p, x, bits, cfg, ctx))(p, x)
+np.testing.assert_allclose(np.asarray(y_local), np.asarray(y_shard),
+                           rtol=3e-3, atol=3e-3)
+print("OK")
+""")
+
+
+@pytest.mark.slow
+def test_int8_grad_compression_close_to_exact():
+    _run(HEADER + """
+from repro import configs
+from repro.models import transformer as tf
+from repro.optim.adamw import AdamW
+from repro.train.step import init_train_state, make_train_step
+from repro.data.synthetic import make_batch
+from repro.launch.mesh import make_test_mesh, make_context
+
+cfg = configs.get_config("olmo-1b").smoke()
+opt = AdamW(learning_rate=1e-3)
+policy = tf.build_policy(cfg)
+mesh = jax.make_mesh((8,), ("data",))
+from repro.parallel.context import ParallelContext
+ctx = ParallelContext(mesh=mesh, batch_axes=("data",))
+batch = make_batch(0, 0, 8, 128, cfg.vocab)
+
+s0 = init_train_state(cfg, opt, jax.random.PRNGKey(0), policy)
+with mesh:
+    exact = jax.jit(make_train_step(cfg, ctx, opt))
+    comp = jax.jit(make_train_step(cfg, ctx, opt, grad_compression="int8"))
+    ne, _ = exact(s0, batch)
+    s1 = init_train_state(cfg, opt, jax.random.PRNGKey(0), policy)
+    nc, _ = comp(s1, batch)
+errs = []
+for a, b in zip(jax.tree.leaves(ne.params), jax.tree.leaves(nc.params)):
+    a, b = np.asarray(a, np.float32), np.asarray(b, np.float32)
+    denom = np.abs(a).max() + 1e-9
+    errs.append(np.abs(a - b).max() / denom)
+assert max(errs) < 0.1, max(errs)
+print("OK")
+""")
+
+
+@pytest.mark.slow
+def test_pipeline_parallel_matches_sequential():
+    _run(HEADER + """
+from repro.parallel.pp import pipeline_apply
+mesh = jax.make_mesh((4, 2), ("pod", "model"))
+rng = np.random.default_rng(0)
+ws = jnp.asarray(rng.normal(size=(4, 16, 16)) * 0.3, jnp.float32)
+xs = jnp.asarray(rng.normal(size=(8, 2, 16)), jnp.float32)
+block = lambda w, x: jnp.tanh(x @ w)
+out = pipeline_apply(block, ws, xs, mesh=mesh, axis="pod")
+ref = xs
+for s in range(4):
+    ref = jax.vmap(lambda x: block(ws[s], x))(ref)
+np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5,
+                           atol=1e-5)
+print("OK")
+""")
+
+
+@pytest.mark.slow
+def test_elastic_replan_and_reshard(tmp_path):
+    """Train on 8 devices, checkpoint, reload re-sharded for 4 devices."""
+    _run(HEADER + f"""
+from repro import configs
+from repro.models import transformer as tf
+from repro.optim.adamw import AdamW
+from repro.train.step import init_train_state, make_train_step
+from repro.data.synthetic import make_batch
+from repro.checkpoint.manager import CheckpointManager
+from repro.launch import elastic
+from repro.launch.mesh import make_context
+
+cfg = configs.get_config("olmo-1b").smoke()
+opt = AdamW(learning_rate=1e-3)
+policy = tf.build_policy(cfg)
+
+plan8 = elastic.plan_mesh(8, model_degree=4, global_batch=8)
+mesh8, ctx8 = elastic.build(plan8)
+state = init_train_state(cfg, opt, jax.random.PRNGKey(0), policy)
+with mesh8:
+    step8 = jax.jit(make_train_step(cfg, ctx8, opt))
+    state, _ = step8(state, make_batch(0, 0, 8, 64, cfg.vocab))
+mgr = CheckpointManager({str(tmp_path)!r}, async_save=False)
+mgr.save(1, state)
+
+# "lose" half the fleet -> replan on 4 devices, keep TP degree
+plan4 = elastic.plan_mesh(4, model_degree=4, global_batch=8)
+assert plan4.mesh_shape == (1, 4)
+mesh4, ctx4 = elastic.build(plan4)
+_, restored = mgr.restore_latest(state)
+with mesh4:
+    step4 = jax.jit(make_train_step(cfg, ctx4, opt))
+    out, m = step4(restored, make_batch(0, 1, 8, 64, cfg.vocab))
+assert np.isfinite(float(m["loss"]))
+print("OK")
+""")

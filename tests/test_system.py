@@ -1,0 +1,84 @@
+"""End-to-end system test: the paper's full pipeline on a reduced model.
+
+train 4-bit -> EAGL + ALPS + HAWQ + baseline gains -> knapsack at a budget
+-> mixed-precision fine-tune -> quantized serving.  This is Figure 1 of the
+paper as one test.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import knapsack
+from repro.core.metrics import alps, baselines, eagl
+from repro.data.synthetic import make_batch
+from repro.models import transformer as tf
+from repro.optim.adamw import AdamW
+from repro.parallel.context import local_context
+from repro.serve.engine import ServeEngine, quantize_for_serving
+from repro.train.step import init_train_state, make_train_step
+
+
+@pytest.fixture(scope="module")
+def trained():
+    cfg = configs.get_config("olmo-1b").smoke()
+    ctx = local_context()
+    policy = tf.build_policy(cfg)
+    opt = AdamW(learning_rate=2e-3, grad_clip=1.0)
+    step = jax.jit(make_train_step(cfg, ctx, opt), donate_argnums=(0,))
+    state = init_train_state(cfg, opt, jax.random.PRNGKey(0), policy)
+    for i in range(40):
+        state, metrics = step(state, make_batch(0, i, 8, 128, cfg.vocab))
+    return cfg, ctx, policy, opt, state, float(metrics["loss"])
+
+
+def test_full_pipeline(trained):
+    cfg, ctx, policy, opt, state, base_loss = trained
+
+    # --- EAGL gains (no data needed) ---
+    g_eagl = eagl.eagl_gains(
+        policy, lambda u, t: tf.fetch_unit_tensor(state.params, u, t),
+        impl="ref")
+    assert len(g_eagl) == len(policy.selectable_units())
+
+    # --- ALPS gains (1-epoch-equivalent probes from the 4-bit checkpoint) ---
+    step = jax.jit(make_train_step(cfg, ctx, opt))
+
+    def probe(policy=None, steps=4):
+        pa = jax.tree.map(jnp.asarray, policy.as_arrays())
+        st = state._replace(policy=pa)
+        losses = []
+        for i in range(steps):
+            st, m = step(st, make_batch(1, i, 4, 128, cfg.vocab))
+            losses.append(float(m["loss"]))
+        return {"loss": float(np.mean(losses)),
+                "accuracy": float(m["accuracy"])}
+
+    g_alps = alps.alps_gains(policy, probe_finetune=probe,
+                             cfg=alps.AlpsConfig(steps_per_probe=2))
+    assert set(g_alps) == set(g_eagl)
+
+    # --- knapsack selection at a 75% budget, all methods ---
+    for gains in (g_eagl, g_alps, baselines.uniform_gains(policy)):
+        res = knapsack.select_for_budget(policy, gains, 0.75)
+        mixed = policy.apply_selection(res.take)
+        hi = policy.uniform(4.0).cost_bmacs_per_token()
+        assert mixed.cost_bmacs_per_token() <= 0.75 * hi * 1.01
+
+    # --- fine-tune the EAGL selection; loss should stay in the ballpark ---
+    res = knapsack.select_for_budget(policy, g_eagl, 0.75)
+    mixed = policy.apply_selection(res.take)
+    pa_mixed = jax.tree.map(jnp.asarray, mixed.as_arrays())
+    st = state._replace(policy=pa_mixed)
+    for i in range(20):
+        st, m = step(st, make_batch(0, 100 + i, 8, 128, cfg.vocab))
+    assert float(m["loss"]) < base_loss + 1.0
+
+    # --- quantized serving from the mixed checkpoint ---
+    qparams = quantize_for_serving(st.params, mixed.as_arrays(), cfg)
+    engine = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa_mixed,
+                         ctx=ctx, max_seq=64)
+    out = engine.generate(jnp.asarray([[1, 2, 3, 4]], jnp.int32), n_new=4)
+    assert out.shape == (1, 4)
+    assert mixed.compression_ratio() > 6.0       # ≥4-bit-ish vs FP32

@@ -1,0 +1,103 @@
+"""Train step/loop: learning, microbatch equivalence, loop fault-tolerance."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.data.synthetic import SyntheticLM, make_batch
+from repro.models import transformer as tf
+from repro.optim.adamw import AdamW
+from repro.parallel.context import local_context
+from repro.train.loop import TrainLoop, TrainLoopConfig
+from repro.train.step import init_train_state, make_train_step
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = configs.get_config("olmo-1b").smoke()
+    ctx = local_context()
+    policy = tf.build_policy(cfg)
+    opt = AdamW(learning_rate=2e-3, grad_clip=1.0)
+    return cfg, ctx, policy, opt
+
+
+def test_loss_decreases(setup):
+    cfg, ctx, policy, opt = setup
+    step = jax.jit(make_train_step(cfg, ctx, opt))
+    state = init_train_state(cfg, opt, jax.random.PRNGKey(0), policy)
+    first = last = None
+    for i in range(60):
+        state, m = step(state, make_batch(0, i, 8, 128, cfg.vocab))
+        if i < 5:
+            first = float(m["loss"]) if first is None else first
+        last = float(m["loss"])
+    assert last < first - 0.5, (first, last)
+
+
+def test_microbatch_equivalence(setup):
+    cfg, ctx, policy, opt = setup
+    batch = make_batch(0, 0, 8, 128, cfg.vocab)
+    s1 = init_train_state(cfg, opt, jax.random.PRNGKey(1), policy)
+    s2 = init_train_state(cfg, opt, jax.random.PRNGKey(1), policy)
+    step1 = jax.jit(make_train_step(cfg, ctx, opt, n_microbatches=1))
+    step4 = jax.jit(make_train_step(cfg, ctx, opt, n_microbatches=4))
+    n1, _ = step1(s1, batch)
+    n4, _ = step4(s2, batch)
+    flat1 = jax.tree.leaves(n1.params)
+    flat4 = jax.tree.leaves(n4.params)
+    for a, b in zip(flat1, flat4):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=5e-3, atol=5e-4)
+
+
+def test_loop_checkpoints_and_resumes(setup, tmp_path):
+    cfg, ctx, policy, opt = setup
+    step = jax.jit(make_train_step(cfg, ctx, opt), donate_argnums=(0,))
+    data = SyntheticLM(seed=0, batch=4, seq=64, vocab=cfg.vocab)
+    loop = TrainLoop(step, data,
+                     TrainLoopConfig(total_steps=10, checkpoint_every=5,
+                                     log_every=0),
+                     ckpt_dir=str(tmp_path))
+    state = init_train_state(cfg, opt, jax.random.PRNGKey(0), policy)
+    state = loop.run(state)
+    assert loop.manager.latest_step() == 10
+
+    # resume continues from 10 and runs to 14
+    data2 = SyntheticLM(seed=0, batch=4, seq=64, vocab=cfg.vocab)
+    loop2 = TrainLoop(step, data2,
+                      TrainLoopConfig(total_steps=14, checkpoint_every=5,
+                                      log_every=0),
+                      ckpt_dir=str(tmp_path))
+    fresh = init_train_state(cfg, opt, jax.random.PRNGKey(9), policy)
+    resumed = loop2.try_resume(fresh)
+    assert int(np.asarray(resumed.step)) == 10
+    assert data2.step == 10
+    out = loop2.run(resumed)
+    assert int(np.asarray(out.step)) == 14
+
+
+def test_straggler_detection(setup):
+    cfg, ctx, policy, opt = setup
+    import time
+
+    calls = {"n": 0}
+    real_step = jax.jit(make_train_step(cfg, ctx, opt))
+    data = SyntheticLM(seed=0, batch=2, seq=64, vocab=cfg.vocab)
+    # warm the compile cache so the EWMA tracks steady-state step time
+    warm = init_train_state(cfg, opt, jax.random.PRNGKey(1), policy)
+    real_step(warm, data.next())
+    data.step = 0
+
+    def slow_step(state, batch):
+        calls["n"] += 1
+        if calls["n"] == 6:
+            time.sleep(1.0)
+        return real_step(state, batch)
+    loop = TrainLoop(slow_step, data,
+                     TrainLoopConfig(total_steps=8, log_every=0,
+                                     straggler_factor=3.0))
+    state = init_train_state(cfg, opt, jax.random.PRNGKey(0), policy)
+    loop.run(state)
+    assert 5 in loop.straggler_steps or 6 in loop.straggler_steps
