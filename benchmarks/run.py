@@ -7,10 +7,13 @@ Prints ``name,us_per_call,derived`` CSV.  ``--quick`` shrinks sizes for CI.
   knapsack      §3.1: knapsack solve time at paper-scale item counts
   additivity    Appendix A: pairwise additivity correlation R
   quant         Table 1 (TPU terms): packed-weight matmul bytes/time
+  serve         deployment: decode tokens/sec + weight bytes/token per
+                policy (also written to BENCH_serve.json for CI)
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -23,11 +26,23 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json-out", default="BENCH_serve.json",
+                    help="where the serve benchmark drops its JSON report")
     args = ap.parse_args()
     only = args.only.split(",") if args.only else None
     q = args.quick
 
     print("name,us_per_call,derived")
+
+    if only is None or "serve" in only:
+        from benchmarks import serve_bench
+        out = serve_bench.run(quick=q)
+        for name, r in out.items():
+            _row(f"serve/{name}", r["us_per_token"],
+                 f"tokens_per_s={r['tokens_per_s']:.1f};"
+                 f"weight_bytes_per_token={r['weight_bytes_per_token']:.0f}")
+        with open(args.json_out, "w") as f:
+            json.dump(out, f, indent=2, sort_keys=True)
 
     if only is None or "knapsack" in only:
         from benchmarks import knapsack_bench

@@ -1,0 +1,90 @@
+"""Serving decode benchmark: tokens/sec + weight bytes streamed per token.
+
+The paper's deployment claim (NorthPole speed/energy, re-derived for TPU —
+DESIGN.md §3): decode is HBM-bound, so throughput tracks the weight bytes
+streamed per generated token.  This benchmark measures the scanned-chunk
+decode path of ServeEngine under uniform int8 / int4 / int2 policies and a
+knapsack-mixed 4/2-bit policy, and reports the roofline quantity
+(policy-bits * n_params / 8) next to the measured wall rate.
+
+Wall numbers on CPU hosts are reference-path times, not TPU; the
+bytes-per-token column is host-independent.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core import knapsack
+from repro.models import transformer as tf
+from repro.parallel.context import local_context
+from repro.serve import ServeEngine, quantize_for_serving
+
+
+def _policies(policy):
+    mixed = policy.apply_selection(
+        knapsack.select_for_budget(policy, knapsack.synthetic_gains(policy),
+                                   budget_frac=0.7).take)
+    return [
+        ("int8", policy.uniform(8.0)),
+        ("int4", policy.uniform(4.0)),
+        ("int2", policy.uniform(2.0)),
+        ("mixed_4_2@0.70", mixed),
+    ]
+
+
+def run(quick: bool = False, batch: int = 4, prompt_len: int = 16,
+        n_chunks: int = 2, arch: str = "olmo-1b") -> dict:
+    if quick:
+        batch, n_chunks = 2, 1
+    cfg = configs.get_config(arch).smoke()
+    ctx = local_context()
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    policy = tf.build_policy(cfg)
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (batch, prompt_len)),
+                         jnp.int32)
+
+    out = {}
+    for name, pol in _policies(policy):
+        qparams = quantize_for_serving(params, pol.as_arrays(), cfg)
+        pa = jax.tree.map(jnp.asarray, pol.as_arrays())
+        engine = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa,
+                             ctx=ctx,
+                             max_seq=prompt_len + (n_chunks + 1) * 16 + 16)
+        key = jax.random.PRNGKey(0)
+        _, pre = engine.prefill(tokens)
+        from repro.serve import kv_cache
+        cache = kv_cache.splice_prefill(
+            engine.new_cache(batch), pre,
+            jnp.full((batch,), prompt_len, jnp.int32))
+        tok = jnp.zeros((batch, 1), jnp.int32)
+        # warmup compiles the scanned decode chunk
+        cache, tok, _ = engine.decode_chunk_step(cache, tok, key, 1)
+        jax.block_until_ready(cache.layers)
+        t0 = time.perf_counter()
+        for c in range(n_chunks):
+            cache, tok, toks = engine.decode_chunk_step(cache, tok, key,
+                                                        c + 2)
+        jax.block_until_ready(toks)
+        dt = time.perf_counter() - t0
+        n_tok = batch * engine.decode_chunk * n_chunks
+        out[name] = {
+            "tokens_per_s": n_tok / dt,
+            "us_per_token": dt / n_tok * 1e6,
+            "weight_bytes_per_token": pol.model_bits() / 8.0,
+            "decode_chunk": engine.decode_chunk,
+            "batch": batch,
+        }
+    return out
+
+
+if __name__ == "__main__":
+    for name, r in run(quick=True).items():
+        print(f"{name}: {r['tokens_per_s']:.0f} tok/s "
+              f"({r['us_per_token']:.0f}us/tok) "
+              f"weight_bytes/tok={r['weight_bytes_per_token']:.0f}")

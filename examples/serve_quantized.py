@@ -3,9 +3,12 @@
   PYTHONPATH=src python examples/serve_quantized.py
 
 Shows the deployment path the paper targets: the mixed-precision checkpoint
-is converted to packed integer storage and served with a KV cache — weight
-bytes drop 8×+ vs FP32 (4×+ vs bf16), which on TPU v5e is the decode-time
-roofline win (EXPERIMENTS.md §Perf).
+is converted to packed integer storage and served through the continuous-
+batching scheduler — unequal prompt lengths share one fixed-slot batch, a
+request is evicted the moment it hits EOS or its token budget, and decode
+runs as one scanned dispatch per chunk.  Weight bytes drop 8×+ vs FP32
+(4×+ vs bf16), which on TPU v5e is the decode-time roofline win
+(EXPERIMENTS.md §Perf).
 """
 import jax
 import jax.numpy as jnp
@@ -18,7 +21,8 @@ from repro.data.synthetic import make_batch
 from repro.models import transformer as tf
 from repro.optim.adamw import AdamW
 from repro.parallel.context import local_context
-from repro.serve.engine import ServeEngine, quantize_for_serving
+from repro.serve import (Request, ServeEngine, quantize_for_serving,
+                         serve_all)
 from repro.train.step import init_train_state, make_train_step
 
 cfg = configs.get_config("internlm2-1.8b").smoke()
@@ -42,15 +46,24 @@ qparams = quantize_for_serving(state.params, mixed.as_arrays(), cfg)
 n_params = sum(u.n_params for u in policy.units)
 print(f"serving layout: {mixed.compression_ratio():.1f}x smaller than FP32 "
       f"({n_params/1e6:.1f}M params -> "
-      f"{mixed.model_bits()/8/1e6:.1f} MB)")
+      f"{mixed.model_bits()/8/1e6:.1f} MB, "
+      f"{mixed.model_bits()/8/1e3:.0f} kB streamed per decoded token)")
 
 engine = ServeEngine(cfg=cfg, params=qparams,
                      policy_arrays=jax.tree.map(jnp.asarray,
                                                 mixed.as_arrays()),
                      ctx=ctx, max_seq=128)
+
+# continuous batching: 4 requests with UNEQUAL prompts through 2 slots
 rng = np.random.default_rng(0)
-prompts = jnp.asarray(rng.integers(0, cfg.vocab, (4, 16)), jnp.int32)
-out = engine.generate(prompts, n_new=16)
-print("batched greedy decode (4 requests x 16 new tokens):")
-for i, row in enumerate(np.asarray(out)):
-    print(f"  req{i}: {row.tolist()}")
+requests = [
+    Request(uid=f"req{i}", prompt=rng.integers(0, cfg.vocab, n).tolist(),
+            max_new_tokens=16)
+    for i, n in enumerate((16, 9, 24, 12))
+]
+results = serve_all(engine, requests, n_slots=2)
+print("continuous-batching greedy decode (4 requests, 2 slots):")
+for r in requests:
+    c = results[r.uid]
+    print(f"  {c.uid} (prompt {c.prompt_len:2d} toks, {c.finish_reason}): "
+          f"{c.tokens}")

@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# Tier-1 CI: dev deps -> test suite -> quick serve/knapsack benchmarks.
+#
+#   bash scripts/ci.sh
+#
+# Emits BENCH_serve.json (decode tokens/sec + weight bytes/token per
+# precision policy) in the repo root.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+# Dev-only deps (hypothesis, pytest). Offline/airgapped hosts keep going:
+# the suite importorskips hypothesis-based property tests.
+python -m pip install -r requirements-dev.txt \
+    || echo "WARN: dev-dep install failed (offline?); property tests will skip"
+
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
+
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.run --quick --only serve,knapsack
+
+test -f BENCH_serve.json && echo "BENCH_serve.json written"

@@ -72,32 +72,47 @@ def solve(keys: Sequence[str], values: Sequence[float], weights: Sequence[float]
                               float(w_raw.sum()), capacity, n, 0.0,
                               time.perf_counter() - t0)
     if capacity <= 0:
-        return KnapsackResult({k: False for k in keys}, 0.0, 0.0, capacity, n,
-                              0.0, time.perf_counter() - t0)
+        # Infeasible budget for anything with positive cost — but zero-cost
+        # items fit a capacity-0 budget exactly and must still be taken.
+        take0 = (w_raw == 0.0) & (capacity >= 0)
+        chosen0 = {k: bool(take0[i]) for i, k in enumerate(keys)}
+        return KnapsackResult(chosen0, float(v_raw[take0].sum()), 0.0,
+                              capacity, n, 0.0, time.perf_counter() - t0)
 
     # Integer grids. Weights are FLOORED so every truly-feasible subset stays
     # feasible on the grid (optimum never lost); realized weight can overshoot
     # the capacity by at most n_items × resolution (reported in the result).
+    # Items that floor to the 0-bucket (w < resolution) are FREE on the grid:
+    # they are taken unconditionally and never enter the DP — clamping them up
+    # to a full bucket would charge them ~resolution of phantom cost and could
+    # wrongly exclude a truly-feasible item at a tight budget.  "Free" still
+    # requires TRUE feasibility (w_raw <= capacity): at coarse resolutions an
+    # item can floor to 0 while individually busting the budget, and such an
+    # item must never be selected.
     v = quantize_values(v_raw)
     resolution = max(capacity / max_capacity_buckets,
                      max(w_raw.max() / max_capacity_buckets, 1e-30))
-    w = np.maximum(np.floor(w_raw / resolution).astype(np.int64), 1)
+    w = np.floor(w_raw / resolution).astype(np.int64)
     cap = int(np.floor(capacity / resolution))
+    free = (w == 0) & (w_raw <= capacity)
 
     # DP over capacity, keep per-item take bits for reconstruction.
     dp = np.zeros(cap + 1, np.int64)
     take = np.zeros((n, cap + 1), np.bool_)
     for i in range(n):
         wi, vi = int(w[i]), int(v[i])
-        if wi > cap:
+        # skipped: free items (always in), items past the grid capacity, and
+        # 0-bucket items that are NOT free (w_raw > capacity: infeasible in
+        # the true problem, and weight-0 DP entries would be degenerate)
+        if free[i] or wi == 0 or wi > cap:
             continue
         cand = dp[:-wi] + vi
         improved = cand > dp[wi:]
         dp[wi:] = np.where(improved, cand, dp[wi:])
         take[i, wi:] = improved
 
-    # Reconstruct.
-    chosen = {k: False for k in keys}
+    # Reconstruct; free (0-bucket) items are always in.
+    chosen = {k: bool(free[i]) for i, k in enumerate(keys)}
     c = cap
     for i in range(n - 1, -1, -1):
         if take[i, c]:
@@ -107,6 +122,17 @@ def solve(keys: Sequence[str], values: Sequence[float], weights: Sequence[float]
     tw = float(w_raw[[chosen[k] for k in keys]].sum())
     return KnapsackResult(chosen, tv, tw, capacity, n, float(resolution),
                           time.perf_counter() - t0)
+
+
+def synthetic_gains(policy) -> Dict[str, float]:
+    """Deterministic pseudo-gains over a policy's selectable units.
+
+    For demos/benches/tests that need *some* heterogeneous knapsack input
+    without computing a real metric — one definition so the benchmarked
+    mixed policy and the tested mixed policy cannot silently diverge.
+    """
+    return {u.name: float((i * 7919) % 13 + 1)
+            for i, u in enumerate(policy.selectable_units())}
 
 
 def select_for_budget(policy, gains: Dict[str, float], budget_frac: float,

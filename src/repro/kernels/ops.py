@@ -40,9 +40,14 @@ def histogram(codes: jax.Array, n_bins: int, impl: str = "auto") -> jax.Array:
 
 
 def entropy_bits(codes: jax.Array, n_bins: int, impl: str = "auto") -> jax.Array:
-    counts = histogram(codes, n_bins, impl=impl)
-    p = counts / jnp.maximum(jnp.sum(counts), 1.0) + 1e-10
-    return -jnp.sum(p * jnp.log2(p))
+    """H(p̂) in bits with masked p·log2(p): empty bins contribute exactly 0.
+
+    (A flat +eps on every bin would un-normalize p and leak -eps·log2(eps)
+    per empty bin into H, which biases wide histograms — n_bins enters H.)
+    Only the histogram dispatches per-impl; the counts->H formula is shared
+    with the ref path (ref.entropy_from_counts).
+    """
+    return ref.entropy_from_counts(histogram(codes, n_bins, impl=impl))
 
 
 def lsq_fakequant(x: jax.Array, step: jax.Array, bits, impl: str = "auto",

@@ -19,11 +19,19 @@ def histogram(codes: jax.Array, n_bins: int) -> jax.Array:
     return jnp.sum(one_hot.astype(jnp.float32), axis=0)
 
 
+def entropy_from_counts(counts: jax.Array) -> jax.Array:
+    """H(p̂) in bits (paper Eq. 3) with masked p·log2(p) — empty bins
+    contribute exactly 0, so p stays normalized and H is independent of how
+    many unused bins the histogram carries.  Single definition: the kernel
+    dispatch path (kernels/ops.py) shares this post-processing, so the ref
+    and Pallas paths cannot drift."""
+    p = counts / jnp.maximum(jnp.sum(counts), 1.0)
+    plogp = jnp.where(p > 0, p * jnp.log2(jnp.maximum(p, 1e-30)), 0.0)
+    return -jnp.sum(plogp)
+
+
 def entropy_bits(codes: jax.Array, n_bins: int) -> jax.Array:
-    """H(p̂) in bits (paper Eq. 3 / Appendix E; +1e-10 exactly as Appendix E)."""
-    counts = histogram(codes, n_bins)
-    p = counts / jnp.maximum(jnp.sum(counts), 1.0) + 1e-10
-    return -jnp.sum(p * jnp.log2(p))
+    return entropy_from_counts(histogram(codes, n_bins))
 
 
 # ------------------------------------------------------------ lsq_fakequant

@@ -69,6 +69,23 @@ def chunked_attention(q: jax.Array,
     return jnp.transpose(out, (0, 2, 1, 3)).astype(q.dtype)   # (B,S,H,D)
 
 
+def cache_write(cache_arr: jax.Array, new: jax.Array,
+                positions: jax.Array) -> jax.Array:
+    """Write one decode-step entry per request into a (B, S_max, ...) cache.
+
+    new: (B, 1, ...) — the step's K/V row; positions: (B, 1) absolute write
+    positions, PER REQUEST (continuous batching slots requests with unequal
+    prompt lengths into one batch, so there is no shared scalar position).
+    Implemented as a batched row scatter (O(B·H·D) traffic, in-place
+    inside a scan carry) rather than a one-hot select over the whole
+    buffer; ``mode='drop'`` makes out-of-range positions (>= S_max, e.g.
+    an evicted slot that ran past its window) write nothing.
+    """
+    b = cache_arr.shape[0]
+    return cache_arr.at[jnp.arange(b), positions[:, 0]].set(
+        new[:, 0].astype(cache_arr.dtype), mode="drop")
+
+
 def _repeat_kv(x: jax.Array, group: int) -> jax.Array:
     """(B, S, Hkv, D) -> (B, S, Hkv*group, D)."""
     if group == 1:
@@ -111,12 +128,11 @@ def gqa_apply(p, x, bits, cfg, mode: str, cache, positions,
         q, k = common.apply_rope(q, cos, sin), common.apply_rope(k, cos, sin)
 
     if mode == "decode":
-        # cache: {'k','v'} (B, S_max, Hkv, dh); positions: (B, 1) abs pos.
-        pos = positions[0, 0]
-        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
-                                          (0, pos, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
-                                          (0, pos, 0, 0))
+        # cache: {'k','v'} (B, S_max, Hkv, dh); positions: (B, 1) abs pos,
+        # per request (slots in a continuous batch decode at different
+        # positions).
+        ck = cache_write(cache["k"], k, positions)
+        cv = cache_write(cache["v"], v, positions)
         kk = _repeat_kv(ck, group)
         vv = _repeat_kv(cv, group)
         logits = jnp.einsum("bqhd,bshd->bhqs", q.astype(jnp.float32),
@@ -204,12 +220,8 @@ def mla_apply(p, x, bits, cfg, mode: str, cache, positions,
         kvl, h, dv)
 
     if mode == "decode":
-        pos = positions[0, 0]
-        ckv = jax.lax.dynamic_update_slice(
-            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, pos, 0))
-        ckr = jax.lax.dynamic_update_slice(
-            cache["k_rope"], k_rope[:, :, 0].astype(cache["k_rope"].dtype),
-            (0, pos, 0))
+        ckv = cache_write(cache["c_kv"], c_kv, positions)
+        ckr = cache_write(cache["k_rope"], k_rope[:, :, 0], positions)
         # Absorbed decode: q̃ = W_uk^T q_nope, attend over c_kv directly.
         q_t = jnp.einsum("bqhd,chd->bqhc", q_nope,
                          wk_b_q.astype(q_nope.dtype))         # (B,1,H,kvl)
@@ -259,17 +271,17 @@ def mla_apply(p, x, bits, cfg, mode: str, cache, positions,
 
 
 # ------------------------------------------------------------------- cache
-def init_gqa_cache(cfg, batch: int, max_seq: int) -> dict:
+def init_gqa_cache(cfg, batch: int, max_seq: int, dtype=None) -> dict:
+    dtype = cfg.cache_dtype if dtype is None else dtype
     return {
-        "k": jnp.zeros((batch, max_seq, cfg.n_kv_heads, cfg.head_dim),
-                       cfg.cache_dtype),
-        "v": jnp.zeros((batch, max_seq, cfg.n_kv_heads, cfg.head_dim),
-                       cfg.cache_dtype),
+        "k": jnp.zeros((batch, max_seq, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, max_seq, cfg.n_kv_heads, cfg.head_dim), dtype),
     }
 
 
-def init_mla_cache(cfg, batch: int, max_seq: int) -> dict:
+def init_mla_cache(cfg, batch: int, max_seq: int, dtype=None) -> dict:
+    dtype = cfg.cache_dtype if dtype is None else dtype
     return {
-        "c_kv": jnp.zeros((batch, max_seq, cfg.kv_lora_rank), cfg.cache_dtype),
-        "k_rope": jnp.zeros((batch, max_seq, cfg.qk_rope_dim), cfg.cache_dtype),
+        "c_kv": jnp.zeros((batch, max_seq, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_seq, cfg.qk_rope_dim), dtype),
     }

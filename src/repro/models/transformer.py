@@ -95,11 +95,12 @@ def block_apply(p, x, bits, cfg, ctx, bdef: BlockDef, mode: str, cache,
     return x, new_cache, aux
 
 
-def init_block_cache(cfg, bdef: BlockDef, batch: int, max_seq: int):
+def init_block_cache(cfg, bdef: BlockDef, batch: int, max_seq: int,
+                     cache_dtype=None):
     if bdef.mixer in ("gqa",):
-        return attn.init_gqa_cache(cfg, batch, max_seq)
+        return attn.init_gqa_cache(cfg, batch, max_seq, cache_dtype)
     if bdef.mixer == "mla":
-        return attn.init_mla_cache(cfg, batch, max_seq)
+        return attn.init_mla_cache(cfg, batch, max_seq, cache_dtype)
     if bdef.mixer == "mamba":
         return ssm.init_mamba_state(cfg, batch)
     if bdef.mixer == "mlstm":
@@ -146,16 +147,33 @@ def init_params(cfg, key) -> dict:
     return params
 
 
-def init_caches(cfg, batch: int, max_seq: int) -> dict:
+def init_caches(cfg, batch: int, max_seq: int, cache_dtype=None) -> dict:
+    """Preallocated per-layer decode caches (attention: (B, S_max, ...)).
+
+    Cache contract (serve/kv_cache.py builds on this):
+      - prefill returns caches sized to the processed sequence; they are
+        spliced into these preallocated buffers at position 0.
+      - decode writes one row per request at its OWN absolute position
+        (attention.cache_write), so requests in a batch may sit at
+        different sequence offsets (continuous batching).
+      - rows at/beyond a request's valid length are garbage until
+        overwritten; the decode attention mask (s_pos <= position) keeps
+        them unread.
+      - ``cache_dtype`` overrides cfg.cache_dtype (serving holds the cache
+        in the compute dtype for bit-exact prefill->decode parity;
+        cfg.cache_dtype stays the memory-saving default for training runs).
+    """
     caches: dict = {}
     for i, bdef in enumerate(cfg.prefix):
-        caches[f"prefix{i}"] = init_block_cache(cfg, bdef, batch, max_seq)
+        caches[f"prefix{i}"] = init_block_cache(cfg, bdef, batch, max_seq,
+                                                cache_dtype)
     if cfg.n_repeats:
         def stack(c):
             return jax.tree.map(
                 lambda l: jnp.broadcast_to(l, (cfg.n_repeats,) + l.shape), c)
         caches["pat"] = {
-            f"p{j}": stack(init_block_cache(cfg, bd, batch, max_seq))
+            f"p{j}": stack(init_block_cache(cfg, bd, batch, max_seq,
+                                            cache_dtype))
             for j, bd in enumerate(cfg.pattern)}
     return caches
 

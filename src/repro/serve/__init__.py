@@ -1,3 +1,19 @@
-from repro.serve.engine import ServeEngine, quantize_for_serving
+"""Serving subsystem: quantized weights, KV cache, sampling, scheduling.
 
-__all__ = ["ServeEngine", "quantize_for_serving"]
+  engine.py     jitted prefill + scanned-chunk decode (ServeEngine)
+  kv_cache.py   preallocated (B, S_max) cache with valid-length tracking
+  sampling.py   greedy / temperature / top-k under fixed PRNG threading
+  scheduler.py  continuous batching: slot admission, per-request stop/evict
+"""
+from repro.serve.engine import ServeEngine, quantize_for_serving
+from repro.serve.kv_cache import ServeCache, init_cache, splice_prefill
+from repro.serve.sampling import GREEDY, SamplerConfig, sample
+from repro.serve.scheduler import (Completion, ContinuousBatchingScheduler,
+                                   Request, serve_all)
+
+__all__ = [
+    "ServeEngine", "quantize_for_serving",
+    "ServeCache", "init_cache", "splice_prefill",
+    "SamplerConfig", "GREEDY", "sample",
+    "Request", "Completion", "ContinuousBatchingScheduler", "serve_all",
+]

@@ -1,4 +1,4 @@
-"""Serving engine: real integer-quantized weights, prefill + batched decode.
+"""Serving engine: real integer-quantized weights, prefill + scanned decode.
 
 ``quantize_for_serving`` converts a QAT checkpoint into the serve layout:
 every quant-unit's weights become **int4 codes + fp32 scale** (2-bit layers
@@ -7,20 +7,41 @@ the extra 2-bit packing is a kernel-granularity optimization handled by
 kernels/quant_matmul.py on TPU — DESIGN.md §3).  Embedding/LM-head codes
 are int8 (pinned 8-bit).
 
+``ServeEngine`` is the compute layer of the serving subsystem:
+
+  * prefill — one jitted call over the (left-aligned, right-padded) prompt
+    batch; per-request prompt lengths select each request's last valid
+    logits, so a batch never needs a shared prompt length.
+  * decode  — a ``jax.lax.scan`` over a fixed chunk of steps: decoding N
+    tokens is one dispatch, not N (the per-token Python loop paid one
+    dispatch + argmax sync per token).
+  * the KV cache (serve/kv_cache.py) is preallocated (B, S_max) with
+    explicit valid-length tracking and lives in the COMPUTE dtype by
+    default — holding it in bf16 (cfg.cache_dtype) made greedy decode
+    diverge from the full-context reference: the bf16 rounding of prefill
+    K/V is amplified to a full code step by the activation fake-quant
+    grid, flipping argmax from the third generated token.
+
+Scheduling (admission, eviction, continuous batching) lives one layer up
+in serve/scheduler.py; sampling policies in serve/sampling.py.
+
 The decode-time roofline is HBM-bound; int4 streams 4× fewer weight bytes
 than bf16 — this is the paper's NorthPole speed/energy claim re-derived for
-TPU and measured in EXPERIMENTS.md §Perf.
+TPU and measured by benchmarks/serve_bench.py.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import quant
 from repro.models import transformer as tf
+from repro.serve import kv_cache, sampling
+from repro.serve.kv_cache import ServeCache
 
 
 def _quantize_qdense(p: dict, bits) -> dict:
@@ -34,7 +55,6 @@ def _quantize_qdense(p: dict, bits) -> dict:
     bb = b.reshape(b.shape + (1,) * max(w.ndim - b.ndim, 0))
     codes = quant.quantize_int(w, stepb, bb)
     # static dtype decision (bits come from the *host-side* policy arrays)
-    import numpy as np
     int_dtype = jnp.int8 if float(np.max(np.asarray(bits))) > 4 else jnp.int4
     return {"wq": codes.astype(int_dtype), "scale": step, "sa": p["sa"]}
 
@@ -89,61 +109,187 @@ def _bits_for(policy_arrays, slot_of, path) -> Any:
     return policy_arrays[group][slot]
 
 
+RECURRENT_MIXERS = ("mamba", "mlstm", "slstm")
+
+
+def has_recurrent_state(cfg) -> bool:
+    """True if any block carries per-token recurrent state (no sequence
+    axis, no position masking) — right-padded prompts would integrate the
+    pad tokens into that state, so such configs must prefill at the exact
+    prompt length."""
+    blocks = tuple(cfg.prefix) + tuple(cfg.pattern)
+    return any(b.mixer in RECURRENT_MIXERS for b in blocks)
+
+
 @dataclasses.dataclass
 class ServeEngine:
-    """Batched greedy decoding with a prefilled KV cache.
+    """Batched decoding with a prefilled, length-tracked KV cache.
 
-    All requests in a batch share a prompt length (static-shape serving;
-    production continuous batching slots requests into fixed (B, S_max)
-    buffers the same way).
+    Requests are slotted into fixed (B, S_max) buffers; per-request prompt
+    lengths ride in as a ``lengths`` array (positions are masked per
+    request), so unequal prompts share one batch.  Decode runs as scanned
+    chunks of ``decode_chunk`` steps — one dispatch per chunk.
+
+    Unequal-length batches require every mixer's state to be padding-proof
+    (attention caches are: garbage rows stay masked).  Configs with
+    recurrent blocks (``has_recurrent_state``) reject unequal lengths —
+    the scheduler serves them by prefilling each prompt at its exact
+    length instead of a padded bucket.
     """
     cfg: Any
     params: Any                     # serve-layout params
     policy_arrays: Any
     ctx: Any
     max_seq: int
+    decode_chunk: int = 16
+    sampler: sampling.SamplerConfig = sampling.GREEDY
+    cache_dtype: Any = None         # None -> cfg.compute_dtype (exact parity)
 
     def __post_init__(self):
+        if self.cache_dtype is None:
+            self.cache_dtype = self.cfg.compute_dtype
+        # The model's prefill/decode paths emit cache entries in
+        # cfg.cache_dtype; serving pins that to the engine's cache dtype so
+        # the prefill->decode handoff never round-trips through a narrower
+        # type than the attention compute (the old bf16 round-trip is what
+        # broke greedy parity with the full-context reference).
+        self._cfg = self.cfg.replace(cache_dtype=self.cache_dtype)
+        self.has_recurrent_state = has_recurrent_state(self.cfg)
         self._prefill = jax.jit(self._prefill_impl)
-        self._decode = jax.jit(self._decode_impl)
+        # n_steps is the scan length -> static (one compile per distinct
+        # chunk size; generate uses at most two: decode_chunk + one tail)
+        self._decode = jax.jit(self._decode_impl, static_argnums=(6,))
 
-    def _prefill_impl(self, batch):
-        logits, caches, _ = tf.apply(self.params, self.policy_arrays, batch,
-                                     self.cfg, self.ctx, mode="prefill")
-        return logits, caches
+    # ------------------------------------------------------------- prefill
+    def _positions_batch(self, positions: jax.Array) -> dict:
+        """Auxiliary position streams for the batch dict."""
+        if self._cfg.rope == "mrope":
+            # text-only serving: temporal/h/w streams collapse to the
+            # 1-D position (Qwen2-VL's convention for pure-text segments).
+            return {"mrope_positions": jnp.broadcast_to(
+                positions[None], (3,) + positions.shape).astype(jnp.int32)}
+        return {}
 
-    def _decode_impl(self, batch, caches):
-        logits, caches, _ = tf.apply(self.params, self.policy_arrays, batch,
-                                     self.cfg, self.ctx, mode="decode",
-                                     caches=caches,
-                                     positions=batch["positions"])
-        return logits, caches
+    def _prefill_impl(self, tokens: jax.Array, lengths: jax.Array):
+        b, s = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None, :],
+                                     (b, s))
+        batch = {"tokens": tokens, **self._positions_batch(positions)}
+        logits, pre, _ = tf.apply(self.params, self.policy_arrays, batch,
+                                  self._cfg, self.ctx, mode="prefill")
+        last = logits[jnp.arange(b), lengths - 1]          # (B, V) per-request
+        return last, pre
 
-    def generate(self, tokens: jax.Array, n_new: int) -> jax.Array:
-        """tokens: (B, S_prompt) -> (B, n_new) greedy continuation."""
+    def prefill(self, tokens: jax.Array,
+                lengths: Optional[jax.Array] = None,
+                ) -> Tuple[jax.Array, Any]:
+        """Run the prompt batch; returns (last-valid logits (B, V),
+        prefill cache layers sized to the padded prompt)."""
+        b, s = tokens.shape
+        if lengths is None:
+            lengths = jnp.full((b,), s, jnp.int32)
+        return self._prefill(tokens, jnp.asarray(lengths, jnp.int32))
+
+    def new_cache(self, batch: int) -> ServeCache:
+        return kv_cache.init_cache(self._cfg, batch, self.max_seq,
+                                   dtype=self.cache_dtype)
+
+    # -------------------------------------------------------------- decode
+    def _decode_impl(self, layers, lengths, tok, active, key, chunk_idx,
+                     n_steps):
+        """One scanned chunk: feed `tok`, emit `n_steps` tokens.
+
+        layers/lengths: the ServeCache fields (B, S_max buffers + valid
+        lengths); tok: (B, 1) the last emitted-but-unprocessed token;
+        active: (B,) bool — inactive slots write nothing (their position is
+        pinned out of range) and their outputs are discarded upstream.
+        chunk_idx is 1-based; the sampling key folds the ABSOLUTE decode
+        step, so a trajectory does not depend on the chunk size.
+        """
+        off_range = jnp.int32(self.max_seq)
+
+        def body(carry, i):
+            layers, positions, tok = carry
+            pos = jnp.where(active[:, None], positions, off_range)
+            batch = {"tokens": tok, **self._positions_batch(pos)}
+            logits, layers, _ = tf.apply(
+                self.params, self.policy_arrays, batch, self._cfg, self.ctx,
+                mode="decode", caches=layers, positions=pos)
+            abs_step = (chunk_idx - 1) * self.decode_chunk + i + 1
+            nxt = sampling.sample(
+                logits[:, -1, :],
+                sampling.step_key(key, sampling.DECODE_STREAM, abs_step),
+                self.sampler)
+            return (layers, positions + 1, nxt[:, None]), nxt
+
+        init = (layers, lengths[:, None].astype(jnp.int32), tok)
+        (layers, _, tok), toks = jax.lax.scan(
+            body, init, jnp.arange(n_steps))
+        return layers, tok, toks.swapaxes(0, 1)             # (B, n_steps)
+
+    def decode_chunk_step(self, cache: ServeCache, tok: jax.Array,
+                          key: jax.Array, chunk_idx: int,
+                          active: Optional[jax.Array] = None,
+                          n_steps: Optional[int] = None,
+                          ) -> Tuple[ServeCache, jax.Array, jax.Array]:
+        """Advance every slot by one scanned chunk of ``n_steps``
+        (default ``decode_chunk``; a shorter tail chunk avoids paying
+        full-chunk decode steps for a short remaining budget).
+
+        Returns (cache, next feed token (B, 1), emitted tokens
+        (B, n_steps)).
+        """
+        b = cache.lengths.shape[0]
+        if active is None:
+            active = jnp.ones((b,), bool)
+        if n_steps is None:
+            n_steps = self.decode_chunk
+        layers, tok, toks = self._decode(cache.layers, cache.lengths,
+                                         tok, active, key,
+                                         jnp.int32(chunk_idx), n_steps)
+        cache = kv_cache.advance(cache, layers, steps=n_steps,
+                                 active=active)
+        return cache, tok, toks
+
+    # ------------------------------------------------------------ generate
+    def generate(self, tokens: jax.Array, n_new: int,
+                 lengths: Optional[jax.Array] = None,
+                 key: Optional[jax.Array] = None) -> jax.Array:
+        """tokens: (B, S_prompt) left-aligned (right-padded) prompts ->
+        (B, n_new) continuation.  Greedy by default (engine.sampler)."""
         b, s_prompt = tokens.shape
-        logits, pre = self._prefill({"tokens": tokens})
-        caches = jax.tree.map(
-            lambda full, got: _splice(full, got),
-            tf.init_caches(self.cfg, b, self.max_seq), pre)
-        next_tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None]
-        out = [next_tok]
-        for i in range(n_new - 1):
-            pos = jnp.full((b, 1), s_prompt + i, jnp.int32)
-            batch = {"tokens": next_tok.astype(jnp.int32), "positions": pos}
-            if self.cfg.rope == "mrope":
-                batch["mrope_positions"] = jnp.broadcast_to(
-                    pos[None, :, :], (3, b, 1)).astype(jnp.int32)
-            logits, caches = self._decode(batch, caches)
-            next_tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None]
-            out.append(next_tok)
+        if n_new <= 0:
+            return jnp.zeros((b, 0), jnp.int32)
+        if s_prompt + n_new > self.max_seq:
+            raise ValueError(f"prompt {s_prompt} + n_new {n_new} exceeds "
+                             f"max_seq {self.max_seq}")
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        lengths = (jnp.full((b,), s_prompt, jnp.int32) if lengths is None
+                   else jnp.asarray(lengths, jnp.int32))
+        if np.any(np.asarray(lengths) < 1) \
+                or np.any(np.asarray(lengths) > s_prompt):
+            raise ValueError("per-request lengths must be in [1, S_prompt]")
+        if self.has_recurrent_state and np.any(np.asarray(lengths)
+                                               != s_prompt):
+            raise ValueError(
+                "unequal prompt lengths need right-padding, which corrupts "
+                "recurrent (mamba/xlstm) block state — serve such configs "
+                "through the scheduler (exact-length prefill per request)")
+        last, pre = self.prefill(tokens, lengths)
+        cache = kv_cache.splice_prefill(self.new_cache(b), pre, lengths)
+        first = sampling.sample(
+            last, sampling.step_key(key, sampling.PREFILL_CHUNK, 0),
+            self.sampler)
+        tok = first[:, None]
+        out = [tok]
+        remaining = n_new - 1
+        c = 0
+        while remaining > 0:
+            n_steps = min(self.decode_chunk, remaining)
+            cache, tok, toks = self.decode_chunk_step(cache, tok, key, c + 1,
+                                                      n_steps=n_steps)
+            out.append(toks)
+            remaining -= n_steps
+            c += 1
         return jnp.concatenate(out, axis=1)
-
-
-def _splice(full, got):
-    if got is None or isinstance(got, int):
-        return full
-    if full.shape == got.shape:
-        return got.astype(full.dtype)
-    return jax.lax.dynamic_update_slice(full, got.astype(full.dtype),
-                                        (0,) * full.ndim)

@@ -1,0 +1,139 @@
+"""Preallocated KV cache with explicit valid-length tracking.
+
+``ServeCache`` wraps the per-layer cache pytree from
+``transformer.init_caches`` — fixed (B, S_max) buffers — together with a
+``lengths: (B,) int32`` array recording how many rows of each request's
+slot are valid.  This is the root fix for the old engine's decode
+divergence: the handoff is now an explicit contract instead of an ad-hoc
+shape-matching splice —
+
+  * prefill results are written at position 0 (prompts are left-aligned),
+    in the cache's OWN dtype end-to-end.  The serving cache lives in the
+    model's compute dtype by default: the old path round-tripped prefill
+    K/V through bf16 (cfg.cache_dtype) while the full-context reference
+    attended in f32, and that one-ULP skew gets amplified to a full code
+    step by the activation fake-quant grid — greedy argmax flipped from
+    the third generated token on.
+  * decode writes land at each request's own ``lengths[i]`` row
+    (attention.cache_write), so a batch never needs a shared prompt
+    length.
+  * rows at/beyond ``lengths[i]`` are garbage-until-overwritten and are
+    provably unread: the decode attention mask is ``s_pos <= position``.
+    (This masking argument covers ATTENTION caches; recurrent block
+    states have no sequence axis, so padding-safety for them is enforced
+    upstream — engine.has_recurrent_state gates unequal-length batches
+    and the scheduler prefills such configs at exact prompt length.)
+
+The wrapper is a pytree, so it threads through jit/scan unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tf
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ServeCache:
+    """Per-layer cache pytree + per-request valid lengths.
+
+    Decode positions derive from ``lengths`` inside the engine's scanned
+    chunk (the only place they are valid mid-chunk) — there is
+    deliberately no positions accessor here."""
+    layers: Any                    # pytree from transformer.init_caches
+    lengths: jax.Array             # (B,) int32 — valid rows per request
+
+
+def init_cache(cfg, batch: int, max_seq: int, dtype=None) -> ServeCache:
+    """Fresh preallocated cache; every request starts empty."""
+    return ServeCache(
+        layers=tf.init_caches(cfg, batch, max_seq, cache_dtype=dtype),
+        lengths=jnp.zeros((batch,), jnp.int32))
+
+
+def splice_prefill(cache: ServeCache, prefill_layers: Any,
+                   lengths: jax.Array) -> ServeCache:
+    """Write prefill caches (sized to the padded prompt) into the
+    preallocated buffers at position 0.
+
+    ``lengths``: (B,) valid prompt length per request — rows in
+    [lengths[i], S_pad) hold right-pad garbage that the decode mask never
+    reads (and that decode progressively overwrites).
+    """
+    layers = jax.tree.map(lambda full, got: _splice(full, got),
+                          cache.layers, prefill_layers)
+    return ServeCache(layers=layers, lengths=jnp.asarray(lengths, jnp.int32))
+
+
+def advance(cache: ServeCache, new_layers: Any, steps: int = 1,
+            active=None) -> ServeCache:
+    """Post-decode bookkeeping: adopt updated layers, extend valid lengths.
+
+    ``active``: optional (B,) bool — inactive slots (drained requests that
+    keep decoding garbage until eviction) do not advance.
+    """
+    delta = jnp.int32(steps)
+    if active is not None:
+        delta = jnp.where(active, delta, 0).astype(jnp.int32)
+    return ServeCache(layers=new_layers, lengths=cache.lengths + delta)
+
+
+def _splice(full, got):
+    """Write a prefill-sized cache leaf into its preallocated buffer.
+
+    SSM states (no sequence axis) and sentinel ints pass through whole;
+    sequence caches are written at the origin.  The cast happens INSIDE the
+    buffer's dtype contract — callers choose that dtype once at init
+    (serving: compute dtype, for exact parity).
+    """
+    if got is None or isinstance(got, int):
+        return full
+    got = jnp.asarray(got)
+    if full.shape == got.shape:
+        return got.astype(full.dtype)
+    return jax.lax.dynamic_update_slice(full, got.astype(full.dtype),
+                                        (0,) * full.ndim)
+
+
+def batch_axis_index(cfg, max_seq: int) -> Any:
+    """Per-leaf batch-axis pytree for ``write_slot`` (computed structurally:
+    the axis where a batch=1 and a batch=2 cache differ).  eval_shape only —
+    no cache-sized buffers are ever allocated here."""
+    one = jax.eval_shape(lambda: tf.init_caches(cfg, 1, max_seq))
+    two = jax.eval_shape(lambda: tf.init_caches(cfg, 2, max_seq))
+
+    def find(a, b):
+        if a is None or isinstance(a, int):
+            return -1
+        for ax, (da, db) in enumerate(zip(jnp.shape(a), jnp.shape(b))):
+            if da != db:
+                return ax
+        raise ValueError(f"no batch axis in cache leaf {jnp.shape(a)}")
+
+    return jax.tree.map(find, one, two)
+
+
+def write_slot(cache: ServeCache, slot_cache: Any, slot: int,
+               length: int, batch_axes: Any) -> ServeCache:
+    """Admit one prefilled request (batch=1 caches) into batch slot ``slot``.
+
+    Continuous batching admission: the single-request prefill cache is
+    written into the shared (B, S_max) buffers along each leaf's batch
+    axis; stale rows beyond the new prompt are garbage-until-overwritten
+    exactly as in ``splice_prefill``.
+    """
+    def put(full, got, ax):
+        if got is None or isinstance(got, int) or ax < 0:
+            return full
+        got = jnp.asarray(got).astype(full.dtype)
+        start = tuple(slot if i == ax else 0 for i in range(full.ndim))
+        return jax.lax.dynamic_update_slice(full, got, start)
+
+    layers = jax.tree.map(put, cache.layers, slot_cache, batch_axes)
+    lengths = cache.lengths.at[slot].set(jnp.int32(length))
+    return ServeCache(layers=layers, lengths=lengths)

@@ -1,0 +1,61 @@
+"""Token sampling under a fixed PRNG-key threading discipline.
+
+One ``jax.random.PRNGKey`` enters ``ServeEngine.generate``; the token at
+ABSOLUTE decode step t derives its key as ``fold_in(fold_in(base, 1), t)``
+(the prefill token uses stream 0), so a ``generate`` trajectory is
+reproducible bit-for-bit for a fixed key regardless of the engine's
+``decode_chunk`` setting.  Scheduler admissions fold a per-admission
+counter into stream 0, so identical prompts admitted at different times
+draw different first tokens.  Caveat: batched non-greedy decode draws ONE
+categorical per batch step, so a request's decode draws in the
+continuous-batching scheduler depend on when it was admitted relative to
+its batchmates; greedy sampling ignores the key entirely and stays
+bit-exact with the stepwise full-context reference in every setting.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerConfig:
+    """kind: 'greedy' | 'temperature' | 'top_k'."""
+    kind: str = "greedy"
+    temperature: float = 1.0
+    top_k: int = 0
+
+    def __post_init__(self):
+        if self.kind not in ("greedy", "temperature", "top_k"):
+            raise ValueError(self.kind)
+        if self.kind == "top_k" and self.top_k < 1:
+            raise ValueError("top_k sampler needs top_k >= 1")
+
+
+GREEDY = SamplerConfig()
+
+
+def sample(logits: jax.Array, key: jax.Array, cfg: SamplerConfig) -> jax.Array:
+    """logits: (B, V) -> (B,) int32 token ids."""
+    if cfg.kind == "greedy":
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits.astype(jnp.float32) / max(cfg.temperature, 1e-6)
+    if cfg.kind == "top_k":
+        k = min(cfg.top_k, logits.shape[-1])
+        kth = jnp.sort(scaled, axis=-1)[:, -k][:, None]
+        scaled = jnp.where(scaled >= kth, scaled, -1e30)
+    return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+
+
+PREFILL_CHUNK = 0            # key stream for the prefill token; decode
+                             # steps use stream 1 (fold_in needs
+                             # non-negative data)
+DECODE_STREAM = 1
+
+
+def step_key(base: jax.Array, stream, step_idx) -> jax.Array:
+    """The per-step key: fold the stream id then the (absolute) step index
+    into the base key."""
+    return jax.random.fold_in(jax.random.fold_in(base, stream), step_idx)

@@ -1,0 +1,200 @@
+"""Continuous batching: fixed-slot admission, per-request stop & eviction.
+
+Production serving never waits for a whole batch to finish: requests are
+admitted into fixed batch SLOTS as they arrive, decode advances all slots
+together, and a slot is freed the moment its request stops (EOS or token
+budget).  This scheduler implements that at chunk granularity —
+iteration-level scheduling where one iteration is the engine's scanned
+decode chunk:
+
+  admit   — pop pending requests into free slots; each request is
+            prefilled alone (its prompt padded to a small bucket so jit
+            caches stay warm) and its cache written into the shared
+            (B, S_max) buffers along the batch axis (kv_cache.write_slot).
+            Unequal prompt lengths are the normal case: every slot keeps
+            its own valid length and decode position.
+  decode  — one scanned chunk for ALL slots in a single dispatch; inactive
+            slots decode garbage that is masked from the cache (their
+            write position is pinned out of range) and discarded here.
+  harvest — per-request stop conditions: EOS token or max_new_tokens.
+            Finished slots are evicted; their rows become
+            garbage-until-overwritten, which the admission/decode masking
+            already guarantees is never read.
+
+The whole loop is host-side control over jitted batch steps — no
+recompilation as requests come and go, because request boundaries only
+ever change ARRAY CONTENTS (lengths, active mask, feed tokens), never
+shapes.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve import kv_cache, sampling
+from repro.serve.engine import ServeEngine
+
+
+@dataclasses.dataclass
+class Request:
+    uid: str
+    prompt: Sequence[int]
+    max_new_tokens: int = 32
+    eos_id: Optional[int] = None
+
+
+@dataclasses.dataclass
+class Completion:
+    uid: str
+    prompt_len: int
+    tokens: List[int]              # generated tokens (EOS included if hit)
+    finish_reason: str             # 'eos' | 'length'
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Request
+    emitted: List[int]
+
+
+class ContinuousBatchingScheduler:
+    """Drive a ServeEngine with slot-based continuous batching."""
+
+    def __init__(self, engine: ServeEngine, n_slots: int = 4,
+                 prompt_bucket: int = 16,
+                 key: Optional[jax.Array] = None):
+        self.engine = engine
+        self.n_slots = n_slots
+        self.prompt_bucket = prompt_bucket
+        self.key = jax.random.PRNGKey(0) if key is None else key
+        self.cache = engine.new_cache(n_slots)
+        self._batch_axes = kv_cache.batch_axis_index(engine._cfg,
+                                                     engine.max_seq)
+        self.queue: collections.deque = collections.deque()
+        self.slots: List[Optional[_Slot]] = [None] * n_slots
+        self._tok = np.zeros((n_slots, 1), np.int32)
+        self._chunk_idx = 1            # stream 0 is the admission stream
+        self._admit_idx = 0            # folds into each admission's draw
+        self.completed: Dict[str, Completion] = {}
+
+    # ------------------------------------------------------------ frontend
+    def submit(self, req: Request) -> None:
+        n_prompt = len(req.prompt)
+        if n_prompt < 1:
+            raise ValueError(f"request {req.uid}: empty prompt")
+        if req.max_new_tokens < 1:
+            raise ValueError(f"request {req.uid}: max_new_tokens < 1")
+        if n_prompt + req.max_new_tokens > self.engine.max_seq:
+            raise ValueError(
+                f"request {req.uid}: {n_prompt}+{req.max_new_tokens} "
+                f"exceeds max_seq {self.engine.max_seq}")
+        self.queue.append(req)
+
+    def run(self) -> Dict[str, Completion]:
+        """Drain the queue; returns uid -> Completion."""
+        while self.queue or any(s is not None for s in self.slots):
+            self._admit()
+            if any(s is not None for s in self.slots):
+                self._decode_harvest()
+        return self.completed
+
+    # ------------------------------------------------------------ internals
+    def _admit(self) -> None:
+        for j in range(self.n_slots):
+            if self.slots[j] is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            n_prompt = len(req.prompt)
+            # pad the lone prompt to a bucket so single-request prefill
+            # compiles once per bucket, not once per prompt length; never
+            # past max_seq (the prefill cache must fit the slot buffers).
+            # Recurrent-state configs (mamba/xlstm) prefill at the EXACT
+            # length instead: their states have no position masking, so
+            # pad tokens would be integrated into the state.
+            if self.engine.has_recurrent_state:
+                pad = n_prompt
+            else:
+                pad = min(-(-n_prompt // self.prompt_bucket)
+                          * self.prompt_bucket, self.engine.max_seq)
+            toks = np.zeros((1, pad), np.int32)
+            toks[0, :n_prompt] = np.asarray(req.prompt, np.int32)
+            last, pre = self.engine.prefill(
+                jnp.asarray(toks), jnp.asarray([n_prompt], jnp.int32))
+            self.cache = kv_cache.write_slot(self.cache, pre, j, n_prompt,
+                                             self._batch_axes)
+            # each admission folds its own index: identical prompts must
+            # not reuse one Gumbel draw for their first sampled token
+            first = int(sampling.sample(
+                last, sampling.step_key(self.key, sampling.PREFILL_CHUNK,
+                                        self._admit_idx),
+                self.engine.sampler)[0])
+            self._admit_idx += 1
+            slot = _Slot(req=req, emitted=[first])
+            if self._finish_reason(slot) is not None:
+                self._evict(slot, j)        # finished on its very first token
+                continue
+            self.slots[j] = slot
+            self._tok[j, 0] = first
+
+    def _decode_harvest(self) -> None:
+        active = np.array([s is not None for s in self.slots])
+        # tail chunk: when every live slot's remaining budget is short,
+        # don't pay full decode_chunk model steps just to discard them.
+        # Rounded up to a power of two so the statically-shaped decode scan
+        # compiles at most log2(decode_chunk)+1 distinct sizes, not one per
+        # remaining-budget value.
+        remaining = max(s.req.max_new_tokens - len(s.emitted)
+                        for s in self.slots if s is not None)
+        tail = 1
+        while tail < remaining:
+            tail *= 2
+        n_steps = min(self.engine.decode_chunk, tail)
+        self.cache, tok, toks = self.engine.decode_chunk_step(
+            self.cache, jnp.asarray(self._tok), self.key, self._chunk_idx,
+            active=jnp.asarray(active), n_steps=n_steps)
+        self._chunk_idx += 1
+        toks_np = np.asarray(toks)
+        for j, slot in enumerate(self.slots):
+            if slot is None:
+                continue
+            done = False
+            for t in toks_np[j]:
+                slot.emitted.append(int(t))
+                if self._finish_reason(slot) is not None:
+                    done = True
+                    break
+            if done:
+                self._evict(slot, j)
+            else:
+                self._tok[j, 0] = slot.emitted[-1]
+
+    def _finish_reason(self, slot: _Slot) -> Optional[str]:
+        if slot.req.eos_id is not None \
+                and slot.emitted[-1] == slot.req.eos_id:
+            return "eos"
+        if len(slot.emitted) >= slot.req.max_new_tokens:
+            return "length"
+        return None
+
+    def _evict(self, slot: _Slot, j: int) -> None:
+        reason = self._finish_reason(slot) or "length"
+        self.completed[slot.req.uid] = Completion(
+            uid=slot.req.uid, prompt_len=len(slot.req.prompt),
+            tokens=list(slot.emitted), finish_reason=reason)
+        self.slots[j] = None
+
+
+def serve_all(engine: ServeEngine, requests: Sequence[Request],
+              n_slots: int = 4, prompt_bucket: int = 16,
+              key: Optional[jax.Array] = None) -> Dict[str, Completion]:
+    """Convenience one-shot: submit everything, drain, return completions."""
+    sched = ContinuousBatchingScheduler(engine, n_slots=n_slots,
+                                        prompt_bucket=prompt_bucket, key=key)
+    for r in requests:
+        sched.submit(r)
+    return sched.run()

@@ -25,6 +25,26 @@ def test_entropy_bits_consistency(rng):
     np.testing.assert_allclose(float(a), float(b), atol=1e-5)
 
 
+def test_entropy_bits_empty_bins_exact(rng):
+    """Masked p·log2(p): empty bins contribute EXACTLY zero to H."""
+    # uniform over 4 of 16 bins -> H == 2 bits exactly
+    codes = jnp.asarray(np.tile(np.arange(4), 256), jnp.int32)
+    h = float(ops.entropy_bits(codes, 16, impl="ref"))
+    np.testing.assert_allclose(h, 2.0, atol=1e-6)
+    # H must be independent of how many unused bins the histogram carries
+    # (the old +1e-10-on-every-bin leaked -eps*log2(eps) per empty bin)
+    codes = jnp.asarray(rng.integers(0, 8, size=4096), jnp.int32)
+    h8 = float(ops.entropy_bits(codes, 8, impl="ref"))
+    h256 = float(ops.entropy_bits(codes, 256, impl="ref"))
+    np.testing.assert_allclose(h8, h256, atol=1e-6)
+    # single-bin distribution: exactly zero entropy
+    ones = jnp.zeros((1000,), jnp.int32)
+    assert float(ops.entropy_bits(ones, 64, impl="ref")) == 0.0
+    # ref and interpreted Pallas paths agree after the fix
+    a = ops.entropy_bits(codes, 256, impl="interpret")
+    np.testing.assert_allclose(float(a), h256, atol=1e-5)
+
+
 # ----------------------------------------------------------- lsq_fakequant
 @pytest.mark.parametrize("shape", [(33,), (256, 129), (4, 7, 64)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

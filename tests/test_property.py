@@ -1,11 +1,18 @@
-"""Hypothesis property tests on system invariants."""
+"""Hypothesis property tests on system invariants.
+
+hypothesis is a DEV-ONLY dependency (requirements-dev.txt); without it this
+module must skip cleanly rather than kill collection for the whole suite.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
 
-from repro.core import quant
-from repro.kernels import ref
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import quant                              # noqa: E402
+from repro.kernels import ref                             # noqa: E402
 
 
 @settings(max_examples=30, deadline=None)
@@ -124,6 +131,30 @@ def test_mamba_chunked_matches_recurrent(seed):
     step = jnp.concatenate(outs, axis=1)
     np.testing.assert_allclose(np.asarray(full), np.asarray(step),
                                rtol=2e-3, atol=2e-3)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 10),
+       st.lists(st.integers(1, 100), min_size=1, max_size=10),
+       st.lists(st.integers(1, 50), min_size=1, max_size=10))
+def test_knapsack_matches_brute_force(seed, vals, wts):
+    """Property version of test_knapsack.test_matches_brute_force."""
+    import itertools
+    from repro.core import knapsack
+    n = min(len(vals), len(wts))
+    vals, wts = vals[:n], wts[:n]
+    capacity = max(1, sum(wts) * seed // 10)
+    res = knapsack.solve([f"i{k}" for k in range(n)],
+                         [float(v) for v in vals],
+                         [float(w) for w in wts], float(capacity))
+    best = 0.0
+    for mask in itertools.product([0, 1], repeat=n):
+        if sum(w for w, m in zip(wts, mask) if m) <= capacity:
+            best = max(best, sum(v for v, m in zip(vals, mask) if m))
+    got = sum(v for v, k in zip(vals, res.take) if res.take[k])
+    assert got >= best * 0.999 - 1e-9
+    assert res.total_weight <= capacity * (1 + 1e-6) \
+        + n * res.weight_resolution
 
 
 @settings(max_examples=10, deadline=None)

@@ -1,13 +1,15 @@
-"""Serving: int4/int8 weight layout, engine generation, QAT consistency."""
+"""Serving: int4/int8 layout, engine/scheduler parity, QAT consistency."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro import configs
+from repro.core import knapsack
 from repro.models import transformer as tf
 from repro.parallel.context import local_context
-from repro.serve.engine import ServeEngine, quantize_for_serving
+from repro.serve import (ContinuousBatchingScheduler, Request, SamplerConfig,
+                         ServeEngine, quantize_for_serving, sample, serve_all)
 
 
 @pytest.fixture(scope="module")
@@ -21,6 +23,24 @@ def setup():
     return cfg, ctx, params, policy, pa, qparams
 
 
+def stepwise_reference(qparams, pa, cfg, ctx, prompt: np.ndarray,
+                       n_new: int) -> np.ndarray:
+    """Greedy decode by re-running the full context every step (oracle)."""
+    toks = np.asarray(prompt)
+    for _ in range(n_new):
+        batch = {"tokens": jnp.asarray(toks)}
+        if cfg.rope == "mrope":
+            b, s = toks.shape
+            pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None, :],
+                                   (b, s))
+            batch["mrope_positions"] = jnp.broadcast_to(pos[None], (3, b, s))
+        logits, _, _ = tf.apply(qparams, pa, batch, cfg, ctx, mode="train")
+        nxt = int(np.argmax(np.asarray(logits, np.float32)[0, -1]))
+        toks = np.concatenate([toks, [[nxt]]], axis=1)
+    return toks[:, prompt.shape[1]:]
+
+
+# ------------------------------------------------------------------ layout
 def test_serve_layout_dtypes(setup):
     cfg, ctx, params, policy, pa, qparams = setup
     wq = qparams["pat"]["p0"]["attn"]["wq"]
@@ -55,6 +75,7 @@ def test_serve_logits_match_fake_quant(setup):
     np.testing.assert_allclose(a, b, atol=0.2 * np.abs(a).max() + 1e-3)
 
 
+# ------------------------------------------------------------------ engine
 def test_engine_generates(setup):
     cfg, ctx, params, policy, pa, qparams = setup
     engine = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx,
@@ -73,14 +94,238 @@ def test_engine_matches_stepwise_reference(setup):
                          max_seq=64)
     rng = np.random.default_rng(2)
     prompt = jnp.asarray(rng.integers(0, cfg.vocab, (1, 12)), jnp.int32)
-    got = np.asarray(engine.generate(prompt, n_new=4))
+    got = np.asarray(engine.generate(prompt, n_new=16))
+    want = stepwise_reference(qparams, pa, cfg, ctx, np.asarray(prompt), 16)
+    np.testing.assert_array_equal(got[0], want[0])
 
-    # reference: re-run prefill over growing context with the SAME qparams
-    toks = np.asarray(prompt)
-    for _ in range(4):
-        logits, _, _ = tf.apply(qparams, pa,
-                                {"tokens": jnp.asarray(toks)}, cfg, ctx,
-                                mode="train")
-        nxt = int(np.argmax(np.asarray(logits, np.float32)[0, -1]))
-        toks = np.concatenate([toks, [[nxt]]], axis=1)
-    np.testing.assert_array_equal(got[0], toks[0, 12:])
+
+def test_engine_parity_mixed_knapsack_policy(setup):
+    """16-token greedy parity under a REAL mixed 4/2-bit knapsack policy."""
+    cfg, ctx, params, policy, pa, qparams = setup
+    units = policy.selectable_units()
+    res = knapsack.select_for_budget(policy, knapsack.synthetic_gains(policy),
+                                     budget_frac=0.7)
+    mixed = policy.apply_selection(res.take)
+    bits = [mixed.bits_of(u.name) for u in units]
+    assert 2.0 in bits and 4.0 in bits          # genuinely mixed selection
+    pa_mixed = jax.tree.map(jnp.asarray, mixed.as_arrays())
+    qmixed = quantize_for_serving(params, mixed.as_arrays(), cfg)
+    engine = ServeEngine(cfg=cfg, params=qmixed, policy_arrays=pa_mixed,
+                         ctx=ctx, max_seq=64)
+    rng = np.random.default_rng(3)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab, (1, 12)), jnp.int32)
+    got = np.asarray(engine.generate(prompt, n_new=16))
+    want = stepwise_reference(qmixed, pa_mixed, cfg, ctx,
+                              np.asarray(prompt), 16)
+    np.testing.assert_array_equal(got[0], want[0])
+
+
+def test_engine_parity_mrope():
+    """16-token greedy parity for an M-RoPE (Qwen2-VL) config."""
+    cfg = configs.get_config("qwen2-vl-7b").smoke()
+    ctx = local_context()
+    params = tf.init_params(cfg, jax.random.PRNGKey(4))
+    policy = tf.build_policy(cfg)
+    pa = jax.tree.map(jnp.asarray, policy.as_arrays())
+    qparams = quantize_for_serving(params, policy.as_arrays(), cfg)
+    engine = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx,
+                         max_seq=48)
+    rng = np.random.default_rng(5)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab, (1, 8)), jnp.int32)
+    got = np.asarray(engine.generate(prompt, n_new=16))
+    want = stepwise_reference(qparams, pa, cfg, ctx, np.asarray(prompt), 16)
+    np.testing.assert_array_equal(got[0], want[0])
+
+
+def test_engine_batched_unequal_lengths(setup):
+    """One batch, two prompt lengths -> rows match their single-request runs."""
+    cfg, ctx, params, policy, pa, qparams = setup
+    engine = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx,
+                         max_seq=64)
+    rng = np.random.default_rng(6)
+    toks = np.zeros((2, 16), np.int32)
+    toks[0, :10] = rng.integers(0, cfg.vocab, 10)
+    toks[1, :16] = rng.integers(0, cfg.vocab, 16)
+    out = np.asarray(engine.generate(jnp.asarray(toks), n_new=16,
+                                     lengths=[10, 16]))
+    solo0 = np.asarray(engine.generate(jnp.asarray(toks[:1]), n_new=16,
+                                       lengths=[10]))
+    solo1 = np.asarray(engine.generate(jnp.asarray(toks[1:]), n_new=16))
+    np.testing.assert_array_equal(out[0], solo0[0])
+    np.testing.assert_array_equal(out[1], solo1[0])
+
+
+# --------------------------------------------------------------- scheduler
+def test_scheduler_continuous_batching_parity(setup):
+    """3 requests with unequal prompts through 2 slots == solo greedy runs."""
+    cfg, ctx, params, policy, pa, qparams = setup
+    engine = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx,
+                         max_seq=64)
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab, n).tolist() for n in (12, 16, 7)]
+    reqs = [Request(uid=f"r{i}", prompt=p, max_new_tokens=16)
+            for i, p in enumerate(prompts)]
+    res = serve_all(engine, reqs, n_slots=2)
+    assert set(res) == {"r0", "r1", "r2"}
+    for i, p in enumerate(prompts):
+        want = stepwise_reference(qparams, pa, cfg, ctx,
+                                  np.asarray([p], np.int32), 16)
+        assert res[f"r{i}"].tokens == want[0].tolist(), f"r{i}"
+        assert res[f"r{i}"].finish_reason == "length"
+
+
+def test_scheduler_eos_eviction_and_reuse(setup):
+    """EOS stops a request early, frees its slot, and the queue refills it."""
+    cfg, ctx, params, policy, pa, qparams = setup
+    engine = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx,
+                         max_seq=64)
+    rng = np.random.default_rng(8)
+    prompt = rng.integers(0, cfg.vocab, 12).tolist()
+    free = serve_all(engine, [Request(uid="probe", prompt=prompt,
+                                      max_new_tokens=12)], n_slots=1)
+    probe = free["probe"].tokens
+    eos = probe[4]                         # the 5th generated token
+    # 1 slot, 2 requests: the first stops at EOS, the second is admitted
+    # into the freed slot and runs to its length budget.
+    reqs = [Request(uid="a", prompt=prompt, max_new_tokens=12, eos_id=eos),
+            Request(uid="b", prompt=prompt, max_new_tokens=8)]
+    res = serve_all(engine, reqs, n_slots=1)
+    assert res["a"].finish_reason == "eos"
+    assert res["a"].tokens == probe[:5]    # truncated at the EOS token
+    assert res["b"].finish_reason == "length"
+    assert res["b"].tokens == probe[:8]    # same prompt -> same greedy path
+
+
+def test_request_validation_and_empty_edges(setup):
+    """Degenerate inputs fail loudly (or return empty) instead of crashing
+    mid-run: empty prompt, zero budget, zero/oversized lengths, n_new=0."""
+    cfg, ctx, params, policy, pa, qparams = setup
+    engine = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx,
+                         max_seq=64)
+    sched = ContinuousBatchingScheduler(engine, n_slots=1)
+    with pytest.raises(ValueError, match="empty prompt"):
+        sched.submit(Request(uid="e", prompt=[], max_new_tokens=4))
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        sched.submit(Request(uid="z", prompt=[1, 2], max_new_tokens=0))
+    with pytest.raises(ValueError, match="lengths"):
+        engine.generate(jnp.zeros((2, 8), jnp.int32), n_new=2,
+                        lengths=[0, 8])
+    out = engine.generate(jnp.zeros((2, 8), jnp.int32), n_new=0)
+    assert out.shape == (2, 0)
+
+
+def test_scheduler_prompt_bucket_never_exceeds_max_seq(setup):
+    """Regression: a near-max_seq prompt must not be bucket-padded past the
+    slot buffers (the padded prefill cache has to fit write_slot)."""
+    cfg, ctx, params, policy, pa, qparams = setup
+    engine = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx,
+                         max_seq=52)
+    rng = np.random.default_rng(11)
+    prompt = rng.integers(0, cfg.vocab, 50).tolist()   # bucket pad 64 > 52
+    res = serve_all(engine, [Request(uid="tight", prompt=prompt,
+                                     max_new_tokens=2)], n_slots=1)
+    assert res["tight"].finish_reason == "length"
+    assert len(res["tight"].tokens) == 2
+
+
+def test_recurrent_mixer_serving_no_padding():
+    """Recurrent-state configs (xLSTM): engine rejects unequal-length
+    batches (right-padding would corrupt the state), and the scheduler
+    serves them via exact-length prefill — matching engine.generate."""
+    cfg = configs.get_config("xlstm-1.3b").smoke()
+    ctx = local_context()
+    params = tf.init_params(cfg, jax.random.PRNGKey(13))
+    policy = tf.build_policy(cfg)
+    pa = jax.tree.map(jnp.asarray, policy.as_arrays())
+    qparams = quantize_for_serving(params, policy.as_arrays(), cfg)
+    engine = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx,
+                         max_seq=64)
+    assert engine.has_recurrent_state
+    rng = np.random.default_rng(14)
+    prompt = rng.integers(0, cfg.vocab, 10).tolist()   # NOT a bucket multiple
+    with pytest.raises(ValueError, match="recurrent"):
+        engine.generate(jnp.zeros((2, 12), jnp.int32), n_new=4,
+                        lengths=[10, 12])
+    solo = np.asarray(engine.generate(
+        jnp.asarray([prompt], jnp.int32), n_new=8))
+    res = serve_all(engine, [Request(uid="x", prompt=prompt,
+                                     max_new_tokens=8)], n_slots=1)
+    # exact-length admission == unpadded generate (a padded prefill would
+    # integrate the pad tokens into the recurrent state and diverge)
+    assert res["x"].tokens == solo[0].tolist()
+
+
+# ---------------------------------------------------------------- sampling
+def test_sampling_modes(setup):
+    cfg, ctx, params, policy, pa, qparams = setup
+    rng = np.random.default_rng(9)
+    logits = jnp.asarray(rng.normal(size=(4, 64)), jnp.float32)
+    key = jax.random.PRNGKey(0)
+    greedy = sample(logits, key, SamplerConfig())
+    np.testing.assert_array_equal(np.asarray(greedy),
+                                  np.asarray(jnp.argmax(logits, -1)))
+    # top_k=1 is greedy regardless of key
+    top1 = sample(logits, jax.random.PRNGKey(123),
+                  SamplerConfig(kind="top_k", top_k=1))
+    np.testing.assert_array_equal(np.asarray(top1), np.asarray(greedy))
+    # fixed key -> reproducible; samples stay inside the top-k support
+    c = SamplerConfig(kind="top_k", top_k=5, temperature=0.7)
+    s1, s2 = sample(logits, key, c), sample(logits, key, c)
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    kth = np.sort(np.asarray(logits), axis=-1)[:, -5]
+    picked = np.take_along_axis(np.asarray(logits),
+                                np.asarray(s1)[:, None], axis=-1)[:, 0]
+    assert (picked >= kth - 1e-6).all()
+    with pytest.raises(ValueError):
+        SamplerConfig(kind="nucleus")
+
+
+def test_temperature_sampled_generation_shapes(setup):
+    cfg, ctx, params, policy, pa, qparams = setup
+    engine = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx,
+                         max_seq=64,
+                         sampler=SamplerConfig(kind="temperature",
+                                               temperature=1.3))
+    rng = np.random.default_rng(10)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab, (2, 8)), jnp.int32)
+    a = np.asarray(engine.generate(prompt, n_new=6, key=jax.random.PRNGKey(1)))
+    b = np.asarray(engine.generate(prompt, n_new=6, key=jax.random.PRNGKey(1)))
+    c = np.asarray(engine.generate(prompt, n_new=6, key=jax.random.PRNGKey(2)))
+    assert a.shape == (2, 6)
+    np.testing.assert_array_equal(a, b)    # same key -> same trajectory
+    assert (a != c).any()                  # different key -> different draw
+    assert int(a.max()) < cfg.vocab and int(a.min()) >= 0
+
+
+def test_sampled_trajectory_invariant_to_decode_chunk(setup):
+    """The per-step key folds the ABSOLUTE decode step, so the same key
+    yields the same sampled trajectory under any decode_chunk."""
+    cfg, ctx, params, policy, pa, qparams = setup
+    samp = SamplerConfig(kind="temperature", temperature=1.1)
+    rng = np.random.default_rng(12)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab, (1, 8)), jnp.int32)
+    key = jax.random.PRNGKey(3)
+    outs = []
+    for chunk in (4, 16):
+        eng = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa,
+                          ctx=ctx, max_seq=64, decode_chunk=chunk,
+                          sampler=samp)
+        outs.append(np.asarray(eng.generate(prompt, n_new=9, key=key)))
+    np.testing.assert_array_equal(outs[0], outs[1])
+
+
+def test_scheduler_admissions_draw_distinct_first_tokens(setup):
+    """Identical prompts admitted at different times must not reuse one
+    Gumbel draw for their first sampled token (per-admission key fold)."""
+    cfg, ctx, params, policy, pa, qparams = setup
+    engine = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx,
+                         max_seq=64,
+                         sampler=SamplerConfig(kind="temperature",
+                                               temperature=2.0))
+    rng = np.random.default_rng(15)
+    prompt = rng.integers(0, cfg.vocab, 8).tolist()
+    reqs = [Request(uid=f"s{i}", prompt=prompt, max_new_tokens=2)
+            for i in range(6)]
+    res = serve_all(engine, reqs, n_slots=2)
+    firsts = {res[f"s{i}"].tokens[0] for i in range(6)}
+    assert len(firsts) > 1, firsts
