@@ -14,7 +14,6 @@ from __future__ import annotations
 
 import argparse
 import json
-import sys
 import time
 
 
@@ -38,16 +37,26 @@ def main() -> None:
         from benchmarks import serve_bench
         out = serve_bench.run(quick=q)
         for name, r in out.items():
-            _row(f"serve/{name}", r["us_per_token"],
-                 f"tokens_per_s={r['tokens_per_s']:.1f};"
-                 f"weight_bytes_per_token={r['weight_bytes_per_token']:.0f}")
+            if name.startswith("_"):
+                continue
+            _row(f"serve/{name}", r["us_per_token_packed"],
+                 f"tokens_per_s_packed={r['tokens_per_s_packed']:.1f};"
+                 f"tokens_per_s_fake_quant={r['tokens_per_s_fake_quant']:.1f};"
+                 f"resident_weight_bytes_packed="
+                 f"{r['resident_weight_bytes_packed']};"
+                 f"packed_reduction_vs_bf16="
+                 f"{r['packed_reduction_vs_bf16']:.2f}x")
         with open(args.json_out, "w") as f:
             json.dump(out, f, indent=2, sort_keys=True)
 
     if only is None or "knapsack" in only:
         from benchmarks import knapsack_bench
-        for name, dt in knapsack_bench.run(quick=q).items():
+        kout = knapsack_bench.run(quick=q)
+        for name, dt in kout.items():
             _row(f"knapsack/{name}", dt * 1e6, "eps_optimal_dp")
+        with open("BENCH_knapsack.json", "w") as f:
+            json.dump({k: v * 1e6 for k, v in kout.items()}, f, indent=2,
+                      sort_keys=True)
 
     if only is None or "quant" in only:
         from benchmarks import quant_bench

@@ -1,14 +1,24 @@
-"""Serving decode benchmark: tokens/sec + weight bytes streamed per token.
+"""Serving decode benchmark: tokens/sec + MEASURED resident weight bytes.
 
 The paper's deployment claim (NorthPole speed/energy, re-derived for TPU —
 DESIGN.md §3): decode is HBM-bound, so throughput tracks the weight bytes
-streamed per generated token.  This benchmark measures the scanned-chunk
-decode path of ServeEngine under uniform int8 / int4 / int2 policies and a
-knapsack-mixed 4/2-bit policy, and reports the roofline quantity
-(policy-bits * n_params / 8) next to the measured wall rate.
+streamed per generated token.  This benchmark runs the scanned-chunk decode
+path of ServeEngine under uniform int8 / int4 / int2 policies and a
+knapsack-mixed 4/2-bit policy, in BOTH serving weight layouts:
 
-Wall numbers on CPU hosts are reference-path times, not TPU; the
-bytes-per-token column is host-independent.
+  fake_quant  int4/int8-dtype codes, dequantized at use (quantize_for_serving)
+  packed      K-major uint8 codes through kops.quant_matmul (pack_params)
+
+and reports, per policy:
+  * decode tokens/sec and us/token for each mode (wall numbers on CPU hosts
+    are ref-path times, not TPU; the byte columns are host-independent)
+  * the roofline formula bytes/token (policy-bits * n_params / 8)
+  * MEASURED resident weight bytes — the sum of the actual buffers each
+    layout keeps (packed uint8 codes, int8 edges, scales, steps), not a
+    formula — plus the reduction vs a bf16-resident model.
+
+scripts/check_bench.py gates CI on the byte columns (deterministic) and a
+loose tokens/sec floor (see benchmarks/baselines/serve.json).
 """
 from __future__ import annotations
 
@@ -22,7 +32,9 @@ from repro import configs
 from repro.core import knapsack
 from repro.models import transformer as tf
 from repro.parallel.context import local_context
-from repro.serve import ServeEngine, quantize_for_serving
+from repro.serve import (ServeEngine, bf16_resident_weight_bytes, kv_cache,
+                         pack_params, quantize_for_serving,
+                         resident_weight_bytes)
 
 
 def _policies(policy):
@@ -37,6 +49,28 @@ def _policies(policy):
     ]
 
 
+def _bench_engine(engine: ServeEngine, tokens, prompt_len: int,
+                  n_chunks: int) -> dict:
+    batch = tokens.shape[0]
+    key = jax.random.PRNGKey(0)
+    _, pre = engine.prefill(tokens)
+    cache = kv_cache.splice_prefill(
+        engine.new_cache(batch), pre,
+        jnp.full((batch,), prompt_len, jnp.int32))
+    tok = jnp.zeros((batch, 1), jnp.int32)
+    # warmup compiles the scanned decode chunk
+    cache, tok, _ = engine.decode_chunk_step(cache, tok, key, 1)
+    jax.block_until_ready(cache.layers)
+    t0 = time.perf_counter()
+    toks = None
+    for c in range(n_chunks):
+        cache, tok, toks = engine.decode_chunk_step(cache, tok, key, c + 2)
+    jax.block_until_ready(toks)
+    dt = time.perf_counter() - t0
+    n_tok = batch * engine.decode_chunk * n_chunks
+    return {"tokens_per_s": n_tok / dt, "us_per_token": dt / n_tok * 1e6}
+
+
 def run(quick: bool = False, batch: int = 4, prompt_len: int = 16,
         n_chunks: int = 2, arch: str = "olmo-1b") -> dict:
     if quick:
@@ -48,43 +82,43 @@ def run(quick: bool = False, batch: int = 4, prompt_len: int = 16,
     rng = np.random.default_rng(0)
     tokens = jnp.asarray(rng.integers(0, cfg.vocab, (batch, prompt_len)),
                          jnp.int32)
+    # what the same checkpoint would keep resident served in bf16
+    bf16_bytes = bf16_resident_weight_bytes(params)
 
-    out = {}
+    out = {"_meta": {"arch": arch, "batch": batch, "n_chunks": n_chunks,
+                     "prompt_len": prompt_len,
+                     "bf16_resident_weight_bytes": bf16_bytes}}
     for name, pol in _policies(policy):
-        qparams = quantize_for_serving(params, pol.as_arrays(), cfg)
-        pa = jax.tree.map(jnp.asarray, pol.as_arrays())
-        engine = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa,
-                             ctx=ctx,
-                             max_seq=prompt_len + (n_chunks + 1) * 16 + 16)
-        key = jax.random.PRNGKey(0)
-        _, pre = engine.prefill(tokens)
-        from repro.serve import kv_cache
-        cache = kv_cache.splice_prefill(
-            engine.new_cache(batch), pre,
-            jnp.full((batch,), prompt_len, jnp.int32))
-        tok = jnp.zeros((batch, 1), jnp.int32)
-        # warmup compiles the scanned decode chunk
-        cache, tok, _ = engine.decode_chunk_step(cache, tok, key, 1)
-        jax.block_until_ready(cache.layers)
-        t0 = time.perf_counter()
-        for c in range(n_chunks):
-            cache, tok, toks = engine.decode_chunk_step(cache, tok, key,
-                                                        c + 2)
-        jax.block_until_ready(toks)
-        dt = time.perf_counter() - t0
-        n_tok = batch * engine.decode_chunk * n_chunks
-        out[name] = {
-            "tokens_per_s": n_tok / dt,
-            "us_per_token": dt / n_tok * 1e6,
-            "weight_bytes_per_token": pol.model_bits() / 8.0,
-            "decode_chunk": engine.decode_chunk,
-            "batch": batch,
+        arrays = pol.as_arrays()
+        pa = jax.tree.map(jnp.asarray, arrays)
+        row = {"weight_bytes_per_token_roofline": pol.model_bits() / 8.0}
+        layouts = {
+            "fake_quant": quantize_for_serving(params, arrays, cfg),
+            "packed": pack_params(params, arrays, cfg),
         }
+        for mode, qp in layouts.items():
+            engine = ServeEngine(
+                cfg=cfg, params=qp, policy_arrays=pa, ctx=ctx,
+                max_seq=prompt_len + (n_chunks + 1) * 16 + 16, weights=mode)
+            rate = _bench_engine(engine, tokens, prompt_len, n_chunks)
+            row[f"tokens_per_s_{mode}"] = rate["tokens_per_s"]
+            row[f"us_per_token_{mode}"] = rate["us_per_token"]
+            row[f"resident_weight_bytes_{mode}"] = resident_weight_bytes(qp)
+            row["decode_chunk"] = engine.decode_chunk
+        row["packed_reduction_vs_bf16"] = (
+            bf16_bytes / max(row["resident_weight_bytes_packed"], 1))
+        out[name] = row
     return out
 
 
 if __name__ == "__main__":
-    for name, r in run(quick=True).items():
-        print(f"{name}: {r['tokens_per_s']:.0f} tok/s "
-              f"({r['us_per_token']:.0f}us/tok) "
-              f"weight_bytes/tok={r['weight_bytes_per_token']:.0f}")
+    report = run(quick=True)
+    bf16 = report["_meta"]["bf16_resident_weight_bytes"]
+    print(f"bf16-resident baseline: {bf16/1e6:.2f} MB")
+    for name, r in report.items():
+        if name.startswith("_"):
+            continue
+        print(f"{name}: packed {r['tokens_per_s_packed']:.0f} tok/s, "
+              f"fake_quant {r['tokens_per_s_fake_quant']:.0f} tok/s, "
+              f"packed bytes {r['resident_weight_bytes_packed']/1e6:.3f} MB "
+              f"({r['packed_reduction_vs_bf16']:.1f}x vs bf16)")

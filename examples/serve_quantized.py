@@ -1,14 +1,16 @@
-"""Serve a QAT checkpoint with REAL integer weights (int4 codes + scales).
+"""Serve a QAT checkpoint with REAL packed integer weights.
 
   PYTHONPATH=src python examples/serve_quantized.py
 
-Shows the deployment path the paper targets: the mixed-precision checkpoint
-is converted to packed integer storage and served through the continuous-
-batching scheduler — unequal prompt lengths share one fixed-slot batch, a
-request is evicted the moment it hits EOS or its token budget, and decode
-runs as one scanned dispatch per chunk.  Weight bytes drop 8×+ vs FP32
-(4×+ vs bf16), which on TPU v5e is the decode-time roofline win
-(EXPERIMENTS.md §Perf).
+Shows the deployment path the paper targets (DESIGN.md §3): the
+mixed-precision checkpoint is packed offline into K-major uint8 codes +
+per-channel scales (2 int4 / 4 int2 codes per byte, int8 edges) and served
+through the continuous-batching scheduler — unequal prompt lengths share
+one fixed-slot batch, a request is evicted the moment it hits EOS or its
+token budget, and decode runs as one scanned dispatch per chunk routed
+through kernels/quant_matmul (Pallas on TPU, exact ref path on CPU).  The
+resident/streamed weight bytes printed below are MEASURED buffer sizes,
+which on TPU v5e is the decode-time HBM-roofline win.
 """
 import jax
 import jax.numpy as jnp
@@ -21,8 +23,8 @@ from repro.data.synthetic import make_batch
 from repro.models import transformer as tf
 from repro.optim.adamw import AdamW
 from repro.parallel.context import local_context
-from repro.serve import (Request, ServeEngine, quantize_for_serving,
-                         serve_all)
+from repro.serve import (Request, ServeEngine, bf16_resident_weight_bytes,
+                         pack_params, resident_weight_bytes, serve_all)
 from repro.train.step import init_train_state, make_train_step
 
 cfg = configs.get_config("internlm2-1.8b").smoke()
@@ -41,18 +43,20 @@ gains = eagl.eagl_gains(
 mixed = policy.apply_selection(
     knapsack.select_for_budget(policy, gains, 0.7).take)
 
-# convert to the packed-integer serving layout
-qparams = quantize_for_serving(state.params, mixed.as_arrays(), cfg)
+# pack offline into the packed-integer serving layout (uint8 codes)
+pparams = pack_params(state.params, mixed.as_arrays(), cfg)
 n_params = sum(u.n_params for u in policy.units)
-print(f"serving layout: {mixed.compression_ratio():.1f}x smaller than FP32 "
-      f"({n_params/1e6:.1f}M params -> "
-      f"{mixed.model_bits()/8/1e6:.1f} MB, "
-      f"{mixed.model_bits()/8/1e3:.0f} kB streamed per decoded token)")
+packed_mb = resident_weight_bytes(pparams) / 1e6
+bf16_mb = bf16_resident_weight_bytes(state.params) / 1e6
+print(f"packed serving layout: {n_params/1e6:.1f}M params -> "
+      f"{packed_mb:.2f} MB resident (measured; bf16 would be "
+      f"{bf16_mb:.2f} MB, {bf16_mb/packed_mb:.1f}x more), roofline "
+      f"{mixed.model_bits()/8/1e3:.0f} kB streamed per decoded token")
 
-engine = ServeEngine(cfg=cfg, params=qparams,
+engine = ServeEngine(cfg=cfg, params=pparams,
                      policy_arrays=jax.tree.map(jnp.asarray,
                                                 mixed.as_arrays()),
-                     ctx=ctx, max_seq=128)
+                     ctx=ctx, max_seq=128, weights="packed")
 
 # continuous batching: 4 requests with UNEQUAL prompts through 2 slots
 rng = np.random.default_rng(0)

@@ -11,7 +11,6 @@ import argparse
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import configs
 from repro.core import knapsack

@@ -1,0 +1,134 @@
+#!/usr/bin/env python
+"""CI bench regression gate: BENCH_serve.json vs the committed baseline.
+
+    python scripts/check_bench.py \
+        [--bench BENCH_serve.json] \
+        [--baseline benchmarks/baselines/serve.json]
+
+Two classes of check (DESIGN.md §3):
+
+  * BYTE columns (resident_weight_bytes_*, weight_bytes_per_token_roofline,
+    bf16 baseline) are deterministic functions of the config + packing
+    layout — compared within a tight relative tolerance (``bytes_rtol``).
+    A layout change that silently grows resident weight bytes is exactly
+    the regression this gate exists to catch.
+  * SPEED columns (tokens_per_s_*) are host-dependent — gated only by a
+    loose floor: current >= speed_min_ratio * baseline.  Override the
+    ratio with CHECK_BENCH_SPEED_RATIO when a runner class changes.
+
+The gate also enforces the hard acceptance invariant that the int4
+policy's packed layout stays >= ``min_int4_reduction`` (3x) smaller than a
+bf16-resident model, independent of the baseline numbers.
+
+Exits nonzero on any violation, printing one line per check.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+DEFAULT_GATE = {
+    "bytes_rtol": 0.01,
+    "speed_min_ratio": 0.1,
+    "min_int4_reduction": 3.0,
+}
+
+
+def _close(a: float, b: float, rtol: float) -> bool:
+    return abs(a - b) <= rtol * max(abs(a), abs(b), 1.0)
+
+
+def check(bench: dict, baseline: dict) -> list:
+    gate = dict(DEFAULT_GATE, **baseline.get("_gate", {}))
+    env_ratio = os.environ.get("CHECK_BENCH_SPEED_RATIO")
+    if env_ratio:
+        gate["speed_min_ratio"] = float(env_ratio)
+    failures = []
+
+    def fail(msg):
+        failures.append(msg)
+        print(f"FAIL  {msg}")
+
+    def ok(msg):
+        print(f"ok    {msg}")
+
+    # deterministic byte columns
+    base_meta = baseline.get("_meta", {})
+    cur_meta = bench.get("_meta", {})
+    if "bf16_resident_weight_bytes" in base_meta:
+        a = cur_meta.get("bf16_resident_weight_bytes", -1)
+        b = base_meta["bf16_resident_weight_bytes"]
+        (ok if _close(a, b, gate["bytes_rtol"]) else fail)(
+            f"_meta.bf16_resident_weight_bytes {a} vs baseline {b}")
+
+    for policy, base_row in baseline.items():
+        if policy.startswith("_"):
+            continue
+        row = bench.get(policy)
+        if row is None:
+            fail(f"{policy}: missing from bench output")
+            continue
+        for key, base_val in base_row.items():
+            if key.startswith("resident_weight_bytes") \
+                    or key == "weight_bytes_per_token_roofline":
+                cur = row.get(key)
+                if cur is None:
+                    fail(f"{policy}.{key}: missing")
+                elif not _close(cur, base_val, gate["bytes_rtol"]):
+                    fail(f"{policy}.{key} = {cur} vs baseline {base_val} "
+                         f"(rtol {gate['bytes_rtol']})")
+                else:
+                    ok(f"{policy}.{key} = {cur}")
+            elif key.startswith("tokens_per_s"):
+                cur = row.get(key, 0.0)
+                floor = gate["speed_min_ratio"] * base_val
+                if cur < floor:
+                    fail(f"{policy}.{key} = {cur:.1f} tok/s < floor "
+                         f"{floor:.1f} ({gate['speed_min_ratio']}x of "
+                         f"baseline {base_val:.1f})")
+                else:
+                    ok(f"{policy}.{key} = {cur:.1f} tok/s "
+                       f"(floor {floor:.1f})")
+
+    # hard invariant: the paper's memory win survives, baseline or not
+    int4 = bench.get("int4", {})
+    red = int4.get("packed_reduction_vs_bf16", 0.0)
+    if red < gate["min_int4_reduction"]:
+        fail(f"int4.packed_reduction_vs_bf16 = {red:.2f}x < "
+             f"{gate['min_int4_reduction']}x")
+    else:
+        ok(f"int4.packed_reduction_vs_bf16 = {red:.2f}x "
+           f">= {gate['min_int4_reduction']}x")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", default="BENCH_serve.json")
+    ap.add_argument("--baseline", default="benchmarks/baselines/serve.json")
+    args = ap.parse_args()
+    try:
+        with open(args.bench) as f:
+            bench = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"FAIL  cannot read bench output {args.bench}: {e}")
+        return 1
+    try:
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"FAIL  cannot read baseline {args.baseline}: {e}")
+        return 1
+    failures = check(bench, baseline)
+    if failures:
+        print(f"\ncheck_bench: {len(failures)} regression(s) vs "
+              f"{args.baseline}")
+        return 1
+    print("\ncheck_bench: all checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,21 +1,61 @@
 #!/usr/bin/env bash
-# Tier-1 CI: dev deps -> test suite -> quick serve/knapsack benchmarks.
+# Tier-1 CI: dev deps -> lint -> test suite -> quick benches -> bench gate.
 #
-#   bash scripts/ci.sh
+#   bash scripts/ci.sh [--skip-bench] [--skip-tests]
 #
-# Emits BENCH_serve.json (decode tokens/sec + weight bytes/token per
-# precision policy) in the repo root.
+#   --skip-bench   tests only (the workflow's test job)
+#   --skip-tests   benches + regression gate only (the workflow's bench job)
+#
+# The bench step emits BENCH_serve.json and BENCH_knapsack.json in the repo
+# root and gates BENCH_serve.json against benchmarks/baselines/serve.json
+# (scripts/check_bench.py): byte columns tight, tokens/sec loose floor.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-# Dev-only deps (hypothesis, pytest). Offline/airgapped hosts keep going:
-# the suite importorskips hypothesis-based property tests.
+SKIP_BENCH=0
+SKIP_TESTS=0
+for arg in "$@"; do
+    case "$arg" in
+        --skip-bench) SKIP_BENCH=1 ;;
+        --skip-tests) SKIP_TESTS=1 ;;
+        *) echo "usage: ci.sh [--skip-bench] [--skip-tests]" >&2; exit 2 ;;
+    esac
+done
+
+# Dev-only deps (pytest, hypothesis, ruff). Offline/airgapped hosts keep
+# going: the suite importorskips hypothesis-based property tests and the
+# lint step below is skipped when ruff is absent.
 python -m pip install -r requirements-dev.txt \
     || echo "WARN: dev-dep install failed (offline?); property tests will skip"
 
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
+# Lint only on full runs — the workflow's split jobs (--skip-bench /
+# --skip-tests) have a dedicated lint job, so don't triple the signal.
+if [ "$SKIP_BENCH" -eq 0 ] && [ "$SKIP_TESTS" -eq 0 ]; then
+    if python -m ruff --version >/dev/null 2>&1; then
+        python -m ruff check .
+    else
+        echo "WARN: ruff unavailable; lint step skipped"
+    fi
+fi
 
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-    python -m benchmarks.run --quick --only serve,knapsack
+if [ "$SKIP_TESTS" -eq 0 ]; then
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q
+fi
 
-test -f BENCH_serve.json && echo "BENCH_serve.json written"
+if [ "$SKIP_BENCH" -eq 0 ]; then
+    rm -f BENCH_serve.json BENCH_knapsack.json
+    PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+        python -m benchmarks.run --quick --only serve,knapsack
+    # fail LOUDLY if either quick bench emitted no JSON: a bench that
+    # silently stops reporting is itself a CI regression.
+    for f in BENCH_serve.json BENCH_knapsack.json; do
+        if [ ! -s "$f" ]; then
+            echo "ERROR: quick bench emitted no $f" >&2
+            exit 1
+        fi
+        python -c "import json,sys; json.load(open(sys.argv[1]))" "$f" \
+            || { echo "ERROR: $f is not valid JSON" >&2; exit 1; }
+        echo "$f written"
+    done
+    python scripts/check_bench.py
+fi

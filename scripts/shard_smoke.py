@@ -7,12 +7,9 @@ import sys
 import traceback
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding
-from jax.sharding import PartitionSpec as P
 
 from repro import configs
-from repro.configs.shapes import ShapeSpec, batch_specs
+from repro.configs.shapes import ShapeSpec
 from repro.launch import dryrun
 from repro.launch.mesh import make_context, make_test_mesh
 from repro.models import transformer as tf
@@ -31,8 +28,6 @@ def run(arch: str):
     ctx = make_context(mesh)
     knobs = {"state_dtype": "int8", "n_microbatches": 2, "fsdp": True}
     for kind, shape in SMOKE_SHAPES.items():
-        from repro.configs.shapes import skip_reason
-        import repro.configs.shapes as shp
         reason = None
         if not cfg.causal and kind == "decode":
             reason = "encoder"

@@ -6,7 +6,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
-from repro.configs.shapes import SMOKE_SHAPES
 from repro.models import transformer as tf
 from repro.parallel.context import local_context
 

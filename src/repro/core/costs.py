@@ -17,7 +17,6 @@ from __future__ import annotations
 
 from typing import Dict, List
 
-import numpy as np
 
 
 def bmacs(policy, bits_override: Dict[str, float] | None = None) -> float:

@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Sequence
+from typing import Dict, Sequence
 
 import numpy as np
 

@@ -20,8 +20,6 @@ import dataclasses
 import time
 from typing import Callable, Dict, Optional
 
-import jax
-import jax.numpy as jnp
 
 
 @dataclasses.dataclass

@@ -18,7 +18,6 @@ from typing import Callable, Dict, Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import quant
 

@@ -15,11 +15,13 @@ produce — changing a layer from 4-bit to 2-bit does not recompile anything.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def qrange(bits: jax.Array, signed: bool = True) -> Tuple[jax.Array, jax.Array]:
@@ -147,6 +149,120 @@ def quantize_weights_int(w: jax.Array, step: jax.Array, bits: int):
     """Quantize to integer codes for storage. Returns (codes_int8, step)."""
     q = quantize_int(w, step, jnp.float32(bits))
     return q.astype(jnp.int8), step
+
+
+@functools.partial(jax.tree_util.register_dataclass,
+                   data_fields=("wp", "scale", "sa"),
+                   meta_fields=("bits", "k_dim"))
+@dataclasses.dataclass
+class PackedLinear:
+    """One dense projection in the packed serving layout (DESIGN.md §3).
+
+    ``wp`` holds the integer codes in their streaming container:
+      bits=4 -> uint8 (Kp//2, N), two K-rows per byte (low nibble first)
+      bits=2 -> uint8 (Kp//4, N), four K-rows per byte (LSB pair first)
+      bits=8 -> int8  (K, N), one code per byte (pinned edges)
+    where Kp = k_dim rounded up to the pack factor; padding K-rows are
+    zero codes, so they contribute exactly 0 to any matmul.
+
+    ``scale`` is per-output-channel (N,) f32 — a per-tensor LSQ step is
+    stored broadcast, so the layout is ready for per-channel calibration
+    without a format change.  ``sa`` is the activation LSQ step (scalar
+    f32) carried over from the checkpoint.  ``bits``/``k_dim`` are static
+    (pytree metadata): the unpack path of kernels/quant_matmul.py is
+    compile-time specialized per bit-width.
+    """
+    wp: jax.Array
+    scale: jax.Array
+    sa: jax.Array
+    bits: int
+    k_dim: int
+
+    @property
+    def pack(self) -> int:
+        return 8 // self.bits
+
+    @property
+    def n_dim(self) -> int:
+        return self.wp.shape[-1]
+
+    @property
+    def k_padded(self) -> int:
+        return self.wp.shape[0] * self.pack
+
+
+def pack_codes_kmajor(codes: jax.Array, bits: int) -> jax.Array:
+    """(K, N) integer codes -> K-major packed uint8 (ceil(K/pack), N).
+
+    K-major (pack adjacent *K*-rows into one byte) keeps N a full lane
+    dimension, so the unpacked tile feeds the MXU directly
+    (kernels/quant_matmul.py shares this layout).  K is zero-padded up to
+    the pack factor; zero codes dequantize to exactly 0.
+    """
+    assert bits in (2, 4), bits
+    pack = 8 // bits
+    c = np.asarray(codes).astype(np.int64)
+    k, n = c.shape
+    kp = -(-k // pack) * pack
+    if kp != k:
+        c = np.concatenate([c, np.zeros((kp - k, n), np.int64)], axis=0)
+    u = (c & ((1 << bits) - 1)).astype(np.uint8)
+    u = u.reshape(kp // pack, pack, n)
+    out = np.zeros((kp // pack, n), np.uint8)
+    for i in range(pack):
+        out |= u[:, i, :] << (bits * i)
+    return jnp.asarray(out)
+
+
+def unpack_codes_kmajor(wp: jax.Array, bits: int,
+                        dtype=jnp.float32) -> jax.Array:
+    """Inverse of pack_codes_kmajor: (Kp//pack, N) uint8 -> (Kp, N) codes."""
+    assert bits in (2, 4), bits
+    pack = 8 // bits
+    parts = []
+    for i in range(pack):
+        c = ((wp >> (bits * i)) & ((1 << bits) - 1)).astype(jnp.int8)
+        c = jnp.where(c >= (1 << (bits - 1)), c - (1 << bits), c)
+        parts.append(c)
+    w = jnp.stack(parts, axis=1)                  # (Kp//pack, pack, N)
+    return w.reshape(wp.shape[0] * pack, wp.shape[1]).astype(dtype)
+
+
+def pack_linear(w: jax.Array, step: jax.Array, sa, bits: int) -> PackedLinear:
+    """Quantize + pack one (K, N) weight into the serving layout.
+
+    The codes are computed with the SAME arithmetic as the fake-quant path
+    (clip(round(w/s)) in f32), so dequantizing the packed buffer reproduces
+    ``lsq_fake_quant(w, step, bits)`` bit-exactly — the packed serving path
+    stays greedy-argmax-parity with the fake-quant reference.
+    """
+    assert w.ndim == 2, w.shape
+    assert bits in (2, 4, 8), bits
+    k, n = w.shape
+    stepf = jnp.maximum(jnp.abs(jnp.asarray(step, jnp.float32)), 1e-9)
+    codes = quantize_int(w.astype(jnp.float32), stepf, jnp.float32(bits))
+    scale = jnp.broadcast_to(jnp.reshape(stepf, (-1,)), (n,)).astype(
+        jnp.float32)
+    if bits == 8:
+        wp = jnp.asarray(codes, jnp.int8)
+    else:
+        wp = pack_codes_kmajor(np.asarray(codes, np.int64), bits)
+    return PackedLinear(wp=wp, scale=scale,
+                        sa=jnp.asarray(sa, jnp.float32), bits=int(bits),
+                        k_dim=int(k))
+
+
+def packed_weight_dense(p: PackedLinear, dtype=jnp.float32) -> jax.Array:
+    """Dequantize a PackedLinear back to its (k_dim, N) weight matrix.
+
+    Dequant order matches the fake-quant path (codes * scale elementwise,
+    THEN any downstream matmul) so the two layouts agree bit-for-bit.
+    """
+    if p.bits == 8:
+        codes = p.wp.astype(jnp.float32)
+    else:
+        codes = unpack_codes_kmajor(p.wp, p.bits, jnp.float32)[:p.k_dim]
+    return (codes * p.scale[None, :].astype(jnp.float32)).astype(dtype)
 
 
 def pack_int4(codes: jax.Array) -> jax.Array:

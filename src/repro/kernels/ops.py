@@ -15,6 +15,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import quant as _quant
+from repro.core.quant import PackedLinear
 from repro.kernels import entropy_hist as _hist
 from repro.kernels import flash_attention as _flash
 from repro.kernels import lsq_fakequant as _lsq
@@ -69,6 +71,72 @@ def quant_matmul(x: jax.Array, w_packed: jax.Array, scale: jax.Array,
         return f(x, w_packed, scale)
     return _qmm.quant_matmul(x, w_packed, scale, bits=bits,
                              interpret=(impl == "interpret"), **kw)
+
+
+def packed_weight(p: PackedLinear, dtype=jnp.float32) -> jax.Array:
+    """Dequantized (k_dim, N) weight of a packed projection.
+
+    For sites that consume the weight tensor directly (MLA's absorbed
+    decode einsums) rather than as one (M,K)@(K,N) matmul — the codes
+    still *stream* packed; the unpack happens at use.
+    """
+    return _quant.packed_weight_dense(p, dtype)
+
+
+def packed_matmul(x: jax.Array, p: PackedLinear, impl: str = "auto",
+                  ) -> jax.Array:
+    """x (..., K) @ PackedLinear -> (..., N): the serving-side dense path.
+
+    Dispatch (DESIGN.md §3):
+      - bits 4/2 on TPU: the Pallas quant_matmul streams the packed uint8
+        codes from HBM (4×/8× fewer weight bytes than bf16) and unpacks
+        in VMEM.
+      - bits 4/2 on CPU (or impl="ref"): ref.dequant_matmul — exact
+        dequantize-then-matmul in x.dtype, bit-parity with the fake-quant
+        reference.
+      - bits 8 (pinned edges): plain dequant matmul everywhere (the kernel
+        packs 4/2-bit only; int8 already streams at 1 byte/code).
+
+    K not divisible by the pack factor is handled by zero-padding x up to
+    the packed buffer's K — padding rows hold zero codes and contribute
+    exactly 0.
+    """
+    k = x.shape[-1]
+    assert k == p.k_dim, (x.shape, p.k_dim)
+    if p.bits == 8:
+        w = p.wp.astype(jnp.float32) * p.scale[None, :].astype(jnp.float32)
+        return x @ w.astype(x.dtype)
+    kp = p.k_padded
+    if kp != k:
+        pad = [(0, 0)] * (x.ndim - 1) + [(0, kp - k)]
+        x = jnp.pad(x, pad)
+    impl = _resolve(impl)
+    if impl == "ref":
+        return ref.dequant_matmul(x, p.wp, p.scale, p.bits)
+    lead, n = x.shape[:-1], p.n_dim
+    x2 = x.reshape(-1, kp)
+    m = x2.shape[0]
+    mp = m if m <= 128 else -(-m // 128) * 128
+    if mp != m:
+        x2 = jnp.pad(x2, ((0, mp - m), (0, 0)))
+    # Block sizes must DIVIDE the problem dims (quant_matmul asserts) —
+    # real model dims are not always multiples of the 128/512 defaults
+    # (e.g. d_ff=11008 % 512 == 256), so shrink to the largest divisor.
+    # Non-MXU-aligned blocks cost perf, never correctness.
+    pack = 8 // p.bits
+    bn = _largest_divisor(n, 128)
+    bk = _largest_divisor(kp // pack, 512 // pack) * pack
+    out = _qmm.quant_matmul(x2, p.wp, p.scale, bits=p.bits, bn=bn, bk=bk,
+                            interpret=(impl == "interpret"))
+    return out[:m].astype(x.dtype).reshape(lead + (n,))
+
+
+def _largest_divisor(dim: int, cap: int) -> int:
+    """Largest divisor of ``dim`` that is <= ``cap``."""
+    for d in range(min(cap, dim), 0, -1):
+        if dim % d == 0:
+            return d
+    return 1
 
 
 def flash_attention(q, k, v, causal: bool = True, impl: str = "auto", **kw):

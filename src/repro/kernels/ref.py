@@ -45,6 +45,24 @@ def lsq_fakequant(x: jax.Array, step: jax.Array, bits: jax.Array) -> jax.Array:
 
 
 # ------------------------------------------------------------- quant_matmul
+def dequant_matmul(x: jax.Array, w_packed: jax.Array, scale: jax.Array,
+                   bits: int) -> jax.Array:
+    """The CPU/dry-run serving path: dequantize-then-matmul in x's dtype.
+
+    Unlike the bf16 Pallas oracles below (scale applied after the fp32
+    accumulator), this dequantizes codes * scale elementwise FIRST and runs
+    the matmul in ``x.dtype`` — the exact op order of the fake-quant
+    reference (models/common.qproj), so packed serving is greedy-argmax
+    bit-parity with the fake-quant path on CPU.  x: (..., Kp*?); the last
+    dim must equal w_packed's unpacked K (callers pad x with zeros when the
+    logical K is not a pack multiple — padding codes are 0, contributing
+    exactly 0).
+    """
+    unpack = unpack_w4 if bits == 4 else unpack_w2
+    w = unpack(w_packed, jnp.float32) * scale[None, :].astype(jnp.float32)
+    return x @ w.astype(x.dtype)
+
+
 def quant_matmul_w4(x: jax.Array, w_packed: jax.Array, scale: jax.Array,
                     ) -> jax.Array:
     """x (M,K) bf16 @ int4-weights packed 2-per-uint8 along K.

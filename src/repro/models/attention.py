@@ -20,7 +20,6 @@ from typing import Callable, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import quant
 from repro.models import common
 from repro.models.common import init_qdense, qproj
 

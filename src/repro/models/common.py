@@ -14,6 +14,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import quant
+from repro.core.quant import PackedLinear
+from repro.kernels import ops as kops
 
 
 # --------------------------------------------------------------------- norms
@@ -111,13 +113,16 @@ def qdense(x: jax.Array, w: jax.Array, sw: jax.Array, sa: jax.Array,
     return xq @ wq
 
 
-def weight_of(p: dict, bits) -> jax.Array:
+def weight_of(p, bits) -> jax.Array:
     """The (de)quantized weight of a param dict.
 
     Training/eval dicts hold {'w','sw'} -> LSQ fake-quant at `bits`.
     Serving dicts hold {'wq' int4-codes, 'scale'} (serve/engine.py) -> the
-    codes stream from HBM at 4 bits and dequantize at use.
+    codes stream from HBM at 4 bits and dequantize at use.  PackedLinear
+    (serve/packing.py) -> packed uint8 codes, unpacked at use.
     """
+    if isinstance(p, PackedLinear):
+        return kops.packed_weight(p, jnp.float32)
     if "wpre" in p:
         return p["wpre"]          # pre-quantized once per step (§Perf A3)
     if "wq" in p:
@@ -127,8 +132,16 @@ def weight_of(p: dict, bits) -> jax.Array:
     return quant.lsq_fake_quant(p["w"], p["sw"].astype(jnp.float32), bits)
 
 
-def qproj(x, p: dict, bits) -> jax.Array:
-    """Quantized projection over a param dict (train or serve layout)."""
+def qproj(x, p, bits) -> jax.Array:
+    """Quantized projection over a param dict (train or serve layout) or a
+    PackedLinear (packed serving layout — routed through kops, i.e. the
+    Pallas quant_matmul on TPU and the exact ref path on CPU)."""
+    if isinstance(p, PackedLinear):
+        # activation fake-quant uses the TRACED policy bits (identical to
+        # the fake-quant path, preserving argmax parity); the weight side
+        # is compile-time specialized on the packed static bits.
+        xq = quant.lsq_fake_quant(x, p.sa.astype(jnp.float32), bits)
+        return kops.packed_matmul(xq, p)
     xq = quant.lsq_fake_quant(x, p["sa"].astype(jnp.float32), bits)
     w = weight_of(p, bits)
     return xq @ w.astype(xq.dtype)

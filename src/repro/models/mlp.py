@@ -15,7 +15,6 @@ vectors sliced per shard.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
@@ -23,7 +22,9 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core import quant
+from repro.kernels import ops as kops
 from repro.models.common import init_qdense, qproj
+from repro.parallel.compat import shard_map
 
 
 def act_fn(kind: str, x):
@@ -132,22 +133,40 @@ def _moe_local(x_flat, top_ids, top_w, gate_w, up_w, down_w, sa_gate,
     buf = buf.reshape(n_local, capacity, d)
 
     # Expert FFN (weights pre-quantized; per-expert act fake-quant here).
-    def wmat(bank, dt):
-        if isinstance(bank, dict):     # serve: int4 codes gathered, dequant
-            return (bank["wq"].astype(jnp.float32)
-                    * bank["scale"].astype(jnp.float32)[:, None, None]
-                    ).astype(dt)
-        return bank.astype(dt)
+    if isinstance(gate_w, (list, tuple)):
+        # Packed serving layout (serve/packing.py): each expert is its own
+        # PackedLinear — mixed per-expert bit-widths give mixed packed
+        # shapes, so the bank cannot stay one stacked einsum operand.  The
+        # python loop unrolls over the (small) local expert count; each
+        # expert's matmuls route through kops.packed_matmul.
+        sa_g = sa_gate.astype(jnp.float32)
+        sa_d = sa_down.astype(jnp.float32)
+        outs = []
+        for e in range(n_local):
+            xq = quant.lsq_fake_quant(buf[e], sa_g[e], bits_gateup[e])
+            g = kops.packed_matmul(xq, gate_w[e])
+            u = kops.packed_matmul(xq, up_w[e])
+            h = act_fn(activation, g) * u
+            hq = quant.lsq_fake_quant(h, sa_d[e], bits_down[e])
+            outs.append(kops.packed_matmul(hq, down_w[e]))
+        out = jnp.stack(outs).reshape(n_local * capacity, d)
+    else:
+        def wmat(bank, dt):
+            if isinstance(bank, dict):  # serve: int4 codes gathered, dequant
+                return (bank["wq"].astype(jnp.float32)
+                        * bank["scale"].astype(jnp.float32)[:, None, None]
+                        ).astype(dt)
+            return bank.astype(dt)
 
-    sa_g = sa_gate.astype(jnp.float32)[:, None, None]
-    xq = quant.lsq_fake_quant(buf, sa_g, bits_gateup[:, None, None])
-    g = jnp.einsum("ecd,edf->ecf", xq, wmat(gate_w, xq.dtype))
-    u = jnp.einsum("ecd,edf->ecf", xq, wmat(up_w, xq.dtype))
-    h = act_fn(activation, g) * u
-    sa_d = sa_down.astype(jnp.float32)[:, None, None]
-    hq = quant.lsq_fake_quant(h, sa_d, bits_down[:, None, None])
-    out = jnp.einsum("ecf,efd->ecd", hq, wmat(down_w, hq.dtype))
-    out = out.reshape(n_local * capacity, d)
+        sa_g = sa_gate.astype(jnp.float32)[:, None, None]
+        xq = quant.lsq_fake_quant(buf, sa_g, bits_gateup[:, None, None])
+        g = jnp.einsum("ecd,edf->ecf", xq, wmat(gate_w, xq.dtype))
+        u = jnp.einsum("ecd,edf->ecf", xq, wmat(up_w, xq.dtype))
+        h = act_fn(activation, g) * u
+        sa_d = sa_down.astype(jnp.float32)[:, None, None]
+        hq = quant.lsq_fake_quant(h, sa_d, bits_down[:, None, None])
+        out = jnp.einsum("ecf,efd->ecd", hq, wmat(down_w, hq.dtype))
+        out = out.reshape(n_local * capacity, d)
 
     # Combine: gather expert rows back, weight by router prob, scatter-add.
     rows = jnp.where(keep[:, None], out[jnp.minimum(dest, out.shape[0] - 1)],
@@ -188,7 +207,8 @@ def moe_apply(p, x, bits, cfg, ctx):
     # bf16 — XLA would otherwise hoist the f32 upcast of the fake-quant
     # above the gather and ship f32 (§Perf A1).  Serve-layout banks stay
     # int4 codes THROUGH the gather (8× less wire) and dequantize inside.
-    serve = "wq" in p["gate"]
+    packed = isinstance(p["gate"], (list, tuple))
+    serve = packed or "wq" in p["gate"]
     if serve:
         qgate, qup, qdown = p["gate"], p["up"], p["down"]
     else:
@@ -197,9 +217,18 @@ def moe_apply(p, x, bits, cfg, ctx):
         qgate = _quant_bank(p["gate"], bits["moe_gateup"])
         qup = _quant_bank(p["up"], bits["moe_gateup"])
         qdown = _quant_bank(p["down"], bits["moe_down"])
-    sa_gate = p["gate"]["sa"]
-    sa_down = p["down"]["sa"]
+    if packed:
+        sa_gate = jnp.stack([e.sa for e in p["gate"]])
+        sa_down = jnp.stack([e.sa for e in p["down"]])
+    else:
+        sa_gate = p["gate"]["sa"]
+        sa_down = p["down"]["sa"]
 
+    if packed and ctx.mesh is not None and n_shards > 1:
+        raise NotImplementedError(
+            "packed MoE banks are a single-host serving layout; shard-mapped "
+            "expert parallelism serves the int-code layout "
+            "(quantize_for_serving) instead")
     if ctx.mesh is not None and n_shards > 1:
         # Tokens are sharded over the batch axes when divisible (decode with
         # tiny batches replicates its handful of tokens instead).
@@ -222,7 +251,7 @@ def moe_apply(p, x, bits, cfg, ctx):
                         for k in bank}
             return P(ma, None, None)
 
-        y_flat = jax.shard_map(
+        y_flat = shard_map(
             shard_fn, mesh=ctx.mesh,
             in_specs=(P(bspec, None), P(bspec, None), P(bspec, None),
                       wspec(qgate), wspec(qup), wspec(qdown),

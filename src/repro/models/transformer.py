@@ -14,8 +14,7 @@ arrays next to the stacked params; caches likewise.  Modes:
 """
 from __future__ import annotations
 
-import functools
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -301,8 +300,35 @@ def apply(params, policy_arrays, batch: Dict, cfg, ctx, mode: str = "train",
         new_caches[f"prefix{i}"] = nc
         aux_total = aux_total + aux
 
-    # ---- scanned repeats ----
-    if cfg.n_repeats:
+    # ---- repeats: scanned (stacked layout) or unrolled (packed layout) ----
+    if cfg.n_repeats and isinstance(params["pat"], (list, tuple)):
+        # Packed serving layout (serve/packing.py): per-layer packed
+        # buffers have bit-width-dependent shapes (int4 packs 2 codes/byte,
+        # int2 packs 4), so a mixed-precision stack cannot ride one scan —
+        # pattern layers run python-unrolled.  Compile cost is O(n_layers),
+        # the standard serving trade; the O(1)-compile scan below stays the
+        # train/dry-run path.
+        pat_caches = (caches or {}).get("pat")
+        per_layer_caches = []
+        for layer, layer_params in enumerate(params["pat"]):
+            layer_cache = (None if pat_caches is None else
+                           jax.tree.map(lambda l, i=layer: l[i], pat_caches))
+            out_cache = {}
+            for j, bdef in enumerate(cfg.pattern):
+                bits = {k: v[layer]
+                        for k, v in policy_arrays[f"pat{j}"].items()}
+                cache_j = (None if layer_cache is None
+                           else layer_cache[f"p{j}"])
+                x, nc, aux = block_apply(layer_params[f"p{j}"], x, bits, cfg,
+                                         ctx, bdef, mode, cache_j, positions,
+                                         mrope_positions)
+                out_cache[f"p{j}"] = nc if nc is not None else 0
+                aux_total = aux_total + aux
+            per_layer_caches.append(out_cache)
+        new_caches["pat"] = jax.tree.map(
+            lambda *ls: jnp.stack([jnp.asarray(l) for l in ls]),
+            *per_layer_caches)
+    elif cfg.n_repeats:
         pat_bits = _pattern_bits(policy_arrays, cfg)
         pat_caches = (caches or {}).get("pat")
 

@@ -13,12 +13,12 @@ the usual scan.  Bubble fraction = (S-1)/(M+S-1).
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+from repro.parallel.compat import shard_map
 
 
 def pipeline_apply(block_fn: Callable, stage_params, x_microbatches,
@@ -69,7 +69,7 @@ def pipeline_apply(block_fn: Callable, stage_params, x_microbatches,
         return outs
 
     pspec = jax.tree.map(lambda _: P(axis), stage_params)
-    return jax.shard_map(
+    return shard_map(
         shard_body, mesh=mesh,
         in_specs=(pspec, P()), out_specs=P(),
         check_vma=False,

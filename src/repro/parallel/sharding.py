@@ -15,7 +15,7 @@ models/transformer.init_params for every architecture in the pool.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import numpy as np

@@ -1,11 +1,17 @@
 """Serving engine: real integer-quantized weights, prefill + scanned decode.
 
-``quantize_for_serving`` converts a QAT checkpoint into the serve layout:
-every quant-unit's weights become **int4 codes + fp32 scale** (2-bit layers
-keep a ±2 code range inside int4 — scan-stacked layers must share a dtype;
-the extra 2-bit packing is a kernel-granularity optimization handled by
-kernels/quant_matmul.py on TPU — DESIGN.md §3).  Embedding/LM-head codes
-are int8 (pinned 8-bit).
+Two serving weight layouts (DESIGN.md §3):
+
+``quantize_for_serving`` — the **fake_quant** layout: every quant-unit's
+weights become int4 codes + fp32 scale (2-bit layers keep a ±2 code range
+inside int4 — scan-stacked layers must share a dtype), dequantized at use.
+Embedding/LM-head codes are int8 (pinned 8-bit).
+
+``serve.packing.pack_params`` — the **packed** layout: K-major uint8 codes
+(2 int4 / 4 int2 per byte) + per-output-channel scales, routed through
+kernels/quant_matmul.py (Pallas on TPU; exact ref path on CPU).  Pick with
+``ServeEngine(weights="packed")``; both layouts are greedy-argmax parity
+with each other (tests/test_serve.py).
 
 ``ServeEngine`` is the compute layer of the serving subsystem:
 
@@ -40,7 +46,7 @@ import numpy as np
 
 from repro.core import quant
 from repro.models import transformer as tf
-from repro.serve import kv_cache, sampling
+from repro.serve import kv_cache, packing, sampling
 from repro.serve.kv_cache import ServeCache
 
 
@@ -77,17 +83,12 @@ def quantize_for_serving(params: dict, policy_arrays: dict, cfg) -> dict:
         return node
 
     out = walk(params, ())
-    # embedding / head: int8 (pinned 8-bit)
+    # embedding / head: int8 (pinned 8-bit; codes shared bit-identically
+    # with the packed layout via packing.quantize_edge)
     for edge in ("embed", "head"):
         if edge in params and isinstance(params[edge], dict) \
                 and "w" in params[edge]:
-            p = params[edge]
-            w = p["w"].astype(jnp.float32)
-            step = jnp.maximum(jnp.abs(p["sw"]).astype(jnp.float32), 1e-9)
-            codes = quant.quantize_int(w, step, jnp.float32(8.0))
-            out[edge] = {"wq": codes.astype(jnp.int8), "scale": step}
-            if "sa" in p:
-                out[edge]["sa"] = p["sa"]
+            out[edge] = packing.quantize_edge(params[edge])
     return out
 
 
@@ -144,8 +145,19 @@ class ServeEngine:
     decode_chunk: int = 16
     sampler: sampling.SamplerConfig = sampling.GREEDY
     cache_dtype: Any = None         # None -> cfg.compute_dtype (exact parity)
+    weights: str = "fake_quant"     # "fake_quant" | "packed" (DESIGN.md §3)
 
     def __post_init__(self):
+        if self.weights not in ("fake_quant", "packed"):
+            raise ValueError(f"weights must be 'fake_quant' or 'packed', "
+                             f"got {self.weights!r}")
+        is_packed = packing.params_are_packed(self.params)
+        if is_packed != (self.weights == "packed"):
+            have = "packed" if is_packed else "fake_quant"
+            raise ValueError(
+                f"ServeEngine(weights={self.weights!r}) but params are in "
+                f"the {have!r} layout — build packed params with "
+                f"serve.packing.pack_params(checkpoint, policy_arrays, cfg)")
         if self.cache_dtype is None:
             self.cache_dtype = self.cfg.compute_dtype
         # The model's prefill/decode paths emit cache entries in

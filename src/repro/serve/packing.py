@@ -1,0 +1,175 @@
+"""Offline packed-weight deployment pass (DESIGN.md §3).
+
+``pack_params`` walks a QAT checkpoint with a knapsack-selected
+``PrecisionPolicy`` (as arrays) and converts every selectable unit's
+weights into the **packed serving layout**:
+
+  * int4 units -> K-major uint8, 2 codes/byte  (4× fewer HBM bytes vs bf16)
+  * int2 units -> K-major uint8, 4 codes/byte  (8×)
+  * pinned 8-bit edges (embedding / LM head / routers) -> int8 codes
+  * per-output-channel f32 scales (a per-tensor LSQ step is stored
+    broadcast, so per-channel calibration needs no format change)
+
+Codes are computed with the same clip(round(w/s)) arithmetic as the
+fake-quant path, so a packed model is greedy-argmax bit-parity with the
+fake-quant serving layout on the CPU ref path (kernels/ref.dequant_matmul);
+on TPU the packed buffers feed kernels/quant_matmul.py directly.
+
+Because mixed-precision packed buffers have bit-width-dependent shapes,
+the repeat pattern cannot stay one stacked scan operand: ``pack_params``
+unrolls it into a per-layer list — models/transformer.apply runs such
+params python-unrolled (O(n_layers) compile, the standard serving trade).
+MoE expert banks likewise unroll into per-expert ``PackedLinear`` lists
+(per-expert bit selection => per-expert packed shapes).
+
+``resident_weight_bytes`` measures the bytes a params tree actually keeps
+resident — summed over real buffers, not a bits×params formula — which is
+what benchmarks/serve_bench.py reports as the memory axis of the
+mixed-precision frontier.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quant
+from repro.core.quant import PackedLinear
+
+
+def quantize_edge(p: dict) -> dict:
+    """Pinned 8-bit edge (embedding / LM head): int8 codes + scalar scale.
+
+    Shared by quantize_for_serving (serve/engine.py) and pack_params so the
+    two serving layouts carry bit-identical edge codes (greedy parity
+    depends on it — the LM head decides the argmax).
+    """
+    w = p["w"].astype(jnp.float32)
+    step = jnp.maximum(jnp.abs(p["sw"]).astype(jnp.float32), 1e-9)
+    codes = quant.quantize_int(w, step, jnp.float32(8.0))
+    out = {"wq": codes.astype(jnp.int8), "scale": step}
+    if "sa" in p:
+        out["sa"] = p["sa"]
+    return out
+
+
+def _is_quant_node(node) -> bool:
+    return isinstance(node, dict) and "w" in node and "sw" in node \
+        and "sa" in node
+
+
+def _scalar(a, e):
+    """Per-expert slice of a possibly-per-expert step/sa array."""
+    a = jnp.asarray(a)
+    return a[e] if a.ndim >= 1 else a
+
+
+def _pack_node(node: dict, bits):
+    """One qdense ({'w','sw','sa'}) -> PackedLinear; expert banks
+    ((E, K, N) weights with (E,) steps/bits) -> per-expert list."""
+    w = node["w"]
+    if w.ndim == 3:                          # MoE expert bank
+        e = w.shape[0]
+        b = np.broadcast_to(np.asarray(bits, np.float32), (e,))
+        return [quant.pack_linear(w[i], _scalar(node["sw"], i),
+                                  _scalar(node["sa"], i), _int_bits(b[i]))
+                for i in range(e)]
+    assert w.ndim == 2, w.shape
+    b = np.asarray(bits, np.float32).reshape(-1)[0]
+    return quant.pack_linear(w, node["sw"], node["sa"], _int_bits(b))
+
+
+def _int_bits(b) -> int:
+    bi = int(round(float(b)))
+    if bi not in (2, 4, 8):
+        raise ValueError(f"packable bit-widths are 2/4/8, got {b}")
+    return bi
+
+
+def _walk(node, path, layer, slot_of, policy_arrays):
+    if _is_quant_node(node):
+        key = slot_of.get(path)
+        if key is None:
+            bits = 4.0                       # unregistered unit: safe default
+        else:
+            group, slot = key
+            bits = np.asarray(policy_arrays[group][slot])[layer]
+        return _pack_node(node, bits)
+    if isinstance(node, dict):
+        return {k: _walk(v, path + (k,), layer, slot_of, policy_arrays)
+                for k, v in node.items()}
+    return node
+
+
+def pack_params(params: dict, policy_arrays: Dict[str, Dict[str, Any]],
+                cfg) -> dict:
+    """Convert a raw QAT checkpoint into the packed serving layout.
+
+    params: the trained param pytree ({'w','sw','sa'} quant-units).
+    policy_arrays: the knapsack outcome, ``PrecisionPolicy.as_arrays()``
+    (HOST-side numpy — bit-widths become compile-time constants of the
+    packed layout).
+    """
+    from repro.models import transformer as tf
+    slot_of = tf._slot_index(cfg)
+
+    out: dict = {}
+    for key, node in params.items():
+        if key in ("embed", "head") and isinstance(node, dict) \
+                and "w" in node:
+            out[key] = quantize_edge(node)
+        elif key == "pat":
+            # Unroll the stacked repeat pattern: per-layer bit-widths give
+            # per-layer packed shapes, which cannot share one scan operand.
+            layers = []
+            for lyr in range(cfg.n_repeats):
+                sub = jax.tree.map(lambda a, i=lyr: a[i], node)
+                layers.append(_walk(sub, ("pat",), lyr, slot_of,
+                                    policy_arrays))
+            out[key] = layers
+        else:
+            out[key] = _walk(node, (key,), 0, slot_of, policy_arrays)
+    return out
+
+
+def params_are_packed(params) -> bool:
+    """True if the tree contains any PackedLinear (packed serving layout)."""
+    found = [False]
+
+    def visit(x):
+        if isinstance(x, PackedLinear):
+            found[0] = True
+        return x
+
+    jax.tree.map(visit, params,
+                 is_leaf=lambda x: isinstance(x, PackedLinear))
+    return found[0]
+
+
+def resident_weight_bytes(params) -> int:
+    """Measured bytes the params tree keeps resident: sum of ACTUAL buffer
+    sizes (packed uint8 codes, int8 edges, scales, norms, steps), not a
+    bits×n_params formula.
+
+    Note: jnp.int4 leaves (fake-quant serve layout) count 1 byte/code —
+    their host-resident container — so the packed layout's 2-codes/byte
+    advantage over the int4-dtype layout is visible in this number.
+    """
+    total = 0
+    for leaf in jax.tree.leaves(params):
+        if hasattr(leaf, "shape") and hasattr(leaf, "dtype"):
+            total += int(np.prod(leaf.shape, dtype=np.int64)
+                         * np.dtype(leaf.dtype).itemsize)
+    return total
+
+
+def bf16_resident_weight_bytes(params) -> int:
+    """Bytes the same tree would keep resident served in bf16 (2 B/element)
+    — the denominator of every packed-reduction number this repo reports
+    (single definition: bench, example, and the >=3x acceptance test all
+    call this)."""
+    return int(sum(np.prod(leaf.shape, dtype=np.int64) * 2
+                   for leaf in jax.tree.leaves(params)
+                   if hasattr(leaf, "shape")))

@@ -13,8 +13,6 @@ carries int8 codes instead of bf16 gradients (optim/grad_compress.py).
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Any, Callable, Dict, NamedTuple, Optional
 
 import jax
@@ -23,6 +21,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.models import transformer as tf
 from repro.optim import grad_compress
+from repro.parallel.compat import shard_map
 
 
 class TrainState(NamedTuple):
@@ -149,7 +148,7 @@ def make_train_step(cfg, ctx, optimizer, *, loss_fn: Optional[Callable] = None,
         if errors is None:
             errors = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
                                   state.params)
-        new_params, new_opt, new_err, metrics = jax.shard_map(
+        new_params, new_opt, new_err, metrics = shard_map(
             body, mesh=ctx.mesh,
             in_specs=(P(), P(), P(), P(), batch_pspecs(batch, axis)),
             out_specs=(P(), P(), P(), P()),

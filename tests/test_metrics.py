@@ -5,7 +5,6 @@ import numpy as np
 import pytest
 
 from repro import configs
-from repro.core import knapsack
 from repro.core.metrics import (alps, baselines, eagl, hawq)
 from repro.models import transformer as tf
 from repro.parallel.context import local_context

@@ -1,0 +1,174 @@
+"""Packed serving layout (serve/packing.py + core.quant.PackedLinear).
+
+Edge cases the deployment path must get right: K not divisible by the pack
+factor (padding rows contribute exactly 0), the int2 code range [-2, 1],
+per-expert mixed bit-widths inside one MoE bank, and ref-vs-Pallas
+quant_matmul agreement on the buffers ``pack_params`` actually emits.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import knapsack, quant
+from repro.core.quant import PackedLinear
+from repro.kernels import ops
+from repro.models import transformer as tf
+from repro.serve import (bf16_resident_weight_bytes, pack_params,
+                         params_are_packed, resident_weight_bytes)
+from repro.serve.packing import _pack_node
+
+
+# ------------------------------------------------------------ pack/unpack
+@pytest.mark.parametrize("bits", [2, 4])
+def test_pack_unpack_roundtrip(rng, bits):
+    lo, hi = (-2, 2) if bits == 2 else (-8, 8)
+    codes = rng.integers(lo, hi, size=(24, 16))
+    wp = quant.pack_codes_kmajor(jnp.asarray(codes), bits)
+    assert wp.dtype == jnp.uint8
+    assert wp.shape == (24 // (8 // bits), 16)
+    back = np.asarray(quant.unpack_codes_kmajor(wp, bits, jnp.int32))
+    np.testing.assert_array_equal(back, codes)
+
+
+def test_int2_code_range(rng):
+    """2-bit codes saturate at [-2, 1] and round-trip exactly."""
+    w = jnp.asarray(rng.normal(size=(32, 8)) * 10.0, jnp.float32)  # clips hard
+    p = quant.pack_linear(w, jnp.float32(0.1), jnp.float32(0.05), bits=2)
+    codes = np.asarray(quant.unpack_codes_kmajor(p.wp, 2, jnp.int32))
+    assert codes.max() <= 1 and codes.min() >= -2
+    # and both saturation rails are actually hit with this step
+    assert codes.max() == 1 and codes.min() == -2
+
+
+@pytest.mark.parametrize("bits,k", [(4, 131), (2, 130)])
+def test_k_not_divisible_by_pack(rng, bits, k):
+    """Padding K-rows hold zero codes and contribute exactly 0."""
+    pack = 8 // bits
+    assert k % pack != 0
+    n = 16
+    w = jnp.asarray(rng.normal(size=(k, n)) * 0.05, jnp.float32)
+    step = quant.init_step_from_tensor(w, float(bits))
+    p = quant.pack_linear(w, step, jnp.float32(0.05), bits=bits)
+    kp = p.k_padded
+    assert kp == -(-k // pack) * pack and p.k_dim == k
+    codes = np.asarray(quant.unpack_codes_kmajor(p.wp, bits, jnp.int32))
+    np.testing.assert_array_equal(codes[k:], np.zeros((kp - k, n), np.int64))
+
+    x = jnp.asarray(rng.normal(size=(4, k)), jnp.float32)
+    got = np.asarray(ops.packed_matmul(x, p, impl="ref"))
+    # oracle: dequantize (pad rows sliced off) then matmul
+    want = np.asarray(x @ quant.packed_weight_dense(p, jnp.float32))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+    # the dequantized weight itself equals the fake-quant weight bit-exactly
+    np.testing.assert_array_equal(
+        np.asarray(quant.packed_weight_dense(p)),
+        np.asarray(quant.lsq_fake_quant(w, step, jnp.float32(bits))))
+
+
+def test_bits8_edge_passthrough(rng):
+    """Pinned 8-bit projections stay int8 codes (1 byte each, no packing)."""
+    w = jnp.asarray(rng.normal(size=(64, 32)) * 0.05, jnp.float32)
+    step = quant.init_step_from_tensor(w, 8.0)
+    p = quant.pack_linear(w, step, jnp.float32(0.05), bits=8)
+    assert p.wp.dtype == jnp.int8 and p.wp.shape == (64, 32)
+    x = jnp.asarray(rng.normal(size=(3, 64)), jnp.float32)
+    got = np.asarray(ops.packed_matmul(x, p))
+    want = np.asarray(
+        x @ quant.lsq_fake_quant(w, step, jnp.float32(8.0)))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+# ------------------------------------------------------------- MoE banks
+def test_moe_bank_per_expert_mixed_bits(rng):
+    """One bank, per-expert 4/2-bit selection: per-expert packed shapes and
+    bit-exact dequant against each expert's fake-quant weight."""
+    e, k, n = 4, 32, 24
+    w = jnp.asarray(rng.normal(size=(e, k, n)) * 0.05, jnp.float32)
+    sw = jnp.asarray(rng.uniform(0.01, 0.03, size=(e,)), jnp.float32)
+    sa = jnp.asarray(rng.uniform(0.02, 0.05, size=(e,)), jnp.float32)
+    bits = np.asarray([4.0, 2.0, 4.0, 2.0], np.float32)
+    bank = _pack_node({"w": w, "sw": sw, "sa": sa}, bits)
+    assert isinstance(bank, list) and len(bank) == e
+    assert bank[0].wp.shape == (k // 2, n)       # int4: 2 codes/byte
+    assert bank[1].wp.shape == (k // 4, n)       # int2: 4 codes/byte
+    for i in range(e):
+        assert bank[i].bits == int(bits[i])
+        np.testing.assert_array_equal(np.asarray(bank[i].sa),
+                                      np.asarray(sa[i]))
+        want = quant.lsq_fake_quant(w[i], sw[i], jnp.float32(bits[i]))
+        np.testing.assert_array_equal(
+            np.asarray(quant.packed_weight_dense(bank[i])), np.asarray(want))
+
+
+# --------------------------------------------- pack_params + real buffers
+@pytest.fixture(scope="module")
+def packed_smoke():
+    cfg = configs.get_config("olmo-1b").smoke()
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    policy = tf.build_policy(cfg)
+    mixed = policy.apply_selection(knapsack.select_for_budget(
+        policy, knapsack.synthetic_gains(policy), budget_frac=0.7).take)
+    return cfg, params, policy, pack_params(params, mixed.as_arrays(), cfg)
+
+
+def _packed_leaves(tree):
+    out = []
+    jax.tree.map(lambda x: out.append(x) if isinstance(x, PackedLinear)
+                 else None,
+                 tree, is_leaf=lambda x: isinstance(x, PackedLinear))
+    return out
+
+
+def test_pack_params_layout(packed_smoke):
+    cfg, params, policy, pparams = packed_smoke
+    assert params_are_packed(pparams)
+    assert isinstance(pparams["pat"], list) and \
+        len(pparams["pat"]) == cfg.n_repeats
+    assert pparams["embed"]["wq"].dtype == jnp.int8   # pinned 8-bit edge
+    leaves = _packed_leaves(pparams)
+    assert {p.bits for p in leaves} <= {2, 4, 8}
+    assert {p.bits for p in leaves} >= {2, 4}         # genuinely mixed
+    for p in leaves:
+        assert p.wp.dtype == (jnp.int8 if p.bits == 8 else jnp.uint8)
+        assert p.scale.shape == (p.n_dim,)            # per-output-channel
+
+
+@pytest.mark.parametrize("bits", [4, 2])
+def test_ref_vs_pallas_on_packed_buffers(rng, packed_smoke, bits):
+    """ops.quant_matmul (Pallas, interpret) agrees with the exact ref path
+    on the buffers pack_params actually emits — not synthetic codes."""
+    cfg, params, policy, pparams = packed_smoke
+    p = next(pl for pl in _packed_leaves(pparams) if pl.bits == bits)
+    x = jnp.asarray(rng.normal(size=(128, p.k_dim)), jnp.bfloat16)
+    got = np.asarray(ops.packed_matmul(x, p, impl="interpret"), np.float32)
+    want = np.asarray(ops.packed_matmul(x, p, impl="ref"), np.float32)
+    np.testing.assert_allclose(got, want, rtol=3e-2, atol=3e-2)
+
+
+@pytest.mark.parametrize("bits,k,n", [(4, 1088, 192), (2, 1096, 80)])
+def test_pallas_path_non_divisible_blocks(rng, bits, k, n):
+    """Regression: model dims that don't divide the 512/128 Pallas block
+    defaults (e.g. d_ff=11008 % 512 == 256) must shrink the block, not
+    trip quant_matmul's divisibility assert."""
+    assert k % 512 != 0 and n % 128 != 0
+    w = jnp.asarray(rng.normal(size=(k, n)) * 0.05, jnp.float32)
+    step = quant.init_step_from_tensor(w, float(bits))
+    p = quant.pack_linear(w, step, jnp.float32(0.05), bits=bits)
+    x = jnp.asarray(rng.normal(size=(32, k)), jnp.bfloat16)
+    got = np.asarray(ops.packed_matmul(x, p, impl="interpret"), np.float32)
+    want = np.asarray(ops.packed_matmul(x, p, impl="ref"), np.float32)
+    np.testing.assert_allclose(got, want, rtol=3e-2, atol=3e-2)
+
+
+def test_resident_bytes_reduction(packed_smoke):
+    """Measured packed buffers: >=3x smaller than a bf16-resident model."""
+    cfg, params, policy, pparams = packed_smoke
+    # int4-everywhere policy (the acceptance bar's policy)
+    p4 = pack_params(params, policy.uniform(4.0).as_arrays(), cfg)
+    bf16_bytes = bf16_resident_weight_bytes(params)
+    packed4 = resident_weight_bytes(p4)
+    assert packed4 * 3 <= bf16_bytes, (packed4, bf16_bytes)
+    # the mixed 4/2 policy packs tighter still
+    assert resident_weight_bytes(pparams) < packed4

@@ -9,7 +9,8 @@ from repro.core import knapsack
 from repro.models import transformer as tf
 from repro.parallel.context import local_context
 from repro.serve import (ContinuousBatchingScheduler, Request, SamplerConfig,
-                         ServeEngine, quantize_for_serving, sample, serve_all)
+                         ServeEngine, pack_params, quantize_for_serving,
+                         sample, serve_all)
 
 
 @pytest.fixture(scope="module")
@@ -153,6 +154,110 @@ def test_engine_batched_unequal_lengths(setup):
     solo1 = np.asarray(engine.generate(jnp.asarray(toks[1:]), n_new=16))
     np.testing.assert_array_equal(out[0], solo0[0])
     np.testing.assert_array_equal(out[1], solo1[0])
+
+
+# ----------------------------------------------------------- packed weights
+def test_packed_engine_parity_uniform_int4(setup):
+    """weights='packed' (uint8 K-major codes through kops.quant_matmul) is
+    greedy-argmax parity with the fake-quant path for >=16 tokens."""
+    cfg, ctx, params, policy, pa, qparams = setup
+    pparams = pack_params(params, policy.as_arrays(), cfg)   # uniform int4
+    e_fq = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx,
+                       max_seq=64)
+    e_pk = ServeEngine(cfg=cfg, params=pparams, policy_arrays=pa, ctx=ctx,
+                       max_seq=64, weights="packed")
+    rng = np.random.default_rng(16)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab, (2, 12)), jnp.int32)
+    got = np.asarray(e_pk.generate(prompt, n_new=16))
+    want = np.asarray(e_fq.generate(prompt, n_new=16))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_packed_engine_parity_mixed_knapsack(setup):
+    """Packed parity under a REAL mixed 4/2-bit knapsack policy (per-layer
+    packed shapes force the unrolled serving path)."""
+    cfg, ctx, params, policy, pa, qparams = setup
+    mixed = policy.apply_selection(knapsack.select_for_budget(
+        policy, knapsack.synthetic_gains(policy), budget_frac=0.7).take)
+    bits = [mixed.bits_of(u.name) for u in policy.selectable_units()]
+    assert 2.0 in bits and 4.0 in bits
+    pa_mixed = jax.tree.map(jnp.asarray, mixed.as_arrays())
+    qmixed = quantize_for_serving(params, mixed.as_arrays(), cfg)
+    pmixed = pack_params(params, mixed.as_arrays(), cfg)
+    e_fq = ServeEngine(cfg=cfg, params=qmixed, policy_arrays=pa_mixed,
+                       ctx=ctx, max_seq=64)
+    e_pk = ServeEngine(cfg=cfg, params=pmixed, policy_arrays=pa_mixed,
+                       ctx=ctx, max_seq=64, weights="packed")
+    rng = np.random.default_rng(17)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab, (1, 12)), jnp.int32)
+    got = np.asarray(e_pk.generate(prompt, n_new=16))
+    want = np.asarray(e_fq.generate(prompt, n_new=16))
+    np.testing.assert_array_equal(got, want)
+    # and both match the full-context oracle
+    oracle = stepwise_reference(qmixed, pa_mixed, cfg, ctx,
+                                np.asarray(prompt), 16)
+    np.testing.assert_array_equal(got[0], oracle[0])
+
+
+def test_packed_engine_parity_moe_per_expert_bits(setup):
+    """End-to-end packed parity for an MoE config whose knapsack selection
+    mixes 4/2-bit WITHIN one expert bank (exercises the per-expert
+    PackedLinear loop in mlp._moe_local)."""
+    cfg = configs.get_config("dbrx-132b").smoke()
+    ctx = local_context()
+    params = tf.init_params(cfg, jax.random.PRNGKey(1))
+    policy = tf.build_policy(cfg)
+    mixed = policy.apply_selection(knapsack.select_for_budget(
+        policy, knapsack.synthetic_gains(policy), budget_frac=0.6).take)
+    arr = mixed.as_arrays()
+    assert any("moe" in slot and len(set(a[lyr].tolist())) > 1
+               for d in arr.values() for slot, a in d.items()
+               if a.ndim == 2 for lyr in range(a.shape[0])), \
+        "selection must mix bits inside at least one expert bank"
+    pa = jax.tree.map(jnp.asarray, arr)
+    qparams = quantize_for_serving(params, arr, cfg)
+    pparams = pack_params(params, arr, cfg)
+    e_fq = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx,
+                       max_seq=40)
+    e_pk = ServeEngine(cfg=cfg, params=pparams, policy_arrays=pa, ctx=ctx,
+                       max_seq=40, weights="packed")
+    rng = np.random.default_rng(19)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab, (1, 10)), jnp.int32)
+    got = np.asarray(e_pk.generate(prompt, n_new=8))
+    want = np.asarray(e_fq.generate(prompt, n_new=8))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_weights_mode_layout_validation(setup):
+    """Engine refuses a weights= mode that contradicts the params layout."""
+    cfg, ctx, params, policy, pa, qparams = setup
+    pparams = pack_params(params, policy.as_arrays(), cfg)
+    with pytest.raises(ValueError, match="layout"):
+        ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx,
+                    max_seq=64, weights="packed")
+    with pytest.raises(ValueError, match="layout"):
+        ServeEngine(cfg=cfg, params=pparams, policy_arrays=pa, ctx=ctx,
+                    max_seq=64)
+    with pytest.raises(ValueError, match="weights"):
+        ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx,
+                    max_seq=64, weights="int4")
+
+
+def test_packed_scheduler_parity(setup):
+    """Continuous batching over the packed engine == solo greedy runs."""
+    cfg, ctx, params, policy, pa, qparams = setup
+    pparams = pack_params(params, policy.as_arrays(), cfg)
+    engine = ServeEngine(cfg=cfg, params=pparams, policy_arrays=pa, ctx=ctx,
+                         max_seq=64, weights="packed")
+    rng = np.random.default_rng(18)
+    prompts = [rng.integers(0, cfg.vocab, n).tolist() for n in (9, 14)]
+    reqs = [Request(uid=f"r{i}", prompt=p, max_new_tokens=8)
+            for i, p in enumerate(prompts)]
+    res = serve_all(engine, reqs, n_slots=2)
+    for i, p in enumerate(prompts):
+        want = stepwise_reference(qparams, pa, cfg, ctx,
+                                  np.asarray([p], np.int32), 8)
+        assert res[f"r{i}"].tokens == want[0].tolist(), f"r{i}"
 
 
 # --------------------------------------------------------------- scheduler

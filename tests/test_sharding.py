@@ -11,7 +11,11 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 def _run(code: str, timeout=560):
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(ROOT, "src")
-    env.pop("JAX_PLATFORMS", None)
+    # These tests shard over FAKE host devices (XLA_FLAGS in HEADER) — pin
+    # the platform so hosts with a half-configured accelerator plugin don't
+    # burn a 60s+ TPU probe per subprocess (or grab 1 real device and make
+    # the 8-device mesh impossible).
+    env["JAX_PLATFORMS"] = "cpu"
     out = subprocess.run([sys.executable, "-c", code], capture_output=True,
                          text=True, timeout=timeout, env=env)
     assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-2000:]

@@ -1,6 +1,5 @@
 """Train step/loop: learning, microbatch equivalence, loop fault-tolerance."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
