@@ -1,24 +1,29 @@
-"""Serving decode benchmark: tokens/sec + MEASURED resident weight bytes.
+"""Serving decode benchmark: tokens/sec + MEASURED resident weight+KV bytes.
 
 The paper's deployment claim (NorthPole speed/energy, re-derived for TPU —
-DESIGN.md §3): decode is HBM-bound, so throughput tracks the weight bytes
-streamed per generated token.  This benchmark runs the scanned-chunk decode
-path of ServeEngine under uniform int8 / int4 / int2 policies and a
-knapsack-mixed 4/2-bit policy, in BOTH serving weight layouts:
+DESIGN.md §3): decode is HBM-bound, so throughput tracks the bytes streamed
+per generated token.  PR 2 measured the WEIGHT side; this bench adds the
+KV-CACHE side — the term that actually grows with batch × context — and
+reports the combined roofline.  Per policy it runs the scanned-chunk decode
+path of ServeEngine in BOTH serving weight layouts:
 
   fake_quant  int4/int8-dtype codes, dequantized at use (quantize_for_serving)
   packed      K-major uint8 codes through kops.quant_matmul (pack_params)
 
-and reports, per policy:
+and, on the packed layout, BOTH cache modes (cache="full" compute-dtype
+buffers vs cache="quantized" int8 codes + scales).  Reported per policy:
   * decode tokens/sec and us/token for each mode (wall numbers on CPU hosts
     are ref-path times, not TPU; the byte columns are host-independent)
-  * the roofline formula bytes/token (policy-bits * n_params / 8)
-  * MEASURED resident weight bytes — the sum of the actual buffers each
-    layout keeps (packed uint8 codes, int8 edges, scales, steps), not a
-    formula — plus the reduction vs a bf16-resident model.
+  * the weight roofline formula bytes/token (policy-bits * n_params / 8)
+  * combined ``bytes_per_token_roofline_{full,quantized}``: MEASURED
+    packed-resident weight bytes + the per-request KV read per decode
+    step — the same definition ``ServeEngine.residency()`` reports
+    (serve/residency.py — the ONE byte-counting definition)
 
-scripts/check_bench.py gates CI on the byte columns (deterministic) and a
-loose tokens/sec floor (see benchmarks/baselines/serve.json).
+and in ``_meta.kv``: measured resident KV bytes for the full / int8 /
+packed-int4 cache layouts of the bench's (batch, S_max) allocation, plus
+their reduction ratios — scripts/check_bench.py gates these tightly and
+enforces the hard >=1.8x (int8) / >=3x (int4) invariants.
 """
 from __future__ import annotations
 
@@ -33,8 +38,7 @@ from repro.core import knapsack
 from repro.models import transformer as tf
 from repro.parallel.context import local_context
 from repro.serve import (ServeEngine, bf16_resident_weight_bytes, kv_cache,
-                         pack_params, quantize_for_serving,
-                         resident_weight_bytes)
+                         pack_params, quantize_for_serving, residency)
 
 
 def _policies(policy):
@@ -71,6 +75,27 @@ def _bench_engine(engine: ServeEngine, tokens, prompt_len: int,
     return {"tokens_per_s": n_tok / dt, "us_per_token": dt / n_tok * 1e6}
 
 
+def _kv_meta(cfg, batch: int, max_seq: int) -> dict:
+    """Measured resident KV bytes of the bench's cache allocation, per
+    layout — deterministic functions of (cfg, batch, S_max), so CI gates
+    them tightly (scripts/check_bench.py)."""
+    full = kv_cache.init_cache(cfg, batch, max_seq,
+                               dtype=cfg.compute_dtype)
+    q8 = kv_cache.init_cache(cfg, batch, max_seq, cache_bits=8)
+    q4 = kv_cache.init_cache(cfg, batch, max_seq, cache_bits=4)
+    b_full = residency.resident_kv_bytes(full)
+    b8 = residency.resident_kv_bytes(q8)
+    b4 = residency.resident_kv_bytes(q4)
+    return {
+        "batch": batch, "max_seq": max_seq,
+        "resident_kv_bytes_full": b_full,
+        "resident_kv_bytes_int8": b8,
+        "resident_kv_bytes_int4": b4,
+        "kv_reduction_int8": b_full / max(b8, 1),
+        "kv_reduction_int4": b_full / max(b4, 1),
+    }
+
+
 def run(quick: bool = False, batch: int = 4, prompt_len: int = 16,
         n_chunks: int = 2, arch: str = "olmo-1b") -> dict:
     if quick:
@@ -84,10 +109,15 @@ def run(quick: bool = False, batch: int = 4, prompt_len: int = 16,
                          jnp.int32)
     # what the same checkpoint would keep resident served in bf16
     bf16_bytes = bf16_resident_weight_bytes(params)
+    max_seq = prompt_len + (n_chunks + 1) * 16 + 16
+    kv_meta = _kv_meta(cfg, batch, max_seq)
 
     out = {"_meta": {"arch": arch, "batch": batch, "n_chunks": n_chunks,
                      "prompt_len": prompt_len,
-                     "bf16_resident_weight_bytes": bf16_bytes}}
+                     "bf16_resident_weight_bytes": bf16_bytes,
+                     "kv": kv_meta}}
+    kv_full_per_tok = kv_meta["resident_kv_bytes_full"] / batch
+    kv_int8_per_tok = kv_meta["resident_kv_bytes_int8"] / batch
     for name, pol in _policies(policy):
         arrays = pol.as_arrays()
         pa = jax.tree.map(jnp.asarray, arrays)
@@ -99,12 +129,29 @@ def run(quick: bool = False, batch: int = 4, prompt_len: int = 16,
         for mode, qp in layouts.items():
             engine = ServeEngine(
                 cfg=cfg, params=qp, policy_arrays=pa, ctx=ctx,
-                max_seq=prompt_len + (n_chunks + 1) * 16 + 16, weights=mode)
+                max_seq=max_seq, weights=mode)
             rate = _bench_engine(engine, tokens, prompt_len, n_chunks)
             row[f"tokens_per_s_{mode}"] = rate["tokens_per_s"]
             row[f"us_per_token_{mode}"] = rate["us_per_token"]
-            row[f"resident_weight_bytes_{mode}"] = resident_weight_bytes(qp)
+            row[f"resident_weight_bytes_{mode}"] = (
+                residency.resident_bytes(qp))
             row["decode_chunk"] = engine.decode_chunk
+        # combined decode roofline = MEASURED packed-resident weight bytes
+        # + one request's KV read per step — exactly residency.report's
+        # bytes_per_token_roofline for the production (packed) layout, so
+        # this column and ServeEngine.residency() can never disagree.
+        row["bytes_per_token_roofline_full"] = (
+            row["resident_weight_bytes_packed"] + kv_full_per_tok)
+        row["bytes_per_token_roofline_quantized"] = (
+            row["resident_weight_bytes_packed"] + kv_int8_per_tok)
+        # quantized-cache decode, timed on the production (packed) layout
+        engine_q = ServeEngine(
+            cfg=cfg, params=layouts["packed"], policy_arrays=pa, ctx=ctx,
+            max_seq=max_seq, weights="packed", cache="quantized",
+            cache_bits=8)
+        rate_q = _bench_engine(engine_q, tokens, prompt_len, n_chunks)
+        row["tokens_per_s_packed_qcache"] = rate_q["tokens_per_s"]
+        row["us_per_token_packed_qcache"] = rate_q["us_per_token"]
         row["packed_reduction_vs_bf16"] = (
             bf16_bytes / max(row["resident_weight_bytes_packed"], 1))
         out[name] = row
@@ -113,12 +160,24 @@ def run(quick: bool = False, batch: int = 4, prompt_len: int = 16,
 
 if __name__ == "__main__":
     report = run(quick=True)
-    bf16 = report["_meta"]["bf16_resident_weight_bytes"]
-    print(f"bf16-resident baseline: {bf16/1e6:.2f} MB")
+    meta = report["_meta"]
+    print(f"bf16-resident baseline: "
+          f"{meta['bf16_resident_weight_bytes']/1e6:.2f} MB")
+    kv = meta["kv"]
+    print(f"KV cache (batch {kv['batch']}, S_max {kv['max_seq']}): "
+          f"full {kv['resident_kv_bytes_full']/1e3:.0f} kB, "
+          f"int8 {kv['resident_kv_bytes_int8']/1e3:.0f} kB "
+          f"({kv['kv_reduction_int8']:.2f}x), "
+          f"int4 {kv['resident_kv_bytes_int4']/1e3:.0f} kB "
+          f"({kv['kv_reduction_int4']:.2f}x)")
     for name, r in report.items():
         if name.startswith("_"):
             continue
-        print(f"{name}: packed {r['tokens_per_s_packed']:.0f} tok/s, "
+        print(f"{name}: packed {r['tokens_per_s_packed']:.0f} tok/s "
+              f"(qcache {r['tokens_per_s_packed_qcache']:.0f}), "
               f"fake_quant {r['tokens_per_s_fake_quant']:.0f} tok/s, "
               f"packed bytes {r['resident_weight_bytes_packed']/1e6:.3f} MB "
-              f"({r['packed_reduction_vs_bf16']:.1f}x vs bf16)")
+              f"({r['packed_reduction_vs_bf16']:.1f}x vs bf16), "
+              f"roofline full {r['bytes_per_token_roofline_full']/1e3:.0f} "
+              f"-> qcache "
+              f"{r['bytes_per_token_roofline_quantized']/1e3:.0f} kB/tok")

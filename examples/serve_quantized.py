@@ -53,10 +53,21 @@ print(f"packed serving layout: {n_params/1e6:.1f}M params -> "
       f"{bf16_mb:.2f} MB, {bf16_mb/packed_mb:.1f}x more), roofline "
       f"{mixed.model_bits()/8/1e3:.0f} kB streamed per decoded token")
 
+# serve with the QUANTIZED KV cache too: int8 codes + per-channel-K /
+# per-token-V scales (policy cache bits; the knapsack can trade these
+# against weight bits under one byte budget — knapsack.select_weights_and_cache)
 engine = ServeEngine(cfg=cfg, params=pparams,
                      policy_arrays=jax.tree.map(jnp.asarray,
                                                 mixed.as_arrays()),
-                     ctx=ctx, max_seq=128, weights="packed")
+                     ctx=ctx, max_seq=128, weights="packed",
+                     cache="quantized",
+                     cache_bits=mixed.cache_bits_arrays())
+rep = engine.residency(engine.new_cache(2))
+print(f"quantized KV cache (2 slots x 128): "
+      f"{rep['resident_kv_bytes']/1e3:.0f} kB resident; decode roofline "
+      f"{rep['bytes_per_token_roofline']/1e3:.0f} kB/token "
+      f"(weights {rep['resident_weight_bytes']/1e3:.0f} kB "
+      f"+ KV read {rep['kv_read_bytes_per_token']/1e3:.0f} kB)")
 
 # continuous batching: 4 requests with UNEQUAL prompts through 2 slots
 rng = np.random.default_rng(0)

@@ -8,17 +8,24 @@
 Two classes of check (DESIGN.md §3):
 
   * BYTE columns (resident_weight_bytes_*, weight_bytes_per_token_roofline,
-    bf16 baseline) are deterministic functions of the config + packing
-    layout — compared within a tight relative tolerance (``bytes_rtol``).
-    A layout change that silently grows resident weight bytes is exactly
-    the regression this gate exists to catch.
+    bytes_per_token_roofline_*, the _meta.kv resident-KV columns, bf16
+    baseline) are deterministic functions of the config + layouts —
+    compared within a tight relative tolerance (``bytes_rtol``).  A layout
+    change that silently grows resident weight OR KV-cache bytes is
+    exactly the regression this gate exists to catch.
   * SPEED columns (tokens_per_s_*) are host-dependent — gated only by a
     loose floor: current >= speed_min_ratio * baseline.  Override the
     ratio with CHECK_BENCH_SPEED_RATIO when a runner class changes.
 
-The gate also enforces the hard acceptance invariant that the int4
-policy's packed layout stays >= ``min_int4_reduction`` (3x) smaller than a
-bf16-resident model, independent of the baseline numbers.
+The gate also enforces the hard acceptance invariants, independent of the
+baseline numbers:
+  * the int4 policy's packed layout stays >= ``min_int4_reduction`` (3x)
+    smaller than a bf16-resident model;
+  * the int8 quantized KV cache stays >= ``min_kv_int8_reduction`` (1.8x)
+    and the packed-int4 cache >= ``min_kv_int4_reduction`` (3x) smaller
+    than the full-dtype cache;
+  * the quantized-cache rows are PRESENT — a bench that silently stops
+    reporting the KV columns fails loudly here and in scripts/ci.sh.
 
 Exits nonzero on any violation, printing one line per check.
 """
@@ -33,7 +40,18 @@ DEFAULT_GATE = {
     "bytes_rtol": 0.01,
     "speed_min_ratio": 0.1,
     "min_int4_reduction": 3.0,
+    "min_kv_int8_reduction": 1.8,
+    "min_kv_int4_reduction": 3.0,
 }
+
+# per-policy columns every bench run MUST report for the quantized cache —
+# missing rows fail loudly (satellite: a refactor that silently drops the
+# KV columns is itself a CI regression)
+REQUIRED_QCACHE_KEYS = (
+    "bytes_per_token_roofline_full",
+    "bytes_per_token_roofline_quantized",
+    "tokens_per_s_packed_qcache",
+)
 
 
 def _close(a: float, b: float, rtol: float) -> bool:
@@ -63,6 +81,23 @@ def check(bench: dict, baseline: dict) -> list:
         (ok if _close(a, b, gate["bytes_rtol"]) else fail)(
             f"_meta.bf16_resident_weight_bytes {a} vs baseline {b}")
 
+    # resident KV-cache bytes: deterministic -> tight rtol, like weights
+    base_kv = base_meta.get("kv", {})
+    cur_kv = cur_meta.get("kv")
+    if base_kv and cur_kv is None:
+        fail("_meta.kv: quantized-KV columns missing from bench output")
+    for key, base_val in base_kv.items():
+        if not key.startswith("resident_kv_bytes"):
+            continue
+        cur = (cur_kv or {}).get(key)
+        if cur is None:
+            fail(f"_meta.kv.{key}: missing")
+        elif not _close(cur, base_val, gate["bytes_rtol"]):
+            fail(f"_meta.kv.{key} = {cur} vs baseline {base_val} "
+                 f"(rtol {gate['bytes_rtol']})")
+        else:
+            ok(f"_meta.kv.{key} = {cur}")
+
     for policy, base_row in baseline.items():
         if policy.startswith("_"):
             continue
@@ -70,8 +105,13 @@ def check(bench: dict, baseline: dict) -> list:
         if row is None:
             fail(f"{policy}: missing from bench output")
             continue
+        for key in REQUIRED_QCACHE_KEYS:
+            if key not in row:
+                fail(f"{policy}.{key}: quantized-cache column missing "
+                     f"from bench output")
         for key, base_val in base_row.items():
             if key.startswith("resident_weight_bytes") \
+                    or key.startswith("bytes_per_token_roofline") \
                     or key == "weight_bytes_per_token_roofline":
                 cur = row.get(key)
                 if cur is None:
@@ -92,7 +132,7 @@ def check(bench: dict, baseline: dict) -> list:
                     ok(f"{policy}.{key} = {cur:.1f} tok/s "
                        f"(floor {floor:.1f})")
 
-    # hard invariant: the paper's memory win survives, baseline or not
+    # hard invariants: the paper's memory wins survive, baseline or not
     int4 = bench.get("int4", {})
     red = int4.get("packed_reduction_vs_bf16", 0.0)
     if red < gate["min_int4_reduction"]:
@@ -101,6 +141,13 @@ def check(bench: dict, baseline: dict) -> list:
     else:
         ok(f"int4.packed_reduction_vs_bf16 = {red:.2f}x "
            f">= {gate['min_int4_reduction']}x")
+    for key, floor_key in (("kv_reduction_int8", "min_kv_int8_reduction"),
+                           ("kv_reduction_int4", "min_kv_int4_reduction")):
+        red = (cur_kv or {}).get(key, 0.0)
+        if red < gate[floor_key]:
+            fail(f"_meta.kv.{key} = {red:.2f}x < {gate[floor_key]}x")
+        else:
+            ok(f"_meta.kv.{key} = {red:.2f}x >= {gate[floor_key]}x")
     return failures
 
 

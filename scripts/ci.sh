@@ -57,5 +57,13 @@ if [ "$SKIP_BENCH" -eq 0 ]; then
             || { echo "ERROR: $f is not valid JSON" >&2; exit 1; }
         echo "$f written"
     done
-    python scripts/check_bench.py
+    # check_bench is the single gate definition: tight-rtol byte columns
+    # (weights AND the _meta.kv resident-KV survey), the hard >=1.8x
+    # int8 / >=3x int4 cache-reduction invariants, and REQUIRED
+    # quantized-cache columns — a bench that silently stops reporting the
+    # KV rows fails here, loudly.
+    python scripts/check_bench.py \
+        || { echo "ERROR: bench regression gate failed (see FAIL lines" \
+                  "above — includes missing quantized-KV columns)" >&2; \
+             exit 1; }
 fi

@@ -135,6 +135,56 @@ def synthetic_gains(policy) -> Dict[str, float]:
             for i, u in enumerate(policy.selectable_units())}
 
 
+def synthetic_cache_gains(policy) -> Dict[str, float]:
+    """Deterministic pseudo-gains over a policy's selectable CACHE units
+    (same role as synthetic_gains for weight units)."""
+    return {c.name: float((i * 6271) % 11 + 1)
+            for i, c in enumerate(policy.selectable_cache_units())}
+
+
+def select_weights_and_cache(policy, gains: Dict[str, float],
+                             cache_gains: Dict[str, float],
+                             budget_frac: float, context_tokens: int,
+                             ) -> "KnapsackResult":
+    """ONE byte budget over weight units AND per-layer KV-cache bits.
+
+    At serving time a layer's resident bytes are weight bytes + cache
+    bytes, and the cache term scales with context: at large batch×context
+    it dominates, so spending budget to keep a hot layer's weights at
+    b_hi can be the wrong trade against keeping a sensitive layer's cache
+    at int8.  Mapping both onto one 0-1 knapsack makes that trade
+    explicit:
+
+      item weight = EXTRA resident bytes of keeping the unit hi:
+        weight unit: (b_hi - b_lo)/8 · n_params
+        cache unit:  (cache_b_hi - cache_b_lo)/8 · kv_elems_per_token
+                     · context_tokens
+      capacity = budget_frac · total_hi_bytes - all-lo floor
+      (pinned units — 8-bit edges, full-precision MLA latent — are
+      constants on both sides and drop out of the DP).
+
+    Returns one KnapsackResult whose ``take`` covers both families; split
+    it with ``policy.apply_selection`` (weight names) and
+    ``policy.apply_cache_selection`` (cache names) — each ignores the
+    other family's keys.
+    """
+    wu = policy.selectable_units()
+    cu = policy.selectable_cache_units()
+    keys = [u.name for u in wu] + [c.name for c in cu]
+    values = [gains[u.name] for u in wu] + [cache_gains[c.name] for c in cu]
+    w_bytes = [u.n_params / 8.0 for u in wu]
+    c_bytes = [c.kv_elems_per_token * context_tokens / 8.0 for c in cu]
+    weights = ([(policy.b_hi - policy.b_lo) * w for w in w_bytes]
+               + [(policy.cache_b_hi - policy.cache_b_lo) * w
+                  for w in c_bytes])
+    total_hi = (sum(policy.b_hi * w for w in w_bytes)
+                + sum(policy.cache_b_hi * w for w in c_bytes))
+    floor_lo = (sum(policy.b_lo * w for w in w_bytes)
+                + sum(policy.cache_b_lo * w for w in c_bytes))
+    capacity = budget_frac * total_hi - floor_lo
+    return solve(keys, values, weights, capacity)
+
+
 def select_for_budget(policy, gains: Dict[str, float], budget_frac: float,
                       ) -> "KnapsackResult":
     """Paper's end-to-end selection step.

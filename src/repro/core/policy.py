@@ -27,6 +27,33 @@ import numpy as np
 PIN_MIN_IN_FEATURES = 128
 PIN_EDGE_BITS = 8.0
 PIN_NARROW_BITS = 4.0
+CACHE_FULL_BITS = 16.0          # "16-passthrough": cache stays full dtype
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheUnit:
+    """One per-layer KV-cache precision atom (serving-side state).
+
+    The weights/cache symmetry is the point: a layer's resident/streamed
+    bytes at decode are weight bytes + cache bytes, and at large
+    batch×context the CACHE term dominates, so the knapsack should be able
+    to spend its byte budget on either (select_weights_and_cache).
+
+    ``kv_elems_per_token`` counts cache elements appended per token
+    (GQA: 2 · n_kv_heads · head_dim).  Selectable units trade
+    cache_b_hi (int8) against cache_b_lo (int4); pinned units (MLA's
+    compressed latent, recurrent state) stay at CACHE_FULL_BITS —
+    they are accounted, never selected (DESIGN.md §3).
+    """
+    name: str                     # unique, e.g. "pat0.cache.L3"
+    group: str                    # scan-group name ("pat0", "prefix1")
+    layer: int                    # index within the scan group
+    kv_elems_per_token: int
+    pinned_bits: Optional[float] = None   # None => selectable
+
+    @property
+    def selectable(self) -> bool:
+        return self.pinned_bits is None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,8 +79,10 @@ class PrecisionPolicy:
     """Unit registry + current bits assignment."""
 
     def __init__(self, units: Sequence[QuantUnit], b_hi: float = 4.0,
-                 b_lo: float = 2.0):
-        names = [u.name for u in units]
+                 b_lo: float = 2.0,
+                 cache_units: Sequence[CacheUnit] = (),
+                 cache_b_hi: float = 8.0, cache_b_lo: float = 4.0):
+        names = [u.name for u in units] + [c.name for c in cache_units]
         if len(set(names)) != len(names):
             dupes = sorted({n for n in names if names.count(n) > 1})
             raise ValueError(f"duplicate quant-unit names: {dupes[:5]}")
@@ -64,6 +93,19 @@ class PrecisionPolicy:
         self._bits: Dict[str, float] = {
             u.name: (u.pinned_bits if u.pinned_bits is not None else self.b_hi)
             for u in units
+        }
+        # KV-cache precision (serving state): per-layer 8/4/16 bits next to
+        # the per-unit weight bits, so one policy object carries the whole
+        # serving byte story (weights + cache).
+        self.cache_units: List[CacheUnit] = list(cache_units)
+        self.cache_by_name: Dict[str, CacheUnit] = {c.name: c
+                                                    for c in cache_units}
+        self.cache_b_hi = float(cache_b_hi)
+        self.cache_b_lo = float(cache_b_lo)
+        self._cache_bits: Dict[str, float] = {
+            c.name: (c.pinned_bits if c.pinned_bits is not None
+                     else self.cache_b_hi)
+            for c in cache_units
         }
 
     # ----------------------------------------------------------------- basic
@@ -78,6 +120,63 @@ class PrecisionPolicy:
 
     def selectable_units(self) -> List[QuantUnit]:
         return [u for u in self.units if u.selectable]
+
+    # ------------------------------------------------------------ cache bits
+    def cache_bits_of(self, name: str) -> float:
+        return self._cache_bits[name]
+
+    def set_cache_bits(self, name: str, bits: float) -> None:
+        c = self.cache_by_name[name]
+        if not c.selectable:
+            raise ValueError(f"cache unit {name} is pinned at "
+                             f"{c.pinned_bits} bits")
+        if float(bits) not in (4.0, 8.0, CACHE_FULL_BITS):
+            raise ValueError(f"cache bits must be 4/8/{CACHE_FULL_BITS:g}, "
+                             f"got {bits}")
+        self._cache_bits[name] = float(bits)
+
+    def selectable_cache_units(self) -> List[CacheUnit]:
+        return [c for c in self.cache_units if c.selectable]
+
+    def apply_cache_selection(self, keep_hi: Dict[str, bool]
+                              ) -> "PrecisionPolicy":
+        """Copy with cache selections applied: unit name -> keep int8?"""
+        new = self.copy()
+        for c in self.selectable_cache_units():
+            bits = (self.cache_b_hi if keep_hi.get(c.name, True)
+                    else self.cache_b_lo)
+            new._cache_bits[c.name] = bits
+        return new
+
+    def uniform_cache(self, bits: float) -> "PrecisionPolicy":
+        new = self.copy()
+        for c in self.selectable_cache_units():
+            new._cache_bits[c.name] = float(bits)
+        return new
+
+    def cache_bits_arrays(self) -> Dict[str, np.ndarray]:
+        """{group: float32 (n_layers,)} — the serving-side cache_bits input
+        (ServeEngine(cache_bits=...) / transformer.init_caches).  Groups
+        with no cache unit (bidir) are absent; pinned units emit their
+        pinned (full) bits, which init_caches maps to the full-dtype
+        layout."""
+        lens: Dict[str, int] = {}
+        for c in self.cache_units:
+            lens[c.group] = max(lens.get(c.group, 0), c.layer + 1)
+        out: Dict[str, np.ndarray] = {}
+        for c in self.cache_units:
+            if c.group not in out:
+                out[c.group] = np.full((lens[c.group],), CACHE_FULL_BITS,
+                                       np.float32)
+            out[c.group][c.layer] = self._cache_bits[c.name]
+        return out
+
+    def kv_bytes_per_token(self) -> float:
+        """Resident KV-cache bytes appended per generated token under the
+        current cache-bits assignment (codes only; the O(1/D) scale
+        overhead is a measured-residency concern, serve/residency.py)."""
+        return float(sum(self._cache_bits[c.name] / 8.0
+                         * c.kv_elems_per_token for c in self.cache_units))
 
     # ------------------------------------------------------------ assignment
     def apply_selection(self, keep_hi: Dict[str, bool]) -> "PrecisionPolicy":
@@ -95,8 +194,12 @@ class PrecisionPolicy:
         return new
 
     def copy(self) -> "PrecisionPolicy":
-        new = PrecisionPolicy(self.units, self.b_hi, self.b_lo)
+        new = PrecisionPolicy(self.units, self.b_hi, self.b_lo,
+                              cache_units=self.cache_units,
+                              cache_b_hi=self.cache_b_hi,
+                              cache_b_lo=self.cache_b_lo)
         new._bits = dict(self._bits)
+        new._cache_bits = dict(self._cache_bits)
         return new
 
     # -------------------------------------------------------------- exports

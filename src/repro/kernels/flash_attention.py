@@ -12,6 +12,13 @@ K/V are never materialized at the query-head count.
 Grid (B, H, nq, nk), K innermost; running (m, l, acc) in VMEM scratch.
 Causal blocks strictly above the diagonal are skipped (no FLOPs, no loads
 wasted on masked tiles — ~2× prefill FLOP reduction).
+
+``kv_decode_attention`` is the DECODE counterpart over a QUANTIZED KV cache
+(kernels/kv_quant.py layout): one query token per request streams int8 /
+packed-int4 K/V code tiles from HBM and dequantizes them IN-REGISTER inside
+the score and value matmuls — a full-precision cache is never materialized
+in HBM, so the decode roofline reads 1 (or 0.5) bytes per cache element
+instead of 2–4.
 """
 from __future__ import annotations
 
@@ -21,6 +28,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import kv_quant
 
 NEG_INF = -1e30
 
@@ -63,6 +72,110 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     def _finish():
         o_ref[0, 0] = (acc_ref[...] /
                        jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+# ------------------------------------------------- quantized-cache decode
+def _kv_decode_kernel(q_ref, kq_ref, ks_ref, vq_ref, vs_ref, pos_ref, o_ref,
+                      m_ref, l_ref, acc_ref, *, bs: int, ns: int, bits: int,
+                      scale: float):
+    j = pl.program_id(2)          # kv block (innermost)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = pos_ref[0, 0]
+
+    # Blocks entirely past this request's position are fully masked — skip
+    # them (an evicted slot's out-of-range position keeps every block live;
+    # its output is discarded upstream, matching the full-dtype path).
+    @pl.when(j * bs <= pos)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)                 # (1, D)
+        kq = kq_ref[0, :, 0, :]                          # (bs, D or D//2)
+        # kv_quant.unpack4 is the ONE definition of the nibble layout —
+        # pure jnp, so it traces inside the kernel body unchanged.
+        k = kq.astype(jnp.float32) if bits == 8 else kv_quant.unpack4(kq)
+        k = k * ks_ref[0].astype(jnp.float32)            # per-channel (1, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kpos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+        s = jnp.where(kpos <= pos, s, NEG_INF)
+        m_prev = m_ref[...]                              # (1, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)                           # (1, bs)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        vq = vq_ref[0, :, 0, :]
+        v = vq.astype(jnp.float32) if bits == 8 else kv_quant.unpack4(vq)
+        v = v * vs_ref[0].astype(jnp.float32)            # per-token (bs, 1)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == ns - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "bs", "interpret"))
+def kv_decode_attention(q: jax.Array, kq: jax.Array, k_scale: jax.Array,
+                        vq: jax.Array, v_scale: jax.Array,
+                        positions: jax.Array, bits: int = 8, bs: int = 128,
+                        interpret: bool = True) -> jax.Array:
+    """Fused dequant decode attention over a quantized KV cache.
+
+    q: (B, H, D) — one query token per request.
+    kq/vq: (B, S, Hkv, D) int8 or (B, S, Hkv, D//2) packed-int4 uint8.
+    k_scale: (B, Hkv, D) f32 per-channel; v_scale: (B, S, Hkv) f32
+    per-token; positions: (B,) int32 — rows with s_pos <= positions[b] are
+    attended (the serving validity mask).  Returns (B, H, D) f32.
+
+    Grid (B, H, ns), S innermost; K/V code tiles dequantize in-register
+    (codes * scale) right before their matmuls, so HBM only ever streams
+    the 1-byte (or half-byte) codes.  D is deliberately NOT blocked
+    (head_dim is small), so only S must divide ``bs`` — the dispatch layer
+    (kernels/ops) picks a divisor for non-tile-multiple S.
+    """
+    b, h, d = q.shape
+    _, s, hkv, dp = kq.shape
+    assert h % hkv == 0, (h, hkv)
+    group = h // hkv
+    assert dp == (d if bits == 8 else d // 2), (kq.shape, d, bits)
+    assert vq.shape == kq.shape, (vq.shape, kq.shape)
+    bs = min(bs, s)
+    assert s % bs == 0, (s, bs)
+    ns = s // bs
+    grid = (b, h, ns)
+    pos2 = positions.reshape(b, 1).astype(jnp.int32)
+    out = pl.pallas_call(
+        functools.partial(_kv_decode_kernel, bs=bs, ns=ns, bits=bits,
+                          scale=d ** -0.5),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, d), lambda b, h, j: (b, h, 0)),
+            pl.BlockSpec((1, bs, 1, dp),
+                         lambda b, h, j, g=group: (b, j, h // g, 0)),
+            pl.BlockSpec((1, 1, d), lambda b, h, j, g=group: (b, h // g, 0)),
+            pl.BlockSpec((1, bs, 1, dp),
+                         lambda b, h, j, g=group: (b, j, h // g, 0)),
+            pl.BlockSpec((1, bs, 1), lambda b, h, j, g=group: (b, j, h // g)),
+            pl.BlockSpec((1, 1), lambda b, h, j: (b, 0),
+                         memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda b, h, j: (b, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, kq, k_scale, vq, v_scale, pos2)
+    return out
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "bq", "bk",

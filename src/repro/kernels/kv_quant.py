@@ -1,0 +1,153 @@
+"""KV-cache quantization primitives (KVQuant/Atom-style, DESIGN.md §3).
+
+The serving KV cache is what actually grows with batch × context; holding
+it in the compute dtype makes the decode roofline weights-only in name
+but cache-bound in practice.  This module quantizes attention K/V cache
+state to int8 (1 byte/elem) or packed int4 (2 elems/byte) with the
+scale placement the KV-quantization literature converged on:
+
+  * K — **per-channel** scales, shape (..., B, Hkv, D): RoPE'd keys carry
+    outlier *channels* (a few frequency dims dominate), so the grid must
+    resolve per channel.  The scale is calibrated once per request from
+    its own prefill rows (masked to the valid prompt length — right-pad
+    garbage must not inflate it) with a small headroom margin, then held
+    fixed for decode writes; a shared-across-tokens scale is what lets
+    the fused kernel dequantize a K tile with one broadcast multiply.
+  * V — **per-token** scales, shape (..., B, S, Hkv): values have no
+    stable channel structure, but each row is fully known at write time,
+    so its scale is exact (no clipping ever) and rides the same
+    ``cache_write`` row scatter as the codes.
+
+Codes use the symmetric range [-qmax, qmax] (int8: ±127, int4: ±7) so a
+packed int4 nibble sign-extends cleanly.  All quantization arithmetic is
+f32, matching core/quant.py.
+
+Every function is leading-dim agnostic over the canonical cache axes
+(..., B, S, Hkv, D) so the same code serves per-layer dicts and the
+(n_repeats,)-stacked scan layout.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+QMAX = {8: 127.0, 4: 7.0}
+# Decode K rows quantize against the prefill-calibrated grid; the margin
+# widens the step slightly (int8: +50% of a 0.8%-of-max step — noise) so
+# decode keys that overshoot the prompt's per-channel max are rarely
+# clipped hard.
+K_SCALE_MARGIN = 1.5
+_EPS = 1e-8
+
+
+def cache_bits(cache: dict) -> int:
+    """Static bit-width of a quantized cache dict, derived from the code
+    container (int8 -> 8, packed uint8 nibbles -> 4) — no metadata has to
+    ride through scan/jit."""
+    return 8 if cache["kq"].dtype == jnp.int8 else 4
+
+
+def code_dtype(bits: int):
+    return jnp.int8 if bits == 8 else jnp.uint8
+
+
+def packed_dim(d: int, bits: int) -> int:
+    """Last-axis length of the code container for a head_dim of ``d``."""
+    if bits == 8:
+        return d
+    assert d % 2 == 0, f"packed-int4 cache needs an even head_dim, got {d}"
+    return d // 2
+
+
+# ------------------------------------------------------------- int4 packing
+def pack4(codes: jnp.ndarray) -> jnp.ndarray:
+    """Signed int4 codes in [-8, 7] -> uint8, 2 codes/byte along the LAST
+    axis (even index -> low nibble).  Cache packing is D-major (the last,
+    contiguous axis) — unlike weight packing (K-major), because the cache
+    write path appends whole (Hkv, D) rows."""
+    assert codes.shape[-1] % 2 == 0, codes.shape
+    c = (codes.astype(jnp.int32) & 0xF).astype(jnp.uint8)
+    c = c.reshape(*codes.shape[:-1], codes.shape[-1] // 2, 2)
+    return (c[..., 0] | (c[..., 1] << 4)).astype(jnp.uint8)
+
+
+def unpack4(packed: jnp.ndarray, dtype=jnp.float32) -> jnp.ndarray:
+    """Inverse of pack4: uint8 (..., D//2) -> sign-extended codes (..., D)."""
+    lo = (packed & 0xF).astype(jnp.int8)
+    hi = ((packed >> 4) & 0xF).astype(jnp.int8)
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    w = jnp.stack([lo, hi], axis=-1)
+    return w.reshape(*packed.shape[:-1], packed.shape[-1] * 2).astype(dtype)
+
+
+# ------------------------------------------------------------------- scales
+def k_channel_scale(k: jnp.ndarray, lengths, bits: int) -> jnp.ndarray:
+    """Per-channel K scale from a request's own prefill rows.
+
+    k: (..., B, S, Hkv, D); lengths: (B,) valid prompt rows per request —
+    rows >= lengths[i] are right-pad garbage and MUST NOT reach the max
+    (they would both corrupt the grid and break batched-vs-solo parity).
+    Returns (..., B, Hkv, D) f32.
+    """
+    s = k.shape[-3]
+    lengths = jnp.asarray(lengths, jnp.int32)
+    valid = jnp.arange(s, dtype=jnp.int32)[None, :] < lengths[:, None]
+    mag = jnp.where(valid[..., None, None], jnp.abs(k.astype(jnp.float32)),
+                    0.0)
+    amax = jnp.max(mag, axis=-3)
+    return jnp.maximum(amax * K_SCALE_MARGIN, _EPS) / QMAX[bits]
+
+
+def v_token_scale(v: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Per-token (per-head) V scale, exact at write time.
+
+    v: (..., S, Hkv, D) -> (..., S, Hkv) f32."""
+    amax = jnp.max(jnp.abs(v.astype(jnp.float32)), axis=-1)
+    return jnp.maximum(amax, _EPS) / QMAX[bits]
+
+
+# -------------------------------------------------------- quantize/dequant
+def _encode(x: jnp.ndarray, scale: jnp.ndarray, bits: int) -> jnp.ndarray:
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale),
+                 -QMAX[bits], QMAX[bits])
+    if bits == 8:
+        return q.astype(jnp.int8)
+    return pack4(q.astype(jnp.int8))
+
+
+def quantize_k(k: jnp.ndarray, k_scale: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """k (..., S, Hkv, D) with k_scale (..., Hkv, D) -> codes
+    (..., S, Hkv, D or D//2).  Decode rows written after calibration clip
+    into the fixed per-channel grid."""
+    return _encode(k, k_scale[..., None, :, :], bits)
+
+
+def quantize_v(v: jnp.ndarray, v_scale: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """v (..., S, Hkv, D) with v_scale (..., S, Hkv) -> codes."""
+    return _encode(v, v_scale[..., None], bits)
+
+
+def dequant_k(kq: jnp.ndarray, k_scale: jnp.ndarray, bits: int,
+              dtype=jnp.float32) -> jnp.ndarray:
+    codes = kq.astype(jnp.float32) if bits == 8 else unpack4(kq)
+    return (codes * k_scale[..., None, :, :].astype(jnp.float32)).astype(dtype)
+
+
+def dequant_v(vq: jnp.ndarray, v_scale: jnp.ndarray, bits: int,
+              dtype=jnp.float32) -> jnp.ndarray:
+    codes = vq.astype(jnp.float32) if bits == 8 else unpack4(vq)
+    return (codes * v_scale[..., None].astype(jnp.float32)).astype(dtype)
+
+
+# -------------------------------------------------------- prefill handoff
+def quantize_prefill(got: dict, lengths, bits: int) -> dict:
+    """Full-precision prefill cache {'k','v'} (..., B, S_pad, Hkv, D) ->
+    quantized cache leaves sized to the prefill.  K scales calibrate on
+    the valid rows only; garbage rows still produce (garbage) codes, which
+    stay provably unread under the decode mask — the same
+    garbage-until-overwritten contract as the full-dtype cache."""
+    k, v = got["k"], got["v"]
+    ks = k_channel_scale(k, lengths, bits)
+    vs = v_token_scale(v, bits)
+    return {"kq": quantize_k(k, ks, bits), "k_scale": ks,
+            "vq": quantize_v(v, vs, bits), "v_scale": vs}

@@ -139,6 +139,33 @@ def _largest_divisor(dim: int, cap: int) -> int:
     return 1
 
 
+def kv_cache_attention(q: jax.Array, kq: jax.Array, k_scale: jax.Array,
+                       vq: jax.Array, v_scale: jax.Array,
+                       positions: jax.Array, bits: int,
+                       impl: str = "auto", **kw) -> jax.Array:
+    """Decode attention over a quantized KV cache (serving read path).
+
+    Dispatch (DESIGN.md §3): the Pallas kernel on TPU dequantizes K/V code
+    tiles in-register (HBM streams 1 or 0.5 bytes/elem); the ref oracle —
+    also the production CPU path — dequantizes then runs the exact
+    full-dtype decode math, so quantized-cache serving differs from the
+    full cache only by the quantization error.
+
+    S_max need not be tile-aligned: the Pallas path shrinks the S block to
+    the largest divisor <= 128 (same rule as ``packed_matmul``), and D is
+    never blocked.
+    """
+    impl = _resolve(impl)
+    if impl == "ref":
+        return ref.kv_cache_attention(q, kq, k_scale, vq, v_scale,
+                                      positions, bits)
+    if "bs" not in kw:
+        kw["bs"] = _largest_divisor(kq.shape[1], 128)
+    return _flash.kv_decode_attention(q, kq, k_scale, vq, v_scale, positions,
+                                      bits=bits,
+                                      interpret=(impl == "interpret"), **kw)
+
+
 def flash_attention(q, k, v, causal: bool = True, impl: str = "auto", **kw):
     impl = _resolve(impl)
     if impl == "ref":

@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import quant
+from repro.kernels import kv_quant
 
 
 # ------------------------------------------------------------- entropy_hist
@@ -127,6 +128,41 @@ def pack_w2(codes: jax.Array) -> jax.Array:
     for i in range(1, 4):
         out = out | (c[:, i, :] << (2 * i))
     return out.astype(jnp.uint8)
+
+
+# ------------------------------------------------------- kv-cache attention
+def kv_cache_attention(q: jax.Array, kq: jax.Array, k_scale: jax.Array,
+                       vq: jax.Array, v_scale: jax.Array,
+                       positions: jax.Array, bits: int) -> jax.Array:
+    """Decode attention over a QUANTIZED KV cache — the pure-jnp oracle of
+    kernels/flash_attention.kv_decode_attention, and the production CPU
+    serving path (kernels/ops dispatch, impl='auto' off-TPU).
+
+    Op order is the quantized-cache serving contract (DESIGN.md §3):
+    dequantize codes·scale to f32 FIRST, then exactly the full-dtype
+    decode math of models/attention.gqa_apply (f32 score einsum, dh^-0.5
+    scale, ``s_pos <= position`` mask, f32 softmax, f32 value einsum) —
+    so a quantized-cache decode differs from the full-cache decode by the
+    K/V quantization error and nothing else.
+
+    q: (B, H, D); kq/vq: (B, S, Hkv, D or D//2) int8/uint8 codes;
+    k_scale: (B, Hkv, D); v_scale: (B, S, Hkv); positions: (B,) int32.
+    Returns (B, H, D) f32.
+    """
+    k = kv_quant.dequant_k(kq, k_scale, bits)            # (B,S,Hkv,D) f32
+    v = kv_quant.dequant_v(vq, v_scale, bits)
+    h, d = q.shape[1], q.shape[2]
+    group = h // k.shape[2]
+    if group > 1:
+        k = jnp.repeat(k, group, axis=2)
+        v = jnp.repeat(v, group, axis=2)
+    logits = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32), k) \
+        * (d ** -0.5)
+    s_pos = jnp.arange(kq.shape[1])
+    mask = s_pos[None, None, :] <= positions[:, None, None]
+    logits = jnp.where(mask, logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", p, v)
 
 
 # ---------------------------------------------------------- flash_attention

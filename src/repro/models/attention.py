@@ -20,6 +20,8 @@ from typing import Callable, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import kv_quant as kvq
+from repro.kernels import ops as kops
 from repro.models import common
 from repro.models.common import init_qdense, qproj
 
@@ -125,6 +127,27 @@ def gqa_apply(p, x, bits, cfg, mode: str, cache, positions,
         cos, sin = common.mrope_angles(mrope_positions, dh,
                                        cfg.mrope_sections, cfg.rope_base)
         q, k = common.apply_rope(q, cos, sin), common.apply_rope(k, cos, sin)
+
+    if mode == "decode" and isinstance(cache, dict) and "kq" in cache:
+        # QUANTIZED serving cache (kernels/kv_quant.py): int8 / packed-int4
+        # codes + per-channel K / per-token V f32 scales.  The new row is
+        # quantized at write (K against the request's prefill-calibrated
+        # per-channel grid, V with its own exact row scale) and attention
+        # reads the codes through the fused dequant kernel — a
+        # full-precision cache is never materialized in HBM.
+        cbits = kvq.cache_bits(cache)
+        kq_new = kvq.quantize_k(k, cache["k_scale"], cbits)
+        vs_new = kvq.v_token_scale(v, cbits)
+        vq_new = kvq.quantize_v(v, vs_new, cbits)
+        ck = cache_write(cache["kq"], kq_new, positions)
+        cv = cache_write(cache["vq"], vq_new, positions)
+        cvs = cache_write(cache["v_scale"], vs_new, positions)
+        out = kops.kv_cache_attention(q[:, 0], ck, cache["k_scale"],
+                                      cv, cvs, positions[:, 0], cbits)
+        out = out.astype(x.dtype).reshape(b, s, h * dh)
+        y = qproj(out, p["wo"], bits["attn_wo"])
+        return y, {"kq": ck, "k_scale": cache["k_scale"],
+                   "vq": cv, "v_scale": cvs}
 
     if mode == "decode":
         # cache: {'k','v'} (B, S_max, Hkv, dh); positions: (B, 1) abs pos,
@@ -275,6 +298,29 @@ def init_gqa_cache(cfg, batch: int, max_seq: int, dtype=None) -> dict:
     return {
         "k": jnp.zeros((batch, max_seq, cfg.n_kv_heads, cfg.head_dim), dtype),
         "v": jnp.zeros((batch, max_seq, cfg.n_kv_heads, cfg.head_dim), dtype),
+    }
+
+
+def init_gqa_quant_cache(cfg, batch: int, max_seq: int, bits: int) -> dict:
+    """Quantized GQA cache buffers (kernels/kv_quant.py layout).
+
+    Codes: (B, S_max, Hkv, D) int8 or (B, S_max, Hkv, D//2) packed-int4
+    uint8.  K scales are per-request per-channel (B, Hkv, D) — calibrated
+    at splice/admission from each request's own prefill; V scales are
+    per-token (B, S_max, Hkv), written alongside each row.
+    """
+    assert bits in (4, 8), bits
+    hkv, dh = cfg.n_kv_heads, cfg.head_dim
+    dp = kvq.packed_dim(dh, bits)
+    dt = kvq.code_dtype(bits)
+    return {
+        "kq": jnp.zeros((batch, max_seq, hkv, dp), dt),
+        # ones, not zeros: a never-admitted slot's garbage decode writes
+        # divide by k_scale, and 0/0 would smear NaN codes into rows the
+        # masking argument otherwise keeps harmless.
+        "k_scale": jnp.ones((batch, hkv, dh), jnp.float32),
+        "vq": jnp.zeros((batch, max_seq, hkv, dp), dt),
+        "v_scale": jnp.zeros((batch, max_seq, hkv), jnp.float32),
     }
 
 

@@ -18,10 +18,12 @@ from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import quant
-from repro.core.policy import (PIN_MIN_IN_FEATURES, PIN_EDGE_BITS,
-                               PIN_NARROW_BITS, PrecisionPolicy, QuantUnit)
+from repro.core.policy import (CACHE_FULL_BITS, PIN_MIN_IN_FEATURES,
+                               PIN_EDGE_BITS, PIN_NARROW_BITS, CacheUnit,
+                               PrecisionPolicy, QuantUnit)
 from repro.models import attention as attn
 from repro.models import common, mlp, ssm
 from repro.models.common import BlockDef
@@ -95,8 +97,15 @@ def block_apply(p, x, bits, cfg, ctx, bdef: BlockDef, mode: str, cache,
 
 
 def init_block_cache(cfg, bdef: BlockDef, batch: int, max_seq: int,
-                     cache_dtype=None):
+                     cache_dtype=None, cache_bits=None):
+    """``cache_bits`` 4/8 selects the quantized GQA cache layout; None or
+    16 keeps the full-dtype buffers.  Only GQA caches quantize: MLA's
+    cache is already the compressed latent (its memory story), and
+    recurrent/SSM states have no sequence axis — all stay full precision
+    (DESIGN.md §3)."""
     if bdef.mixer in ("gqa",):
+        if cache_bits in (4, 8):
+            return attn.init_gqa_quant_cache(cfg, batch, max_seq, cache_bits)
         return attn.init_gqa_cache(cfg, batch, max_seq, cache_dtype)
     if bdef.mixer == "mla":
         return attn.init_mla_cache(cfg, batch, max_seq, cache_dtype)
@@ -146,12 +155,41 @@ def init_params(cfg, key) -> dict:
     return params
 
 
-def init_caches(cfg, batch: int, max_seq: int, cache_dtype=None) -> dict:
+def _cache_bits_for(cache_bits, group: str, layer: int):
+    """Resolve the per-layer cache bit-width: int (uniform), or
+    {group: per-layer array} (PrecisionPolicy.cache_bits_arrays()).
+    Returns 4/8, or None for full precision (missing group / 16)."""
+    if cache_bits is None:
+        return None
+    if isinstance(cache_bits, (int, float)):
+        b = int(round(float(cache_bits)))
+    else:
+        arr = cache_bits.get(group)
+        if arr is None:
+            return None
+        # HOST-side numpy on purpose: bit-widths are compile-time layout
+        # decisions (they pick buffer dtypes/shapes) and must stay concrete
+        # under jit/eval_shape.
+        a = np.asarray(arr, np.float32).reshape(-1)
+        if layer >= a.shape[0]:
+            raise ValueError(
+                f"cache_bits[{group!r}] has {a.shape[0]} entries but layer "
+                f"{layer} was requested — the array must cover every layer "
+                f"of the group (PrecisionPolicy.cache_bits_arrays() does)")
+        b = int(round(float(a[layer])))
+    if b not in (4, 8, 16):
+        raise ValueError(f"cache bits must be 4, 8 or 16(full), got {b}")
+    return None if b == 16 else b
+
+
+def init_caches(cfg, batch: int, max_seq: int, cache_dtype=None,
+                cache_bits=None) -> dict:
     """Preallocated per-layer decode caches (attention: (B, S_max, ...)).
 
     Cache contract (serve/kv_cache.py builds on this):
       - prefill returns caches sized to the processed sequence; they are
-        spliced into these preallocated buffers at position 0.
+        spliced into these preallocated buffers at position 0 (quantized
+        on the way in when the buffers are a quantized layout).
       - decode writes one row per request at its OWN absolute position
         (attention.cache_write), so requests in a batch may sit at
         different sequence offsets (continuous batching).
@@ -161,19 +199,40 @@ def init_caches(cfg, batch: int, max_seq: int, cache_dtype=None) -> dict:
       - ``cache_dtype`` overrides cfg.cache_dtype (serving holds the cache
         in the compute dtype for bit-exact prefill->decode parity;
         cfg.cache_dtype stays the memory-saving default for training runs).
+      - ``cache_bits`` (8/4/16, scalar or {group: per-layer array}) selects
+        the QUANTIZED cache layout per layer.  Uniform bits across a
+        pattern slot keep the stacked scan layout; MIXED per-layer bits
+        give per-layer shapes/dtypes, so ``caches['pat']`` becomes a
+        per-layer LIST and models/transformer.apply runs the pattern
+        python-unrolled (the same trade mixed-precision packed weights
+        already make).
     """
     caches: dict = {}
     for i, bdef in enumerate(cfg.prefix):
-        caches[f"prefix{i}"] = init_block_cache(cfg, bdef, batch, max_seq,
-                                                cache_dtype)
+        caches[f"prefix{i}"] = init_block_cache(
+            cfg, bdef, batch, max_seq, cache_dtype,
+            _cache_bits_for(cache_bits, f"prefix{i}", 0))
     if cfg.n_repeats:
-        def stack(c):
-            return jax.tree.map(
-                lambda l: jnp.broadcast_to(l, (cfg.n_repeats,) + l.shape), c)
-        caches["pat"] = {
-            f"p{j}": stack(init_block_cache(cfg, bd, batch, max_seq,
-                                            cache_dtype))
-            for j, bd in enumerate(cfg.pattern)}
+        bits_grid = [[_cache_bits_for(cache_bits, f"pat{j}", r)
+                      for j, _ in enumerate(cfg.pattern)]
+                     for r in range(cfg.n_repeats)]
+        mixed = any(len({bits_grid[r][j] for r in range(cfg.n_repeats)}) > 1
+                    for j, _ in enumerate(cfg.pattern))
+        if mixed:
+            caches["pat"] = [
+                {f"p{j}": init_block_cache(cfg, bd, batch, max_seq,
+                                           cache_dtype, bits_grid[r][j])
+                 for j, bd in enumerate(cfg.pattern)}
+                for r in range(cfg.n_repeats)]
+        else:
+            def stack(c):
+                return jax.tree.map(
+                    lambda l: jnp.broadcast_to(l, (cfg.n_repeats,) + l.shape),
+                    c)
+            caches["pat"] = {
+                f"p{j}": stack(init_block_cache(cfg, bd, batch, max_seq,
+                                                cache_dtype, bits_grid[0][j]))
+                for j, bd in enumerate(cfg.pattern)}
     return caches
 
 
@@ -300,19 +359,31 @@ def apply(params, policy_arrays, batch: Dict, cfg, ctx, mode: str = "train",
         new_caches[f"prefix{i}"] = nc
         aux_total = aux_total + aux
 
-    # ---- repeats: scanned (stacked layout) or unrolled (packed layout) ----
-    if cfg.n_repeats and isinstance(params["pat"], (list, tuple)):
-        # Packed serving layout (serve/packing.py): per-layer packed
-        # buffers have bit-width-dependent shapes (int4 packs 2 codes/byte,
-        # int2 packs 4), so a mixed-precision stack cannot ride one scan —
-        # pattern layers run python-unrolled.  Compile cost is O(n_layers),
-        # the standard serving trade; the O(1)-compile scan below stays the
-        # train/dry-run path.
+    # ---- repeats: scanned (stacked layout) or unrolled (per-layer) ----
+    pat_is_list = cfg.n_repeats and isinstance(params["pat"], (list, tuple))
+    cache_is_list = isinstance((caches or {}).get("pat"), (list, tuple))
+    if cfg.n_repeats and (pat_is_list or cache_is_list):
+        # Python-unrolled pattern (O(n_layers) compile, the standard
+        # serving trade; training keeps the O(1)-compile scan below).
+        # Forced by either per-layer structure: packed-weight params
+        # (serve/packing.py — bit-width-dependent buffer shapes cannot
+        # share one scan operand) or MIXED per-layer cache bits
+        # (init_caches — per-layer cache shapes/dtypes).  Stacked operands
+        # on the other side are sliced per layer; a list cache comes back
+        # as a list so the decode scan carry keeps a stable structure.
         pat_caches = (caches or {}).get("pat")
         per_layer_caches = []
-        for layer, layer_params in enumerate(params["pat"]):
-            layer_cache = (None if pat_caches is None else
-                           jax.tree.map(lambda l, i=layer: l[i], pat_caches))
+        for layer in range(cfg.n_repeats):
+            layer_params = (params["pat"][layer] if pat_is_list else
+                            jax.tree.map(lambda a, i=layer: a[i],
+                                         params["pat"]))
+            if pat_caches is None:
+                layer_cache = None
+            elif cache_is_list:
+                layer_cache = pat_caches[layer]
+            else:
+                layer_cache = jax.tree.map(lambda l, i=layer: l[i],
+                                           pat_caches)
             out_cache = {}
             for j, bdef in enumerate(cfg.pattern):
                 bits = {k: v[layer]
@@ -325,9 +396,12 @@ def apply(params, policy_arrays, batch: Dict, cfg, ctx, mode: str = "train",
                 out_cache[f"p{j}"] = nc if nc is not None else 0
                 aux_total = aux_total + aux
             per_layer_caches.append(out_cache)
-        new_caches["pat"] = jax.tree.map(
-            lambda *ls: jnp.stack([jnp.asarray(l) for l in ls]),
-            *per_layer_caches)
+        if cache_is_list:
+            new_caches["pat"] = per_layer_caches
+        else:
+            new_caches["pat"] = jax.tree.map(
+                lambda *ls: jnp.stack([jnp.asarray(l) for l in ls]),
+                *per_layer_caches)
     elif cfg.n_repeats:
         pat_bits = _pattern_bits(policy_arrays, cfg)
         pat_caches = (caches or {}).get("pat")
@@ -523,24 +597,52 @@ def _block_units(cfg, bdef: BlockDef, group: str, layer: int, base: tuple):
     return units
 
 
+def _block_cache_unit(cfg, bdef: BlockDef, group: str, layer: int):
+    """KV-cache precision atom of one block (None if the block keeps no
+    per-token cache).  GQA caches are selectable int8/int4; MLA's
+    compressed latent is pinned full precision (the compression IS its
+    memory story) and recurrent/SSM state has no sequence axis — both are
+    accounted, never selected (DESIGN.md §3)."""
+    name = f"{group}.cache.L{layer}"
+    if bdef.mixer in ("gqa",):
+        elems = 2 * cfg.n_kv_heads * cfg.head_dim
+        return CacheUnit(name=name, group=group, layer=layer,
+                         kv_elems_per_token=elems)
+    if bdef.mixer == "mla":
+        elems = cfg.kv_lora_rank + cfg.qk_rope_dim
+        return CacheUnit(name=name, group=group, layer=layer,
+                         kv_elems_per_token=elems,
+                         pinned_bits=CACHE_FULL_BITS)
+    return None   # bidir: no cache; recurrent state: O(1), not per-token
+
+
 def build_policy(cfg, b_hi: float = 4.0, b_lo: float = 2.0) -> PrecisionPolicy:
-    """Enumerate every quant-unit of an architecture (+ pinned edges)."""
+    """Enumerate every quant-unit of an architecture (+ pinned edges) and
+    every per-layer KV-cache unit (serving state precision)."""
     units = []
+    cache_units = []
     if not cfg.embed_input:
         units.append(_unit("embed", 0, "embed", [("embed", "w")],
                            cfg.vocab * cfg.d_model, 0.0, cfg.vocab,
                            pinned=PIN_EDGE_BITS))
     for i, bdef in enumerate(cfg.prefix):
         units.extend(_block_units(cfg, bdef, f"prefix{i}", 0, (f"prefix{i}",)))
+        cu = _block_cache_unit(cfg, bdef, f"prefix{i}", 0)
+        if cu is not None:
+            cache_units.append(cu)
     for r in range(cfg.n_repeats):
         for j, bdef in enumerate(cfg.pattern):
             units.extend(_block_units(cfg, bdef, f"pat{j}", r,
                                       ("pat", f"p{j}")))
+            cu = _block_cache_unit(cfg, bdef, f"pat{j}", r)
+            if cu is not None:
+                cache_units.append(cu)
     if not cfg.tie_embeddings:
         units.append(_unit("head", 0, "head", [("head", "w")],
                            cfg.d_model * cfg.vocab, cfg.d_model * cfg.vocab,
                            cfg.d_model, pinned=PIN_EDGE_BITS))
-    return PrecisionPolicy(units, b_hi=b_hi, b_lo=b_lo)
+    return PrecisionPolicy(units, b_hi=b_hi, b_lo=b_lo,
+                           cache_units=cache_units)
 
 
 def fetch_unit_tensor(params, unit: QuantUnit, path: tuple):

@@ -1,13 +1,17 @@
-"""Serving subsystem: quantized weights, KV cache, sampling, scheduling.
+"""Serving subsystem: quantized weights, quantized KV cache, scheduling.
 
   engine.py     jitted prefill + scanned-chunk decode (ServeEngine)
   packing.py    offline packed-weight pass (uint8 codes, DESIGN.md §3)
-  kv_cache.py   preallocated (B, S_max) cache with valid-length tracking
+  kv_cache.py   preallocated (B, S_max) cache with valid-length tracking;
+                full-dtype or quantized (int8 / packed-int4 + scales)
+  residency.py  the ONE resident/roofline byte accounting (weights + KV)
   sampling.py   greedy / temperature / top-k under fixed PRNG threading
   scheduler.py  continuous batching: slot admission, per-request stop/evict
 """
+from repro.serve import residency
 from repro.serve.engine import ServeEngine, quantize_for_serving
-from repro.serve.kv_cache import ServeCache, init_cache, splice_prefill
+from repro.serve.kv_cache import (QuantizedServeCache, ServeCache,
+                                  init_cache, splice_prefill)
 from repro.serve.packing import (bf16_resident_weight_bytes, pack_params,
                                  params_are_packed, resident_weight_bytes)
 from repro.serve.sampling import GREEDY, SamplerConfig, sample
@@ -17,8 +21,8 @@ from repro.serve.scheduler import (Completion, ContinuousBatchingScheduler,
 __all__ = [
     "ServeEngine", "quantize_for_serving",
     "pack_params", "params_are_packed", "resident_weight_bytes",
-    "bf16_resident_weight_bytes",
-    "ServeCache", "init_cache", "splice_prefill",
+    "bf16_resident_weight_bytes", "residency",
+    "ServeCache", "QuantizedServeCache", "init_cache", "splice_prefill",
     "SamplerConfig", "GREEDY", "sample",
     "Request", "Completion", "ContinuousBatchingScheduler", "serve_all",
 ]

@@ -22,11 +22,20 @@ with each other (tests/test_serve.py).
     tokens is one dispatch, not N (the per-token Python loop paid one
     dispatch + argmax sync per token).
   * the KV cache (serve/kv_cache.py) is preallocated (B, S_max) with
-    explicit valid-length tracking and lives in the COMPUTE dtype by
-    default — holding it in bf16 (cfg.cache_dtype) made greedy decode
-    diverge from the full-context reference: the bf16 rounding of prefill
-    K/V is amplified to a full code step by the activation fake-quant
-    grid, flipping argmax from the third generated token.
+    explicit valid-length tracking.  ``cache="full"`` (default) holds it
+    in the COMPUTE dtype — holding it in bf16 (cfg.cache_dtype) made
+    greedy decode diverge from the full-context reference: the bf16
+    rounding of prefill K/V is amplified to a full code step by the
+    activation fake-quant grid, flipping argmax from the third generated
+    token.  ``cache="quantized"`` stores int8 / packed-int4 codes with
+    per-channel K / per-token V f32 scales (kernels/kv_quant.py) and
+    decodes through the fused dequant-attention kernel — the cache term
+    of the decode roofline drops 2-4x (int8) / 4-8x (int4).  Its parity
+    ladder is exact WITHIN the quantized semantics (engine == stepwise
+    quantized oracle, packed == fake_quant, scheduler == solo); closeness
+    to the full-dtype cache is a bounded logit error, NOT exact argmax —
+    the same amplification that outlaws bf16 caches applies to any lossy
+    cache (DESIGN.md §3, tests/test_serve.py).
 
 Scheduling (admission, eviction, continuous batching) lives one layer up
 in serve/scheduler.py; sampling policies in serve/sampling.py.
@@ -46,7 +55,7 @@ import numpy as np
 
 from repro.core import quant
 from repro.models import transformer as tf
-from repro.serve import kv_cache, packing, sampling
+from repro.serve import kv_cache, packing, residency, sampling
 from repro.serve.kv_cache import ServeCache
 
 
@@ -146,11 +155,17 @@ class ServeEngine:
     sampler: sampling.SamplerConfig = sampling.GREEDY
     cache_dtype: Any = None         # None -> cfg.compute_dtype (exact parity)
     weights: str = "fake_quant"     # "fake_quant" | "packed" (DESIGN.md §3)
+    cache: str = "full"             # "full" | "quantized" (DESIGN.md §3)
+    cache_bits: Any = 8             # int 8/4, or {group: per-layer bits}
+                                    # (PrecisionPolicy.cache_bits_arrays())
 
     def __post_init__(self):
         if self.weights not in ("fake_quant", "packed"):
             raise ValueError(f"weights must be 'fake_quant' or 'packed', "
                              f"got {self.weights!r}")
+        if self.cache not in ("full", "quantized"):
+            raise ValueError(f"cache must be 'full' or 'quantized', "
+                             f"got {self.cache!r}")
         is_packed = packing.params_are_packed(self.params)
         if is_packed != (self.weights == "packed"):
             have = "packed" if is_packed else "fake_quant"
@@ -203,8 +218,27 @@ class ServeEngine:
         return self._prefill(tokens, jnp.asarray(lengths, jnp.int32))
 
     def new_cache(self, batch: int) -> ServeCache:
+        """Preallocated (B, S_max) cache in this engine's layout: full
+        compute-dtype buffers, or — ``cache='quantized'`` — int8 /
+        packed-int4 code buffers with per-channel K / per-token V scales
+        (GQA layers; MLA-latent and recurrent state stay full precision,
+        DESIGN.md §3)."""
+        bits = self.cache_bits if self.cache == "quantized" else None
         return kv_cache.init_cache(self._cfg, batch, self.max_seq,
-                                   dtype=self.cache_dtype)
+                                   dtype=self.cache_dtype, cache_bits=bits)
+
+    def cache_batch_axes(self):
+        """Per-leaf batch-axis pytree for scheduler slot admission — built
+        from THIS engine's cache layout (quantized layouts carry extra
+        code/scale leaves the default full-dtype template lacks)."""
+        return kv_cache.batch_axis_index(
+            self._cfg, self.max_seq,
+            init_fn=lambda b: self.new_cache(b).layers)
+
+    def residency(self, cache: Optional[ServeCache] = None) -> dict:
+        """Measured resident/roofline bytes (serve/residency.py — the one
+        definition bench, logging and tests share)."""
+        return residency.report(self.params, cache)
 
     # -------------------------------------------------------------- decode
     def _decode_impl(self, layers, lengths, tok, active, key, chunk_idx,

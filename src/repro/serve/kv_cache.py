@@ -7,33 +7,40 @@ slot are valid.  This is the root fix for the old engine's decode
 divergence: the handoff is now an explicit contract instead of an ad-hoc
 shape-matching splice —
 
-  * prefill results are written at position 0 (prompts are left-aligned),
-    in the cache's OWN dtype end-to-end.  The serving cache lives in the
-    model's compute dtype by default: the old path round-tripped prefill
-    K/V through bf16 (cfg.cache_dtype) while the full-context reference
-    attended in f32, and that one-ULP skew gets amplified to a full code
-    step by the activation fake-quant grid — greedy argmax flipped from
-    the third generated token on.
+  * prefill results are written at position 0 (prompts are left-aligned).
+    A FULL-dtype cache stores them in the cache's own dtype end-to-end
+    (serving default: the compute dtype — see the engine docstring); a
+    QUANTIZED cache (kernels/kv_quant.py layout, ``init_cache`` with
+    ``cache_bits``) quantizes them on the way in: per-channel K scales
+    calibrate on each request's own valid prefill rows, per-token V
+    scales ride with each row.
   * decode writes land at each request's own ``lengths[i]`` row
     (attention.cache_write), so a batch never needs a shared prompt
     length.
   * rows at/beyond ``lengths[i]`` are garbage-until-overwritten and are
     provably unread: the decode attention mask is ``s_pos <= position``.
-    (This masking argument covers ATTENTION caches; recurrent block
-    states have no sequence axis, so padding-safety for them is enforced
-    upstream — engine.has_recurrent_state gates unequal-length batches
-    and the scheduler prefills such configs at exact prompt length.)
+    This holds verbatim for quantized caches — stale CODES (and stale
+    per-token V scales) beyond the valid length are masked out of the
+    softmax exactly like stale full-dtype rows.  (The masking argument
+    covers ATTENTION caches; recurrent block states have no sequence
+    axis, so padding-safety for them is enforced upstream —
+    engine.has_recurrent_state gates unequal-length batches and the
+    scheduler prefills such configs at exact prompt length.)
 
 The wrapper is a pytree, so it threads through jit/scan unchanged.
+``QuantizedServeCache`` is an alias: quantization is a property of the
+LAYERS pytree (code+scale leaf dicts), so every length/splice/slot
+operation below works on both layouts through one structural dispatch.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import kv_quant as kvq
 from repro.models import transformer as tf
 
 
@@ -49,11 +56,50 @@ class ServeCache:
     lengths: jax.Array             # (B,) int32 — valid rows per request
 
 
-def init_cache(cfg, batch: int, max_seq: int, dtype=None) -> ServeCache:
-    """Fresh preallocated cache; every request starts empty."""
+# Quantization lives in the layers pytree, not the wrapper type — the
+# alias exists so call sites can name the layout they expect.
+QuantizedServeCache = ServeCache
+
+
+def init_cache(cfg, batch: int, max_seq: int, dtype=None,
+               cache_bits=None) -> ServeCache:
+    """Fresh preallocated cache; every request starts empty.
+
+    ``cache_bits`` (8/4/16, scalar or {group: per-layer array}) selects
+    the quantized layout per layer (transformer.init_caches)."""
     return ServeCache(
-        layers=tf.init_caches(cfg, batch, max_seq, cache_dtype=dtype),
+        layers=tf.init_caches(cfg, batch, max_seq, cache_dtype=dtype,
+                              cache_bits=cache_bits),
         lengths=jnp.zeros((batch,), jnp.int32))
+
+
+def is_quant_leaf(node) -> bool:
+    """True for a quantized attention-cache leaf dict (code+scale)."""
+    return isinstance(node, dict) and "kq" in node
+
+
+def quantize_like(template: Any, got: Any, lengths: jax.Array) -> Any:
+    """Convert full-precision prefill layers into the (possibly quantized)
+    structure of ``template``.
+
+    Where the template holds a quantized leaf dict, the matching {'k','v'}
+    prefill leaves are quantized at the template's bit-width (derived from
+    the code container); everything else passes through.  A per-layer LIST
+    template (mixed cache bits) consumes the stacked prefill tree one
+    leading-axis slice at a time.
+    """
+    if template is None or isinstance(template, int):
+        return got
+    if is_quant_leaf(template):
+        return kvq.quantize_prefill(got, lengths, kvq.cache_bits(template))
+    if isinstance(template, dict):
+        return {k: quantize_like(template[k], got[k], lengths)
+                for k in template}
+    if isinstance(template, (list, tuple)):
+        return [quantize_like(t, jax.tree.map(lambda a, i=i: a[i], got),
+                              lengths)
+                for i, t in enumerate(template)]
+    return got
 
 
 def splice_prefill(cache: ServeCache, prefill_layers: Any,
@@ -63,11 +109,15 @@ def splice_prefill(cache: ServeCache, prefill_layers: Any,
 
     ``lengths``: (B,) valid prompt length per request — rows in
     [lengths[i], S_pad) hold right-pad garbage that the decode mask never
-    reads (and that decode progressively overwrites).
+    reads (and that decode progressively overwrites).  Quantized buffers
+    additionally calibrate their per-channel K scales here, masked to the
+    same valid rows (pad garbage must not set the grid).
     """
-    layers = jax.tree.map(lambda full, got: _splice(full, got),
-                          cache.layers, prefill_layers)
-    return ServeCache(layers=layers, lengths=jnp.asarray(lengths, jnp.int32))
+    lengths = jnp.asarray(lengths, jnp.int32)
+    got = quantize_like(cache.layers, prefill_layers, lengths)
+    layers = jax.tree.map(lambda full, g: _splice(full, g),
+                          cache.layers, got)
+    return ServeCache(layers=layers, lengths=lengths)
 
 
 def advance(cache: ServeCache, new_layers: Any, steps: int = 1,
@@ -87,9 +137,11 @@ def _splice(full, got):
     """Write a prefill-sized cache leaf into its preallocated buffer.
 
     SSM states (no sequence axis) and sentinel ints pass through whole;
-    sequence caches are written at the origin.  The cast happens INSIDE the
-    buffer's dtype contract — callers choose that dtype once at init
-    (serving: compute dtype, for exact parity).
+    sequence caches are written at the origin.  Same-shape leaves (e.g.
+    per-channel K scales, whole-state tensors) replace the buffer.  The
+    cast happens INSIDE the buffer's dtype contract — callers choose that
+    dtype once at init (serving: compute dtype for full caches, code/scale
+    dtypes for quantized ones).
     """
     if got is None or isinstance(got, int):
         return full
@@ -100,12 +152,20 @@ def _splice(full, got):
                                         (0,) * full.ndim)
 
 
-def batch_axis_index(cfg, max_seq: int) -> Any:
+def batch_axis_index(cfg, max_seq: int,
+                     init_fn: Optional[Callable[[int], Any]] = None) -> Any:
     """Per-leaf batch-axis pytree for ``write_slot`` (computed structurally:
     the axis where a batch=1 and a batch=2 cache differ).  eval_shape only —
-    no cache-sized buffers are ever allocated here."""
-    one = jax.eval_shape(lambda: tf.init_caches(cfg, 1, max_seq))
-    two = jax.eval_shape(lambda: tf.init_caches(cfg, 2, max_seq))
+    no cache-sized buffers are ever allocated here.
+
+    ``init_fn(batch)`` overrides the default full-dtype layout — the
+    engine passes its own cache factory so quantized layouts (extra
+    code/scale leaves, per-layer lists) resolve the same way.
+    """
+    if init_fn is None:
+        init_fn = lambda b: tf.init_caches(cfg, b, max_seq)  # noqa: E731
+    one = jax.eval_shape(lambda: init_fn(1))
+    two = jax.eval_shape(lambda: init_fn(2))
 
     def find(a, b):
         if a is None or isinstance(a, int):
@@ -125,8 +185,14 @@ def write_slot(cache: ServeCache, slot_cache: Any, slot: int,
     Continuous batching admission: the single-request prefill cache is
     written into the shared (B, S_max) buffers along each leaf's batch
     axis; stale rows beyond the new prompt are garbage-until-overwritten
-    exactly as in ``splice_prefill``.
+    exactly as in ``splice_prefill``.  On a quantized cache the slot's
+    prefill is quantized first — including a FRESH per-channel K scale for
+    the slot, so a re-admitted slot never inherits the evicted request's
+    grid.
     """
+    slot_cache = quantize_like(cache.layers, slot_cache,
+                               jnp.asarray([length], jnp.int32))
+
     def put(full, got, ax):
         if got is None or isinstance(got, int) or ax < 0:
             return full

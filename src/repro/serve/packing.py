@@ -37,6 +37,7 @@ import numpy as np
 
 from repro.core import quant
 from repro.core.quant import PackedLinear
+from repro.serve import residency
 
 
 def quantize_edge(p: dict) -> dict:
@@ -149,27 +150,13 @@ def params_are_packed(params) -> bool:
 
 
 def resident_weight_bytes(params) -> int:
-    """Measured bytes the params tree keeps resident: sum of ACTUAL buffer
-    sizes (packed uint8 codes, int8 edges, scales, norms, steps), not a
-    bits×n_params formula.
-
-    Note: jnp.int4 leaves (fake-quant serve layout) count 1 byte/code —
-    their host-resident container — so the packed layout's 2-codes/byte
-    advantage over the int4-dtype layout is visible in this number.
-    """
-    total = 0
-    for leaf in jax.tree.leaves(params):
-        if hasattr(leaf, "shape") and hasattr(leaf, "dtype"):
-            total += int(np.prod(leaf.shape, dtype=np.int64)
-                         * np.dtype(leaf.dtype).itemsize)
-    return total
+    """Measured bytes the params tree actually keeps resident — delegates
+    to serve/residency.py, the single definition bench, engine logging and
+    tests all share (kept here for API stability)."""
+    return residency.resident_bytes(params)
 
 
 def bf16_resident_weight_bytes(params) -> int:
-    """Bytes the same tree would keep resident served in bf16 (2 B/element)
-    — the denominator of every packed-reduction number this repo reports
-    (single definition: bench, example, and the >=3x acceptance test all
-    call this)."""
-    return int(sum(np.prod(leaf.shape, dtype=np.int64) * 2
-                   for leaf in jax.tree.leaves(params)
-                   if hasattr(leaf, "shape")))
+    """Bytes the same tree would keep resident served in bf16 — delegates
+    to serve/residency.py (single definition)."""
+    return residency.bf16_resident_bytes(params)

@@ -1,0 +1,86 @@
+"""Single definition of serving residency/roofline byte accounting.
+
+Every resident-bytes number this repo reports — bench columns, engine
+logging, acceptance tests — comes from the functions here, summed over
+ACTUAL device buffers (packed codes, scales, steps, norms), never from a
+bits×params formula.  PR 2 had the weight side in serve/packing.py; the
+quantized KV cache adds a cache side, and the decode roofline that
+actually governs tokens/sec at large batch×context is their SUM:
+
+    bytes/token ≈ resident weight bytes            (streamed once per step,
+                                                    unamortized batch-1 view
+                                                    — matches the existing
+                                                    weight_bytes_per_token
+                                                    roofline convention)
+                + resident KV bytes / batch        (each decode step reads
+                                                    every slot's cache once;
+                                                    per generated token that
+                                                    is one request's share)
+
+serve/packing.resident_weight_bytes and bf16_resident_weight_bytes are
+thin delegates kept for API stability.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def resident_bytes(tree: Any) -> int:
+    """Measured bytes a pytree keeps resident: sum of actual buffer sizes.
+
+    jnp.int4 leaves (fake-quant serve layout) count 1 byte/code — their
+    host-resident container — so truly packed layouts (2 int4 codes per
+    uint8 byte) show their advantage in this number.
+    """
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        if hasattr(leaf, "shape") and hasattr(leaf, "dtype"):
+            total += int(np.prod(leaf.shape, dtype=np.int64)
+                         * np.dtype(leaf.dtype).itemsize)
+    return total
+
+
+def bf16_resident_bytes(tree: Any) -> int:
+    """Bytes the same tree would keep resident in bf16 (2 B/element) — the
+    denominator of every packed-weight reduction number."""
+    return int(sum(np.prod(leaf.shape, dtype=np.int64) * 2
+                   for leaf in jax.tree.leaves(tree)
+                   if hasattr(leaf, "shape")))
+
+
+def resident_kv_bytes(cache_or_layers: Any) -> int:
+    """Measured resident bytes of a KV cache (ServeCache or bare layers
+    pytree) — codes AND scales; the lengths bookkeeping array is excluded
+    (it is O(B), not cache state)."""
+    layers = getattr(cache_or_layers, "layers", cache_or_layers)
+    return resident_bytes(layers)
+
+
+def kv_read_bytes_per_token(cache: Any) -> float:
+    """HBM bytes of cache state one generated token pays at decode.
+
+    One decode step reads the ENTIRE preallocated cache (the masked /
+    blocked attention walks every slot's S_max rows) and emits one token
+    per slot, so per token this is the resident KV bytes over the batch.
+    """
+    batch = int(cache.lengths.shape[0])
+    return resident_kv_bytes(cache) / max(batch, 1)
+
+
+def report(params: Any, cache: Optional[Any] = None) -> dict:
+    """The one residency/roofline summary (bench + engine logging + tests).
+
+    Returns measured resident weight bytes, and — when a cache is given —
+    measured resident KV bytes plus the combined decode roofline
+    bytes/token (weights + per-request KV read).
+    """
+    out = {"resident_weight_bytes": resident_bytes(params)}
+    if cache is not None:
+        out["resident_kv_bytes"] = resident_kv_bytes(cache)
+        out["kv_read_bytes_per_token"] = kv_read_bytes_per_token(cache)
+        out["bytes_per_token_roofline"] = (
+            out["resident_weight_bytes"] + out["kv_read_bytes_per_token"])
+    return out

@@ -73,8 +73,9 @@ class ContinuousBatchingScheduler:
         self.prompt_bucket = prompt_bucket
         self.key = jax.random.PRNGKey(0) if key is None else key
         self.cache = engine.new_cache(n_slots)
-        self._batch_axes = kv_cache.batch_axis_index(engine._cfg,
-                                                     engine.max_seq)
+        # batch axes come from the ENGINE's cache layout (a quantized cache
+        # carries code+scale leaves the default full-dtype template lacks)
+        self._batch_axes = engine.cache_batch_axes()
         self.queue: collections.deque = collections.deque()
         self.slots: List[Optional[_Slot]] = [None] * n_slots
         self._tok = np.zeros((n_slots, 1), np.int32)

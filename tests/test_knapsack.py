@@ -105,3 +105,48 @@ def test_select_for_budget_semantics():
     # budget 1.0 keeps everything
     res_full = knapsack.select_for_budget(policy, gains, budget_frac=1.0)
     assert all(res_full.take.values())
+
+
+def test_select_weights_and_cache_one_byte_budget():
+    """Cache bits ride the same knapsack as weight bits: at long context
+    the cache items dominate the byte budget and get dropped first; the
+    realized hi-bytes stay within the budget (+DP grid resolution)."""
+    from repro import configs
+    from repro.models import transformer as tf
+
+    policy = tf.build_policy(configs.get_config("olmo-1b").smoke())
+    gains = knapsack.synthetic_gains(policy)
+    cgains = knapsack.synthetic_cache_gains(policy)
+    r = knapsack.select_weights_and_cache(policy, gains, cgains,
+                                          budget_frac=0.6,
+                                          context_tokens=4096)
+    wu = policy.selectable_units()
+    cu = policy.selectable_cache_units()
+    assert set(r.take) == {u.name for u in wu} | {c.name for c in cu}
+    # apply both halves through the policy APIs
+    mixed = policy.apply_selection(r.take).apply_cache_selection(r.take)
+    ctx_tok = 4096
+    hi_bytes = (sum(mixed.bits_of(u.name) / 8 * u.n_params for u in wu)
+                + sum(mixed.cache_bits_of(c.name) / 8
+                      * c.kv_elems_per_token * ctx_tok for c in cu))
+    budget = 0.6 * (sum(policy.cache_b_hi / 8 * c.kv_elems_per_token
+                        * ctx_tok for c in cu)
+                    + sum(policy.b_hi / 8 * u.n_params for u in wu))
+    assert hi_bytes <= budget + len(r.take) * max(r.weight_resolution, 1.0)
+    # at 4k context the cache extra-bytes dwarf the weight extra-bytes,
+    # so a 0.6 budget must have dropped cache layers to int4
+    assert any(mixed.cache_bits_of(c.name) == 4.0 for c in cu)
+
+
+def test_select_weights_and_cache_short_context_keeps_cache():
+    """At trivial context the cache items are nearly free -> kept int8."""
+    from repro import configs
+    from repro.models import transformer as tf
+
+    policy = tf.build_policy(configs.get_config("olmo-1b").smoke())
+    r = knapsack.select_weights_and_cache(
+        policy, knapsack.synthetic_gains(policy),
+        knapsack.synthetic_cache_gains(policy),
+        budget_frac=0.9, context_tokens=1)
+    cu = policy.selectable_cache_units()
+    assert all(r.take[c.name] for c in cu)

@@ -1,0 +1,153 @@
+"""KV-cache quantization: kernels/kv_quant.py + the fused dequant decode
+attention kernel (ref oracle vs Pallas interpret), incl. non-tile-multiple
+shapes — the same class of bug as the d_ff=11008 quant_matmul assert."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import kv_quant as kvq
+from repro.kernels import ops, ref
+
+
+def _quant_cache(rng, b, s, hkv, d, bits, lengths=None):
+    k = jnp.asarray(rng.normal(size=(b, s, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, hkv, d)), jnp.float32)
+    if lengths is None:
+        lengths = jnp.full((b,), s, jnp.int32)
+    return k, v, kvq.quantize_prefill({"k": k, "v": v}, lengths, bits)
+
+
+# ------------------------------------------------------------ pack/unpack
+@pytest.mark.parametrize("shape", [(6,), (3, 8), (2, 5, 4, 32)])
+def test_pack4_roundtrip(rng, shape):
+    codes = jnp.asarray(rng.integers(-8, 8, size=shape), jnp.int8)
+    packed = kvq.pack4(codes)
+    assert packed.dtype == jnp.uint8
+    assert packed.shape == shape[:-1] + (shape[-1] // 2,)
+    back = kvq.unpack4(packed)
+    np.testing.assert_array_equal(np.asarray(back, np.int32),
+                                  np.asarray(codes, np.int32))
+
+
+# ------------------------------------------------------- quantize/dequant
+@pytest.mark.parametrize("bits", [8, 4])
+def test_quantize_error_within_half_step(rng, bits):
+    b, s, hkv, d = 2, 24, 3, 16
+    k, v, qc = _quant_cache(rng, b, s, hkv, d, bits)
+    kd = kvq.dequant_k(qc["kq"], qc["k_scale"], bits)
+    vd = kvq.dequant_v(qc["vq"], qc["v_scale"], bits)
+    # error bounded by half a step, per K channel / per V token
+    k_bound = np.asarray(qc["k_scale"])[:, None, :, :] / 2 + 1e-6
+    v_bound = np.asarray(qc["v_scale"])[..., None] / 2 + 1e-6
+    assert (np.abs(np.asarray(kd - k)) <= k_bound).all()
+    assert (np.abs(np.asarray(vd - v)) <= v_bound).all()
+
+
+def test_k_scale_masks_garbage_rows(rng):
+    """Right-pad garbage must not inflate the per-channel K grid — and
+    therefore batched==solo quantization parity holds."""
+    b, s, hkv, d = 1, 16, 2, 8
+    k = jnp.asarray(rng.normal(size=(b, s, hkv, d)), jnp.float32)
+    poisoned = k.at[:, 10:].set(1e3)          # garbage beyond length 10
+    s1 = kvq.k_channel_scale(k, jnp.asarray([10]), 8)
+    s2 = kvq.k_channel_scale(poisoned, jnp.asarray([10]), 8)
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+
+
+def test_quantize_prefill_stacked_leading_dim(rng):
+    """Scan-stacked (n_repeats,)-leading cache leaves quantize the same as
+    per-layer calls (the 'pat' splice path)."""
+    L, b, s, hkv, d = 3, 2, 12, 2, 16
+    k = jnp.asarray(rng.normal(size=(L, b, s, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(L, b, s, hkv, d)), jnp.float32)
+    lengths = jnp.asarray([7, 12], jnp.int32)
+    stacked = kvq.quantize_prefill({"k": k, "v": v}, lengths, 8)
+    for lyr in range(L):
+        solo = kvq.quantize_prefill({"k": k[lyr], "v": v[lyr]}, lengths, 8)
+        for key in ("kq", "k_scale", "vq", "v_scale"):
+            np.testing.assert_array_equal(np.asarray(stacked[key][lyr]),
+                                          np.asarray(solo[key]), err_msg=key)
+
+
+def test_cache_bits_detection(rng):
+    _, _, q8 = _quant_cache(rng, 1, 8, 1, 8, 8)
+    _, _, q4 = _quant_cache(rng, 1, 8, 1, 8, 4)
+    assert kvq.cache_bits(q8) == 8 and kvq.cache_bits(q4) == 4
+    assert q8["kq"].dtype == jnp.int8 and q4["kq"].dtype == jnp.uint8
+    assert q4["kq"].shape[-1] == 4                   # packed 2/byte
+
+
+# --------------------------------------------- fused dequant attention
+@pytest.mark.parametrize("s,d,hkv,group", [
+    (56, 48, 2, 2),      # S_max and head_dim both non-128-multiples
+    (37, 32, 1, 4),      # prime S_max -> single odd block
+    (128, 64, 4, 1),     # aligned control
+    (30, 34, 2, 2),      # even-but-odd head_dim (pack boundary)
+])
+@pytest.mark.parametrize("bits", [8, 4])
+def test_kv_decode_attention_interpret_vs_ref(rng, s, d, hkv, group, bits):
+    b, h = 2, hkv * group
+    k, v, qc = _quant_cache(rng, b, s, hkv, d, bits)
+    q = jnp.asarray(rng.normal(size=(b, h, d)), jnp.float32)
+    positions = jnp.asarray(rng.integers(0, s, size=(b,)), jnp.int32)
+    got = ops.kv_cache_attention(q, qc["kq"], qc["k_scale"], qc["vq"],
+                                 qc["v_scale"], positions, bits,
+                                 impl="interpret")
+    want = ops.kv_cache_attention(q, qc["kq"], qc["k_scale"], qc["vq"],
+                                  qc["v_scale"], positions, bits, impl="ref")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_kv_decode_attention_explicit_small_block(rng):
+    """A caller-forced block size that divides a non-tile-multiple S."""
+    b, s, hkv, group, d = 1, 56, 2, 1, 48
+    _, _, qc = _quant_cache(rng, b, s, hkv, d, 8)
+    q = jnp.asarray(rng.normal(size=(b, hkv * group, d)), jnp.float32)
+    positions = jnp.asarray([s - 1], jnp.int32)
+    got = ops.kv_cache_attention(q, qc["kq"], qc["k_scale"], qc["vq"],
+                                 qc["v_scale"], positions, 8,
+                                 impl="interpret", bs=8)
+    want = ops.kv_cache_attention(q, qc["kq"], qc["k_scale"], qc["vq"],
+                                  qc["v_scale"], positions, 8, impl="ref")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("pos", [0, 5, 55])
+def test_kv_decode_attention_mask_positions(rng, pos):
+    """Rows beyond the position must not contribute: poisoning them leaves
+    the output unchanged (the garbage-rows-unread argument, kernel-level)."""
+    b, s, hkv, d = 1, 56, 2, 32
+    k, v, qc = _quant_cache(rng, b, s, hkv, d, 8)
+    q = jnp.asarray(rng.normal(size=(b, hkv, d)), jnp.float32)
+    positions = jnp.asarray([pos], jnp.int32)
+    poisoned = dict(qc)
+    poisoned["kq"] = qc["kq"].at[:, pos + 1:].set(127)
+    poisoned["vq"] = qc["vq"].at[:, pos + 1:].set(127)
+    poisoned["v_scale"] = qc["v_scale"].at[:, pos + 1:].set(1e3)
+    for impl in ("ref", "interpret"):
+        a = ops.kv_cache_attention(q, qc["kq"], qc["k_scale"], qc["vq"],
+                                   qc["v_scale"], positions, 8, impl=impl)
+        bb = ops.kv_cache_attention(q, poisoned["kq"], qc["k_scale"],
+                                    poisoned["vq"], poisoned["v_scale"],
+                                    positions, 8, impl=impl)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(bb))
+
+
+def test_kv_decode_attention_close_to_full_precision(rng):
+    """int8 quantized-cache attention tracks exact f32 attention within the
+    quantization error budget (sanity: the lossy path is NEAR, the exact
+    tests above pin the semantics)."""
+    b, s, hkv, group, d = 2, 48, 2, 2, 32
+    h = hkv * group
+    k, v, qc = _quant_cache(rng, b, s, hkv, d, 8)
+    q = jnp.asarray(rng.normal(size=(b, h, d)), jnp.float32)
+    positions = jnp.full((b,), s - 1, jnp.int32)
+    got = ops.kv_cache_attention(q, qc["kq"], qc["k_scale"], qc["vq"],
+                                 qc["v_scale"], positions, 8, impl="ref")
+    kk = jnp.repeat(k, group, axis=2).swapaxes(1, 2)     # (B,H,S,D)
+    vv = jnp.repeat(v, group, axis=2).swapaxes(1, 2)
+    want = ref.attention(q[:, :, None, :], kk, vv, causal=False)[:, :, 0]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=0.05, atol=0.05)

@@ -84,3 +84,40 @@ def test_all_archs_build_policies():
         assert len(p.selectable_units()) > 0
         arrays = p.as_arrays()
         assert arrays
+
+
+# ------------------------------------------------------------- cache units
+def test_cache_units_registered(policy):
+    cfg = configs.get_config("olmo-1b").smoke()
+    cus = policy.cache_units
+    assert len(cus) == cfg.n_repeats                  # one per gqa layer
+    assert all(c.selectable for c in cus)
+    assert all(c.kv_elems_per_token
+               == 2 * cfg.n_kv_heads * cfg.head_dim for c in cus)
+    arrays = policy.cache_bits_arrays()
+    assert arrays["pat0"].shape == (cfg.n_repeats,)
+    assert np.all(arrays["pat0"] == 8.0)              # default int8
+
+
+def test_cache_units_mla_pinned_full():
+    p = tf.build_policy(configs.get_config("deepseek-v3-671b").smoke())
+    assert p.cache_units, "MLA configs must still account their cache"
+    assert all(not c.selectable for c in p.cache_units)
+    arrays = p.cache_bits_arrays()
+    assert all(np.all(a == 16.0) for a in arrays.values())
+
+
+def test_cache_bits_roundtrip_and_accounting(policy):
+    base = policy.kv_bytes_per_token()
+    lo = policy.uniform_cache(4.0)
+    assert lo.kv_bytes_per_token() == base / 2
+    # set/get + pin enforcement
+    name = policy.selectable_cache_units()[0].name
+    p2 = policy.copy()
+    p2.set_cache_bits(name, 4.0)
+    assert p2.cache_bits_of(name) == 4.0
+    assert policy.cache_bits_of(name) == 8.0          # copy isolated
+    with pytest.raises(ValueError, match="cache bits"):
+        p2.set_cache_bits(name, 3.0)
+    sel = policy.apply_cache_selection({name: False})
+    assert sel.cache_bits_of(name) == 4.0
