@@ -23,7 +23,15 @@ buffers vs cache="quantized" int8 codes + scales).  Reported per policy:
 and in ``_meta.kv``: measured resident KV bytes for the full / int8 /
 packed-int4 cache layouts of the bench's (batch, S_max) allocation, plus
 their reduction ratios — scripts/check_bench.py gates these tightly and
-enforces the hard >=1.8x (int8) / >=3x (int4) invariants.
+enforces the hard >=1.8x (int8) / >=3x (int4) invariants, and also gates
+the packed-vs-fake-quant tokens/sec RATIO per policy (the PR-4 regression:
+per-step re-unpack made packed CPU decode slower than fake-quant).
+
+``_meta.sharded`` reports the tensor-parallel serving survey (packed int4 +
+int8 quantized cache over the largest feasible "model" mesh): sharded
+decode tokens/sec plus MEASURED per-device resident weight/KV bytes —
+scripts/ci.sh forces an 8-host-device CPU run so these columns always
+exist in CI, and check_bench REQUIRES them once the baseline has them.
 """
 from __future__ import annotations
 
@@ -38,7 +46,8 @@ from repro.core import knapsack
 from repro.models import transformer as tf
 from repro.parallel.context import local_context
 from repro.serve import (ServeEngine, bf16_resident_weight_bytes, kv_cache,
-                         pack_params, quantize_for_serving, residency)
+                         pack_params, packing, quantize_for_serving,
+                         residency)
 
 
 def _policies(policy):
@@ -63,16 +72,62 @@ def _bench_engine(engine: ServeEngine, tokens, prompt_len: int,
         jnp.full((batch,), prompt_len, jnp.int32))
     tok = jnp.zeros((batch, 1), jnp.int32)
     # warmup compiles the scanned decode chunk
-    cache, tok, _ = engine.decode_chunk_step(cache, tok, key, 1)
+    cache, tok, _ = engine.decode_chunk_step(cache, tok, key, step0=1)
     jax.block_until_ready(cache.layers)
-    t0 = time.perf_counter()
+    # best-of-N over the same post-warmup state: each repeat decodes the
+    # identical workload, so min() strips scheduler/GC noise — the
+    # packed-vs-fake-quant RATIO gate (scripts/check_bench.py) needs the
+    # per-run numbers to be stable, not just the byte columns.
+    best = None
     toks = None
-    for c in range(n_chunks):
-        cache, tok, toks = engine.decode_chunk_step(cache, tok, key, c + 2)
-    jax.block_until_ready(toks)
-    dt = time.perf_counter() - t0
+    for _ in range(5):
+        c2, t2 = cache, tok
+        t0 = time.perf_counter()
+        for c in range(n_chunks):
+            c2, t2, toks = engine.decode_chunk_step(
+                c2, t2, key, step0=1 + (c + 1) * engine.decode_chunk)
+        jax.block_until_ready(toks)
+        dt = time.perf_counter() - t0
+        best = dt if best is None else min(best, dt)
     n_tok = batch * engine.decode_chunk * n_chunks
-    return {"tokens_per_s": n_tok / dt, "us_per_token": dt / n_tok * 1e6}
+    return {"tokens_per_s": n_tok / best, "us_per_token": best / n_tok * 1e6}
+
+
+def _sharded_meta(cfg, params, policy, tokens, prompt_len: int,
+                  max_seq: int, n_chunks: int):
+    """Tensor-parallel serving survey (packed int4 weights + int8 quantized
+    cache over the largest feasible 'model' mesh): sharded decode
+    tokens/sec and MEASURED per-device resident bytes.  Returns None when
+    the host exposes a single device — scripts/ci.sh forces
+    ``--xla_force_host_platform_device_count=8`` for the bench run, so CI
+    always reports (and check_bench REQUIRES) these columns."""
+    devices = jax.device_count()
+    n = 0
+    for cand in range(min(devices, cfg.n_kv_heads), 1, -1):
+        if packing.tp_shardable(cfg, cand) is None:
+            n = cand
+            break
+    if n < 2:
+        return None
+    pol = policy.uniform(4.0)
+    pa = jax.tree.map(jnp.asarray, pol.as_arrays())
+    mesh = jax.make_mesh((n,), ("model",))
+    engine = ServeEngine(cfg=cfg, params=pack_params(params, pol.as_arrays(),
+                                                     cfg),
+                         policy_arrays=pa, ctx=local_context(),
+                         max_seq=max_seq, weights="packed",
+                         cache="quantized", cache_bits=8, mesh=mesh)
+    rate = _bench_engine(engine, tokens, prompt_len, n_chunks)
+    rep = engine.residency(engine.new_cache(tokens.shape[0]))
+    return {
+        "devices": devices, "n_shards": n,
+        "tokens_per_s_sharded": rate["tokens_per_s"],
+        "us_per_token_sharded": rate["us_per_token"],
+        "resident_weight_bytes": rep["resident_weight_bytes"],
+        "per_device_weight_bytes": rep["per_device_weight_bytes"],
+        "resident_kv_bytes": rep["resident_kv_bytes"],
+        "per_device_kv_bytes": rep["per_device_kv_bytes"],
+    }
 
 
 def _kv_meta(cfg, batch: int, max_seq: int) -> dict:
@@ -99,7 +154,11 @@ def _kv_meta(cfg, batch: int, max_seq: int) -> dict:
 def run(quick: bool = False, batch: int = 4, prompt_len: int = 16,
         n_chunks: int = 2, arch: str = "olmo-1b") -> dict:
     if quick:
-        batch, n_chunks = 2, 1
+        # 4 chunks, not 1: the timed region must be wide enough (~10 ms
+        # per chunk here) for best-of-5 to tame OS jitter — the
+        # packed/fake-quant RATIO gate needs it; compile time dominates
+        # the bench wall-clock either way.
+        batch, n_chunks = 2, 4
     cfg = configs.get_config(arch).smoke()
     ctx = local_context()
     params = tf.init_params(cfg, jax.random.PRNGKey(0))
@@ -116,6 +175,10 @@ def run(quick: bool = False, batch: int = 4, prompt_len: int = 16,
                      "prompt_len": prompt_len,
                      "bf16_resident_weight_bytes": bf16_bytes,
                      "kv": kv_meta}}
+    sharded = _sharded_meta(cfg, params, policy, tokens, prompt_len,
+                            max_seq, n_chunks)
+    if sharded is not None:
+        out["_meta"]["sharded"] = sharded
     kv_full_per_tok = kv_meta["resident_kv_bytes_full"] / batch
     kv_int8_per_tok = kv_meta["resident_kv_bytes_int8"] / batch
     for name, pol in _policies(policy):
@@ -170,6 +233,18 @@ if __name__ == "__main__":
           f"({kv['kv_reduction_int8']:.2f}x), "
           f"int4 {kv['resident_kv_bytes_int4']/1e3:.0f} kB "
           f"({kv['kv_reduction_int4']:.2f}x)")
+    sh = meta.get("sharded")
+    if sh:
+        print(f"sharded (model={sh['n_shards']} of {sh['devices']} devices, "
+              f"packed int4 + int8 qcache): "
+              f"{sh['tokens_per_s_sharded']:.0f} tok/s, per-device "
+              f"weights {sh['per_device_weight_bytes']/1e3:.0f} kB "
+              f"(of {sh['resident_weight_bytes']/1e3:.0f}), "
+              f"KV {sh['per_device_kv_bytes']/1e3:.0f} kB "
+              f"(of {sh['resident_kv_bytes']/1e3:.0f})")
+    else:
+        print("sharded: skipped (single-device host; scripts/ci.sh forces "
+              "an 8-device CPU run)")
     for name, r in report.items():
         if name.startswith("_"):
             continue

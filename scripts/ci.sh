@@ -44,6 +44,11 @@ fi
 
 if [ "$SKIP_BENCH" -eq 0 ]; then
     rm -f BENCH_serve.json BENCH_knapsack.json
+    # The bench runs on 8 forced CPU host devices so the serve bench's
+    # tensor-parallel section (_meta.sharded: sharded tok/s + per-device
+    # resident bytes) always reports — check_bench REQUIRES those columns.
+    JAX_PLATFORMS=cpu \
+    XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=8" \
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
         python -m benchmarks.run --quick --only serve,knapsack
     # fail LOUDLY if either quick bench emitted no JSON: a bench that

@@ -257,9 +257,16 @@ def packed_weight_dense(p: PackedLinear, dtype=jnp.float32) -> jax.Array:
 
     Dequant order matches the fake-quant path (codes * scale elementwise,
     THEN any downstream matmul) so the two layouts agree bit-for-bit.
+
+    Both branches truncate to ``k_dim`` rows: pack padding beyond it is
+    zero-rows for 2/4-bit, and a row-parallel shard (serve/packing.py
+    ``_shard_row_packed``) stores a LOCAL k_dim against a buffer whose
+    global view holds every shard's rows — a caller outside the shard_map
+    body gets the first shard's slab for every bit-width alike, not a
+    silently different shape per container.
     """
     if p.bits == 8:
-        codes = p.wp.astype(jnp.float32)
+        codes = p.wp.astype(jnp.float32)[:p.k_dim]
     else:
         codes = unpack_codes_kmajor(p.wp, p.bits, jnp.float32)[:p.k_dim]
     return (codes * p.scale[None, :].astype(jnp.float32)).astype(dtype)

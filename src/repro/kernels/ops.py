@@ -100,6 +100,15 @@ def packed_matmul(x: jax.Array, p: PackedLinear, impl: str = "auto",
     K not divisible by the pack factor is handled by zero-padding x up to
     the packed buffer's K — padding rows hold zero codes and contribute
     exactly 0.
+
+    Under a serving shard_map body (ServeEngine(mesh=...)) this sees the
+    LOCAL PackedLinear: column shards carry an N slice at the global
+    k_dim; row shards carry an independently repacked K-slab whose static
+    k_dim IS the local contraction length (packing._shard_row_packed —
+    nibble bytes never straddle shards), so the same dispatch works
+    unchanged per shard.  (The hot CPU decode path instead dequantizes
+    once per dispatch via packing.decode_weight_view and skips this
+    per-step call entirely.)
     """
     k = x.shape[-1]
     assert k == p.k_dim, (x.shape, p.k_dim)

@@ -97,6 +97,18 @@ def _quant_bank(bank, bits):
     return quant.lsq_fake_quant(bank["w"], sw, bits[:, None, None])
 
 
+def _expert_matmul(x, p):
+    """One expert projection: PackedLinear (packed serving) or its
+    per-dispatch dequant view {'wpre','sa'} (CPU decode path)."""
+    if isinstance(p, quant.PackedLinear):
+        return kops.packed_matmul(x, p)
+    return x @ p["wpre"].astype(x.dtype)
+
+
+def _expert_sa(p):
+    return p.sa if isinstance(p, quant.PackedLinear) else p["sa"]
+
+
 def _moe_local(x_flat, top_ids, top_w, gate_w, up_w, down_w, sa_gate,
                sa_down, bits_gateup, bits_down, e0, n_local, capacity,
                activation):
@@ -138,17 +150,19 @@ def _moe_local(x_flat, top_ids, top_w, gate_w, up_w, down_w, sa_gate,
         # PackedLinear — mixed per-expert bit-widths give mixed packed
         # shapes, so the bank cannot stay one stacked einsum operand.  The
         # python loop unrolls over the (small) local expert count; each
-        # expert's matmuls route through kops.packed_matmul.
+        # expert's matmuls route through kops.packed_matmul (or the
+        # per-dispatch dequant view {'wpre','sa'} on the CPU decode path —
+        # serve/packing.decode_weight_view).
         sa_g = sa_gate.astype(jnp.float32)
         sa_d = sa_down.astype(jnp.float32)
         outs = []
         for e in range(n_local):
             xq = quant.lsq_fake_quant(buf[e], sa_g[e], bits_gateup[e])
-            g = kops.packed_matmul(xq, gate_w[e])
-            u = kops.packed_matmul(xq, up_w[e])
+            g = _expert_matmul(xq, gate_w[e])
+            u = _expert_matmul(xq, up_w[e])
             h = act_fn(activation, g) * u
             hq = quant.lsq_fake_quant(h, sa_d[e], bits_down[e])
-            outs.append(kops.packed_matmul(hq, down_w[e]))
+            outs.append(_expert_matmul(hq, down_w[e]))
         out = jnp.stack(outs).reshape(n_local * capacity, d)
     else:
         def wmat(bank, dt):
@@ -218,8 +232,8 @@ def moe_apply(p, x, bits, cfg, ctx):
         qup = _quant_bank(p["up"], bits["moe_gateup"])
         qdown = _quant_bank(p["down"], bits["moe_down"])
     if packed:
-        sa_gate = jnp.stack([e.sa for e in p["gate"]])
-        sa_down = jnp.stack([e.sa for e in p["down"]])
+        sa_gate = jnp.stack([_expert_sa(e) for e in p["gate"]])
+        sa_down = jnp.stack([_expert_sa(e) for e in p["down"]])
     else:
         sa_gate = p["gate"]["sa"]
         sa_down = p["down"]["sa"]

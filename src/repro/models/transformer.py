@@ -62,8 +62,16 @@ def init_block(key, cfg, bdef: BlockDef) -> dict:
 
 
 def block_apply(p, x, bits, cfg, ctx, bdef: BlockDef, mode: str, cache,
-                positions, mrope_positions=None):
-    """Returns (x, new_cache, aux)."""
+                positions, mrope_positions=None, tp_axis=None):
+    """Returns (x, new_cache, aux).
+
+    ``tp_axis``: set ONLY inside a serving shard_map body (DESIGN.md §3
+    sharded serving).  Projections are column-parallel into the mixer/FFN
+    and row-parallel out of it, so the block output of each is a PARTIAL
+    sum — completed by exactly one psum after the O-projection and one
+    after the MLP down-projection (the minimal TP collective set); the
+    residual stream and everything on it stays replicated.
+    """
     aux = jnp.float32(0.0)
     h = common.apply_norm(cfg.norm, x, p["norm1"])
     if bdef.mixer in ("gqa", "bidir"):
@@ -81,16 +89,26 @@ def block_apply(p, x, bits, cfg, ctx, bdef: BlockDef, mode: str, cache,
                                        ctx)
     else:
         raise ValueError(bdef.mixer)
+    if tp_axis is not None:
+        y = jax.lax.psum(y, tp_axis)          # completes the O-projection
     x = x + y
     x = ctx.constrain(x, ctx.batch_spec, None, None)
 
     if bdef.ffn in ("swiglu", "gelu", "slstm_ffn"):
         h = common.apply_norm(cfg.norm, x, p["norm2"])
         act = "gelu" if bdef.ffn == "gelu" else cfg.activation
-        x = x + mlp.dense_mlp_apply(p["mlp"], h, bits, act)
+        y = mlp.dense_mlp_apply(p["mlp"], h, bits, act)
+        if tp_axis is not None:
+            y = jax.lax.psum(y, tp_axis)      # completes the down-projection
+        x = x + y
     elif bdef.ffn == "moe":
         h = common.apply_norm(cfg.norm, x, p["norm2"])
         y, aux = mlp.moe_apply(p["moe"], h, bits, cfg, ctx)
+        if tp_axis is not None:
+            # expert down-projections are row-parallel and the combine is
+            # linear in them, so one psum after the whole MoE completes
+            # every expert (and the shared expert) at once.
+            y = jax.lax.psum(y, tp_axis)
         x = x + y
     x = ctx.constrain(x, ctx.batch_spec, None, None)
     return x, new_cache, aux
@@ -323,12 +341,15 @@ def prequantize_params(params, policy_arrays, cfg):
 
 
 def apply(params, policy_arrays, batch: Dict, cfg, ctx, mode: str = "train",
-          caches: Optional[dict] = None, positions=None):
+          caches: Optional[dict] = None, positions=None, tp_axis=None):
     """Returns (logits, new_caches, aux_loss).
 
     batch: {'tokens': (B,S) int32} and/or {'embeds': (B,S,d)}, plus
     'mrope_positions': (3,B,S) when cfg.rope == 'mrope'.
     positions: (B,S) absolute positions (decode: (B,1)); defaults to arange.
+    tp_axis: mesh axis name when running INSIDE a serving shard_map body
+    with column/row-sharded params and a head-sharded cfg (block_apply
+    inserts the two completing psums; ServeEngine(mesh=...) is the caller).
     """
     x = _embed(params, cfg, batch)
     b, s, _ = x.shape
@@ -355,7 +376,7 @@ def apply(params, policy_arrays, batch: Dict, cfg, ctx, mode: str = "train",
         cache = (caches or {}).get(f"prefix{i}")
         x, nc, aux = block_apply(params[f"prefix{i}"], x, bits, cfg, ctx,
                                  bdef, mode, cache, positions,
-                                 mrope_positions)
+                                 mrope_positions, tp_axis)
         new_caches[f"prefix{i}"] = nc
         aux_total = aux_total + aux
 
@@ -392,7 +413,7 @@ def apply(params, policy_arrays, batch: Dict, cfg, ctx, mode: str = "train",
                            else layer_cache[f"p{j}"])
                 x, nc, aux = block_apply(layer_params[f"p{j}"], x, bits, cfg,
                                          ctx, bdef, mode, cache_j, positions,
-                                         mrope_positions)
+                                         mrope_positions, tp_axis)
                 out_cache[f"p{j}"] = nc if nc is not None else 0
                 aux_total = aux_total + aux
             per_layer_caches.append(out_cache)
@@ -414,7 +435,7 @@ def apply(params, policy_arrays, batch: Dict, cfg, ctx, mode: str = "train",
                 cache_j = None if layer_cache is None else layer_cache[f"p{j}"]
                 xx, nc, aux = block_apply(
                     layer_params[f"p{j}"], xx, layer_bits[j], cfg, ctx, bdef,
-                    mode, cache_j, positions, mrope_positions)
+                    mode, cache_j, positions, mrope_positions, tp_axis)
                 out_cache[f"p{j}"] = nc if nc is not None else 0
             return (xx, aux_c + aux), out_cache
 

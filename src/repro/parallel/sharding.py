@@ -233,6 +233,47 @@ def cache_shardings(cfg, cache_shapes, mesh: Mesh, ctx):
     return jax.tree_util.tree_map_with_path(one, cache_shapes)
 
 
+# ------------------------------------------------- serving (tensor-parallel)
+def serve_cache_specs(cache_tree) -> object:
+    """PartitionSpec tree for a serving KV cache under tensor-parallel
+    decode (ServeEngine(mesh=...), DESIGN.md §3): every cache leaf shards
+    along its KV-HEAD axis — the one axis that is exactly head-local, so
+    a shard's attention reads only its own heads and the packed-int4
+    cache's D-major nibbles (kernels/kv_quant.pack4) never straddle a
+    shard boundary.
+
+    Leaf rules by name (works on per-layer dicts, per-layer LISTS, and the
+    (n_repeats,)-stacked scan layout — the head axis is counted from the
+    trailing end):
+      k/v      (..., B, S, Hkv, D)    -> Hkv at ndim-2
+      kq/vq    (..., B, S, Hkv, Dp)   -> Hkv at ndim-2
+      k_scale  (..., B, Hkv, D)       -> Hkv at ndim-2
+      v_scale  (..., B, S, Hkv)       -> Hkv at ndim-1
+    Everything else (recurrent state, MLA latent — excluded from sharded
+    serving anyway; sentinel ints) is replicated.
+    """
+    def one(path, leaf):
+        names = _path_names(path)
+        name = names[-1] if names else ""
+        if not hasattr(leaf, "shape"):
+            return P()
+        ndim = len(leaf.shape)
+        if name in ("k", "v", "kq", "vq", "k_scale"):
+            return P(*([None] * (ndim - 2) + [MODEL, None]))
+        if name == "v_scale":
+            return P(*([None] * (ndim - 1) + [MODEL]))
+        return P(*([None] * ndim))
+
+    return jax.tree_util.tree_map_with_path(one, cache_tree)
+
+
+def replicated_specs(tree) -> object:
+    """An all-replicated full-rank spec tree matching ``tree`` (shard_map
+    in_specs for small operands: policy bits, tokens, keys)."""
+    return jax.tree.map(
+        lambda leaf: P(*([None] * getattr(leaf, "ndim", 0))), tree)
+
+
 # ---------------------------------------------------------------- opt state
 def opt_state_shardings(param_shardings, opt_shapes, mesh: Mesh):
     """Adam m/v inherit the param spec; int8 {'q','s'} leaves: q like the

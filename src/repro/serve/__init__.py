@@ -1,11 +1,17 @@
 """Serving subsystem: quantized weights, quantized KV cache, scheduling.
 
-  engine.py     jitted prefill + scanned-chunk decode (ServeEngine)
-  packing.py    offline packed-weight pass (uint8 codes, DESIGN.md §3)
+  engine.py     jitted prefill + scanned-chunk decode (ServeEngine);
+                ``mesh=`` serves tensor-parallel (shard_map, two psums
+                per block, bit-exact with single-device — DESIGN.md §3)
+  packing.py    offline packed-weight pass (uint8 codes) + shard-aware
+                repack (no nibble byte straddles a shard)
   kv_cache.py   preallocated (B, S_max) cache with valid-length tracking;
-                full-dtype or quantized (int8 / packed-int4 + scales)
-  residency.py  the ONE resident/roofline byte accounting (weights + KV)
-  sampling.py   greedy / temperature / top-k under fixed PRNG threading
+                full-dtype or quantized (int8 / packed-int4 + scales);
+                shards along the KV-head axis under a mesh
+  residency.py  the ONE resident/roofline byte accounting (weights + KV,
+                totals and per-device shares)
+  sampling.py   greedy / temperature / top-k; keys fold (admission nonce,
+                per-request token index) — scheduler-invariant
   scheduler.py  continuous batching: slot admission, per-request stop/evict
 """
 from repro.serve import residency

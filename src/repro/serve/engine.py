@@ -11,7 +11,11 @@ Embedding/LM-head codes are int8 (pinned 8-bit).
 (2 int4 / 4 int2 per byte) + per-output-channel scales, routed through
 kernels/quant_matmul.py (Pallas on TPU; exact ref path on CPU).  Pick with
 ``ServeEngine(weights="packed")``; both layouts are greedy-argmax parity
-with each other (tests/test_serve.py).
+with each other (tests/test_serve.py).  On the CPU/ref path the packed
+codes are dequantized ONCE per decode dispatch (before the token scan —
+``packing.decode_weight_view``), not once per token: same arithmetic, same
+parity, none of the per-step re-unpack cost that made packed decode
+measure slower than fake_quant.
 
 ``ServeEngine`` is the compute layer of the serving subsystem:
 
@@ -37,6 +41,26 @@ with each other (tests/test_serve.py).
     the same amplification that outlaws bf16 caches applies to any lossy
     cache (DESIGN.md §3, tests/test_serve.py).
 
+**Tensor-parallel serving** (``ServeEngine(mesh=...)``, DESIGN.md §3):
+packed weights shard along output channels (attention heads for QKV, d_ff
+for gate/up) and input channels (heads for O, d_ff for down — repacked so
+no nibble byte straddles a shard), the KV cache (codes AND scales) shards
+along the KV-head axis, and prefill/decode run under
+``parallel/compat.shard_map`` with exactly two psums per block (after the
+O-projection and after the MLP down-projection).  The scheduler is
+completely unchanged — it drives the same ``prefill``/``decode_chunk_step``
+surface and never sees the mesh.  Sharded decode is token-for-token
+bit-exact with single-device decode (tests/test_sharding.py): per-head
+attention is head-local, every elementwise op acts on replicated or
+exactly-sliced data, and the activation fake-quant grid snaps the
+psum-reassociation noise back onto the single-device code grid.
+
+Sampling keys (serve/sampling.py): the key for a request's t-th generated
+token folds ONLY (per-request admission nonce, t) into the base key, so a
+stochastic trajectory is invariant to decode_chunk, scheduler tail-chunk
+geometry, slot placement, and batchmates — scheduler == solo holds under
+temperature sampling, not just greedy.
+
 Scheduling (admission, eviction, continuous batching) lives one layer up
 in serve/scheduler.py; sampling policies in serve/sampling.py.
 
@@ -52,9 +76,14 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
 
 from repro.core import quant
+from repro.kernels import ops as kops
 from repro.models import transformer as tf
+from repro.parallel import compat, sharding
+from repro.parallel.context import local_context
 from repro.serve import kv_cache, packing, residency, sampling
 from repro.serve.kv_cache import ServeCache
 
@@ -145,6 +174,12 @@ class ServeEngine:
     recurrent blocks (``has_recurrent_state``) reject unequal lengths —
     the scheduler serves them by prefilling each prompt at its exact
     length instead of a padded bucket.
+
+    ``mesh``: a jax Mesh with a ``"model"`` axis enables tensor-parallel
+    serving (packed weights only): params are shard-packed and placed at
+    construction, caches allocate sharded along the KV-head axis, and
+    prefill/decode run under shard_map — the public surface (and the
+    scheduler above it) is unchanged.
     """
     cfg: Any
     params: Any                     # serve-layout params
@@ -158,6 +193,7 @@ class ServeEngine:
     cache: str = "full"             # "full" | "quantized" (DESIGN.md §3)
     cache_bits: Any = 8             # int 8/4, or {group: per-layer bits}
                                     # (PrecisionPolicy.cache_bits_arrays())
+    mesh: Any = None                # jax Mesh with a "model" axis -> TP
 
     def __post_init__(self):
         if self.weights not in ("fake_quant", "packed"):
@@ -182,10 +218,88 @@ class ServeEngine:
         # broke greedy parity with the full-context reference).
         self._cfg = self.cfg.replace(cache_dtype=self.cache_dtype)
         self.has_recurrent_state = has_recurrent_state(self.cfg)
-        self._prefill = jax.jit(self._prefill_impl)
-        # n_steps is the scan length -> static (one compile per distinct
-        # chunk size; generate uses at most two: decode_chunk + one tail)
-        self._decode = jax.jit(self._decode_impl, static_argnums=(6,))
+        if self.mesh is not None:
+            self._init_sharded()
+        else:
+            self._tp_axis = None
+            self.n_shards = 1
+            self._prefill = jax.jit(self._prefill_impl)
+            # n_steps is the scan length -> static (one compile per distinct
+            # chunk size; generate uses at most two: decode_chunk + a tail)
+            self._decode = jax.jit(self._decode_impl, static_argnums=(9,))
+
+    # ------------------------------------------------------- sharded setup
+    def _init_sharded(self):
+        """Tensor-parallel construction (DESIGN.md §3 sharded serving):
+        shard-pack + place the params, build the spec trees, and wrap
+        prefill in shard_map (decode wrappers build lazily per chunk
+        size).  Everything below this layer sees LOCAL shapes via a
+        head-sharded cfg; everything above sees the unchanged engine
+        surface."""
+        if "model" not in getattr(self.mesh, "axis_names", ()):
+            raise ValueError("ServeEngine(mesh=...) needs a mesh with a "
+                             "'model' axis (tensor-parallel shards)")
+        if self.weights != "packed":
+            raise ValueError(
+                "sharded serving serves the packed layout; build params "
+                "with serve.packing.pack_params and pass weights='packed'")
+        n = int(self.mesh.shape["model"])
+        reason = packing.tp_shardable(self.cfg, n)
+        if reason is not None:
+            raise ValueError(f"cannot shard serving over {n} devices: "
+                             f"{reason}")
+        self._tp_axis = "model"
+        self.n_shards = n
+        self._cfg_local = self._cfg.replace(
+            n_heads=self._cfg.n_heads // n,
+            n_kv_heads=self._cfg.n_kv_heads // n)
+        self.params, self._pspecs = packing.shard_packed_params(
+            self.params, self.cfg, n)
+        self.params = jax.device_put(self.params,
+                                     self._shardings(self._pspecs))
+        self._pa_specs = sharding.replicated_specs(self.policy_arrays)
+        # cache layouts: decode buffers (possibly quantized) and the
+        # full-dtype prefill handoff — both shard on the KV-head axis
+        bits = self.cache_bits if self.cache == "quantized" else None
+        cache_template = jax.eval_shape(
+            lambda: kv_cache.init_cache(self._cfg, 1, self.max_seq,
+                                        dtype=self.cache_dtype,
+                                        cache_bits=bits).layers)
+        self._cache_specs = sharding.serve_cache_specs(cache_template)
+        pre_template = jax.eval_shape(
+            lambda: tf.init_caches(self._cfg, 1, 1,
+                                   cache_dtype=self.cache_dtype))
+        self._pre_specs = sharding.serve_cache_specs(pre_template)
+        self._prefill = jax.jit(compat.shard_map(
+            self._prefill_impl, mesh=self.mesh,
+            in_specs=(self._pspecs, self._pa_specs, P(None, None), P(None)),
+            out_specs=(P(None, None), self._pre_specs),
+            check_vma=False))
+        self._sharded_decode_fns: Dict[tuple, Any] = {}
+
+    def _shardings(self, specs):
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s), specs)
+
+    def _sharded_decode(self, n_steps: int, key_ndim: int):
+        """shard_map'd decode chunk, cached per (scan length, key rank)."""
+        k = (n_steps, key_ndim)
+        fn = self._sharded_decode_fns.get(k)
+        if fn is None:
+            def body(params, pa, layers, lengths, tok, active, key, nonces,
+                     t0):
+                return self._decode_body(
+                    params, pa, layers, lengths, tok, active, key, nonces,
+                    t0, n_steps, self._cfg_local, self._tp_axis,
+                    local_context())
+            fn = jax.jit(compat.shard_map(
+                body, mesh=self.mesh,
+                in_specs=(self._pspecs, self._pa_specs, self._cache_specs,
+                          P(None), P(None, None), P(None),
+                          P(*([None] * key_ndim)), P(None), P(None)),
+                out_specs=(self._cache_specs, P(None, None), P(None, None)),
+                check_vma=False))
+            self._sharded_decode_fns[k] = fn
+        return fn
 
     # ------------------------------------------------------------- prefill
     def _positions_batch(self, positions: jax.Array) -> dict:
@@ -197,13 +311,16 @@ class ServeEngine:
                 positions[None], (3,) + positions.shape).astype(jnp.int32)}
         return {}
 
-    def _prefill_impl(self, tokens: jax.Array, lengths: jax.Array):
+    def _prefill_impl(self, params, pa, tokens: jax.Array,
+                      lengths: jax.Array):
         b, s = tokens.shape
         positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None, :],
                                      (b, s))
         batch = {"tokens": tokens, **self._positions_batch(positions)}
-        logits, pre, _ = tf.apply(self.params, self.policy_arrays, batch,
-                                  self._cfg, self.ctx, mode="prefill")
+        cfg = self._cfg_local if self._tp_axis else self._cfg
+        ctx = local_context() if self._tp_axis else self.ctx
+        logits, pre, _ = tf.apply(params, pa, batch, cfg, ctx,
+                                  mode="prefill", tp_axis=self._tp_axis)
         last = logits[jnp.arange(b), lengths - 1]          # (B, V) per-request
         return last, pre
 
@@ -215,43 +332,68 @@ class ServeEngine:
         b, s = tokens.shape
         if lengths is None:
             lengths = jnp.full((b,), s, jnp.int32)
-        return self._prefill(tokens, jnp.asarray(lengths, jnp.int32))
+        return self._prefill(self.params, self.policy_arrays, tokens,
+                             jnp.asarray(lengths, jnp.int32))
 
     def new_cache(self, batch: int) -> ServeCache:
         """Preallocated (B, S_max) cache in this engine's layout: full
         compute-dtype buffers, or — ``cache='quantized'`` — int8 /
         packed-int4 code buffers with per-channel K / per-token V scales
         (GQA layers; MLA-latent and recurrent state stay full precision,
-        DESIGN.md §3)."""
+        DESIGN.md §3).  Sharded engines place every leaf along its KV-head
+        axis on the mesh."""
         bits = self.cache_bits if self.cache == "quantized" else None
-        return kv_cache.init_cache(self._cfg, batch, self.max_seq,
-                                   dtype=self.cache_dtype, cache_bits=bits)
+        c = kv_cache.init_cache(self._cfg, batch, self.max_seq,
+                                dtype=self.cache_dtype, cache_bits=bits)
+        if self.mesh is None:
+            return c
+        return ServeCache(
+            layers=jax.device_put(c.layers,
+                                  self._shardings(self._cache_specs)),
+            lengths=jax.device_put(c.lengths,
+                                   NamedSharding(self.mesh, P(None))))
 
     def cache_batch_axes(self):
         """Per-leaf batch-axis pytree for scheduler slot admission — built
         from THIS engine's cache layout (quantized layouts carry extra
         code/scale leaves the default full-dtype template lacks)."""
+        bits = self.cache_bits if self.cache == "quantized" else None
         return kv_cache.batch_axis_index(
             self._cfg, self.max_seq,
-            init_fn=lambda b: self.new_cache(b).layers)
+            init_fn=lambda b: kv_cache.init_cache(
+                self._cfg, b, self.max_seq, dtype=self.cache_dtype,
+                cache_bits=bits).layers)
 
     def residency(self, cache: Optional[ServeCache] = None) -> dict:
         """Measured resident/roofline bytes (serve/residency.py — the one
-        definition bench, logging and tests share)."""
+        definition bench, logging and tests share).  Sharded engines also
+        report the per-device share of every buffer."""
         return residency.report(self.params, cache)
 
     # -------------------------------------------------------------- decode
-    def _decode_impl(self, layers, lengths, tok, active, key, chunk_idx,
-                     n_steps):
-        """One scanned chunk: feed `tok`, emit `n_steps` tokens.
+    def _decode_body(self, params, pa, layers, lengths, tok, active, key,
+                     nonces, t0, n_steps, cfg, tp_axis, ctx):
+        """One scanned chunk: feed ``tok``, emit ``n_steps`` tokens.
 
         layers/lengths: the ServeCache fields (B, S_max buffers + valid
         lengths); tok: (B, 1) the last emitted-but-unprocessed token;
         active: (B,) bool — inactive slots write nothing (their position is
         pinned out of range) and their outputs are discarded upstream.
-        chunk_idx is 1-based; the sampling key folds the ABSOLUTE decode
-        step, so a trajectory does not depend on the chunk size.
+
+        Sampling-key contract (serve/sampling.py): the key for scan step i
+        of slot r folds (nonces[r], t0[r] + i) — the slot's admission
+        nonce and ITS OWN generated-token index.  No chunk geometry is
+        folded, so a trajectory is invariant to decode_chunk, to the
+        scheduler's shorter tail chunks, and to when the request was
+        admitted relative to its batchmates.
+
+        On the CPU/ref path, packed weights are dequantized ONCE here —
+        per dispatch, before the scan — instead of once per token
+        (packing.decode_weight_view); TPU streams the packed codes through
+        the Pallas kernel untouched.
         """
+        if self.weights == "packed" and not kops.on_tpu():
+            params = packing.decode_weight_view(params)
         off_range = jnp.int32(self.max_seq)
 
         def body(carry, i):
@@ -259,13 +401,11 @@ class ServeEngine:
             pos = jnp.where(active[:, None], positions, off_range)
             batch = {"tokens": tok, **self._positions_batch(pos)}
             logits, layers, _ = tf.apply(
-                self.params, self.policy_arrays, batch, self._cfg, self.ctx,
-                mode="decode", caches=layers, positions=pos)
-            abs_step = (chunk_idx - 1) * self.decode_chunk + i + 1
-            nxt = sampling.sample(
-                logits[:, -1, :],
-                sampling.step_key(key, sampling.DECODE_STREAM, abs_step),
-                self.sampler)
+                params, pa, batch, cfg, ctx,
+                mode="decode", caches=layers, positions=pos,
+                tp_axis=tp_axis)
+            keys = sampling.slot_keys(key, nonces, t0 + i)
+            nxt = sampling.sample(logits[:, -1, :], keys, self.sampler)
             return (layers, positions + 1, nxt[:, None]), nxt
 
         init = (layers, lengths[:, None].astype(jnp.int32), tok)
@@ -273,14 +413,31 @@ class ServeEngine:
             body, init, jnp.arange(n_steps))
         return layers, tok, toks.swapaxes(0, 1)             # (B, n_steps)
 
+    def _decode_impl(self, params, pa, layers, lengths, tok, active, key,
+                     nonces, t0, n_steps):
+        return self._decode_body(params, pa, layers, lengths, tok, active,
+                                 key, nonces, t0, n_steps, self._cfg, None,
+                                 self.ctx)
+
     def decode_chunk_step(self, cache: ServeCache, tok: jax.Array,
-                          key: jax.Array, chunk_idx: int,
+                          key: jax.Array, *,
+                          nonces: Optional[jax.Array] = None,
+                          step0: Any = 1,
                           active: Optional[jax.Array] = None,
                           n_steps: Optional[int] = None,
                           ) -> Tuple[ServeCache, jax.Array, jax.Array]:
         """Advance every slot by one scanned chunk of ``n_steps``
         (default ``decode_chunk``; a shorter tail chunk avoids paying
         full-chunk decode steps for a short remaining budget).
+
+        ``nonces``: (B,) per-slot admission nonce (default: the batch row
+        index); ``step0``: scalar or (B,) — each slot's generated-token
+        count so far (the prefill-sampled token is index 0).  Together
+        they fully determine the sampling keys — see ``_decode_body``.
+        Both are KEYWORD-ONLY: the old positional slot here was the
+        global chunk index, and an int is a valid (broadcast) nonce — a
+        stale positional caller must fail loudly, not sample silently
+        wrong trajectories.
 
         Returns (cache, next feed token (B, 1), emitted tokens
         (B, n_steps)).
@@ -290,9 +447,20 @@ class ServeEngine:
             active = jnp.ones((b,), bool)
         if n_steps is None:
             n_steps = self.decode_chunk
-        layers, tok, toks = self._decode(cache.layers, cache.lengths,
-                                         tok, active, key,
-                                         jnp.int32(chunk_idx), n_steps)
+        if nonces is None:
+            nonces = jnp.arange(b, dtype=jnp.int32)
+        nonces = jnp.broadcast_to(jnp.asarray(nonces, jnp.int32), (b,))
+        t0 = jnp.broadcast_to(jnp.asarray(step0, jnp.int32), (b,))
+        if self.mesh is None:
+            layers, tok, toks = self._decode(
+                self.params, self.policy_arrays, cache.layers, cache.lengths,
+                tok, active, key, nonces, t0, n_steps)
+        else:
+            fn = self._sharded_decode(int(n_steps),
+                                      int(jnp.asarray(key).ndim))
+            layers, tok, toks = fn(
+                self.params, self.policy_arrays, cache.layers, cache.lengths,
+                tok, active, key, nonces, t0)
         cache = kv_cache.advance(cache, layers, steps=n_steps,
                                  active=active)
         return cache, tok, toks
@@ -300,9 +468,14 @@ class ServeEngine:
     # ------------------------------------------------------------ generate
     def generate(self, tokens: jax.Array, n_new: int,
                  lengths: Optional[jax.Array] = None,
-                 key: Optional[jax.Array] = None) -> jax.Array:
+                 key: Optional[jax.Array] = None,
+                 nonces: Optional[jax.Array] = None) -> jax.Array:
         """tokens: (B, S_prompt) left-aligned (right-padded) prompts ->
-        (B, n_new) continuation.  Greedy by default (engine.sampler)."""
+        (B, n_new) continuation.  Greedy by default (engine.sampler).
+
+        ``nonces``: (B,) per-request admission nonces for the sampling
+        keys (default: the batch row index).  Pass the scheduler-assigned
+        nonce to reproduce a continuous-batching trajectory solo."""
         b, s_prompt = tokens.shape
         if n_new <= 0:
             return jnp.zeros((b, 0), jnp.int32)
@@ -322,20 +495,21 @@ class ServeEngine:
                 "unequal prompt lengths need right-padding, which corrupts "
                 "recurrent (mamba/xlstm) block state — serve such configs "
                 "through the scheduler (exact-length prefill per request)")
+        nonces = (jnp.arange(b, dtype=jnp.int32) if nonces is None
+                  else jnp.asarray(nonces, jnp.int32))
         last, pre = self.prefill(tokens, lengths)
         cache = kv_cache.splice_prefill(self.new_cache(b), pre, lengths)
         first = sampling.sample(
-            last, sampling.step_key(key, sampling.PREFILL_CHUNK, 0),
-            self.sampler)
+            last, sampling.slot_keys(key, nonces, 0), self.sampler)
         tok = first[:, None]
         out = [tok]
         remaining = n_new - 1
-        c = 0
+        t0 = 1                      # the prefill-sampled token was index 0
         while remaining > 0:
             n_steps = min(self.decode_chunk, remaining)
-            cache, tok, toks = self.decode_chunk_step(cache, tok, key, c + 1,
-                                                      n_steps=n_steps)
+            cache, tok, toks = self.decode_chunk_step(
+                cache, tok, key, nonces=nonces, step0=t0, n_steps=n_steps)
             out.append(toks)
             remaining -= n_steps
-            c += 1
+            t0 += n_steps
         return jnp.concatenate(out, axis=1)

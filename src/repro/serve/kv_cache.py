@@ -31,6 +31,14 @@ The wrapper is a pytree, so it threads through jit/scan unchanged.
 ``QuantizedServeCache`` is an alias: quantization is a property of the
 LAYERS pytree (code+scale leaf dicts), so every length/splice/slot
 operation below works on both layouts through one structural dispatch.
+
+Tensor-parallel serving (``ServeEngine(mesh=...)``) allocates every leaf
+sharded along its KV-HEAD axis (parallel/sharding.serve_cache_specs —
+codes AND scales; the packed-int4 cache's D-major nibbles never straddle
+a shard).  Nothing below changes for it: splice/write_slot/advance are
+slice/scatter ops along the batch and sequence axes, which GSPMD runs
+shard-local on the head-sharded buffers — only the engine's shard_map'd
+prefill/decode bodies ever see a local (Hkv/n) view.
 """
 from __future__ import annotations
 

@@ -29,11 +29,12 @@ mixed-precision frontier.
 """
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from repro.core import quant
 from repro.core.quant import PackedLinear
@@ -133,6 +134,141 @@ def pack_params(params: dict, policy_arrays: Dict[str, Dict[str, Any]],
         else:
             out[key] = _walk(node, (key,), 0, slot_of, policy_arrays)
     return out
+
+
+# ------------------------------------------------------- tensor parallelism
+# Shard-axis contract for the packed serving layout (DESIGN.md §3):
+#   column-parallel (output channels sharded, input replicated):
+#     wq/wk/wv (attention heads), gate/up (d_ff) — wp (Kp//pack, N) shards
+#     along N, per-channel scales shard with it.  K-major nibble bytes pack
+#     along K, so an N slice never splits a byte.
+#   row-parallel (input channels sharded, output partial -> one psum):
+#     wo (attention heads), down (d_ff) — K is the packed axis, so the
+#     global buffer is REPACKED per shard (`_shard_row_packed`): each
+#     shard's K-slab is nibble-packed independently and zero-padded to the
+#     pack factor, so no byte ever straddles a shard boundary.  The
+#     PackedLinear's static k_dim becomes the LOCAL K (what the shard_map
+#     body sees); per-output-channel scales are replicated.
+#   replicated: pinned int8 edges (embed/head/router), norms, steps.
+
+_COLUMN_PARALLEL = ("wq", "wk", "wv", "gate", "up")
+_ROW_PARALLEL = ("wo", "down")
+MODEL_AXIS = "model"
+
+
+def tp_shardable(cfg, n_shards: int) -> Optional[str]:
+    """None if the config can serve tensor-parallel over ``n_shards``;
+    otherwise the human-readable reason it cannot."""
+    if n_shards < 2:
+        return None
+    blocks = tuple(cfg.prefix) + tuple(cfg.pattern)
+    for b in blocks:
+        if b.mixer != "gqa":
+            return (f"sharded serving supports GQA attention blocks only "
+                    f"(got mixer={b.mixer!r}; MLA/recurrent state has no "
+                    f"KV-head axis to shard)")
+        if b.ffn not in ("swiglu", "gelu", "moe", "none"):
+            return f"sharded serving does not support ffn={b.ffn!r}"
+        ff = b.d_ff or cfg.d_ff
+        if b.ffn in ("swiglu", "gelu", "moe") and ff % n_shards:
+            return f"d_ff {ff} % n_shards {n_shards} != 0"
+    if cfg.n_heads % n_shards:
+        return f"n_heads {cfg.n_heads} % n_shards {n_shards} != 0"
+    if cfg.n_kv_heads % n_shards:
+        return (f"n_kv_heads {cfg.n_kv_heads} % n_shards {n_shards} != 0 "
+                f"(the KV cache shards along the KV-head axis)")
+    return None
+
+
+def _shard_row_packed(p: PackedLinear, n_shards: int) -> PackedLinear:
+    """Repack a row-parallel (K-sharded) PackedLinear so every shard holds
+    an independently K-major-packed slab: no byte straddles a shard.
+
+    The returned buffer is the concatenation of the per-shard packed slabs
+    (equal sizes: each slab zero-pads its K_local to the pack factor), to
+    be sharded P(model, None) along axis 0; ``k_dim`` is set to the LOCAL
+    K — the length of the activation slice each shard contracts against.
+    """
+    assert p.k_dim % n_shards == 0, (p.k_dim, n_shards)
+    k_local = p.k_dim // n_shards
+    if p.bits == 8:                     # 1 byte/code: slices already align
+        return PackedLinear(wp=p.wp, scale=p.scale, sa=p.sa, bits=8,
+                            k_dim=k_local)
+    codes = np.asarray(quant.unpack_codes_kmajor(p.wp, p.bits,
+                                                 jnp.int8))[:p.k_dim]
+    slabs = [quant.pack_codes_kmajor(codes[i * k_local:(i + 1) * k_local],
+                                     p.bits)
+             for i in range(n_shards)]
+    return PackedLinear(wp=jnp.concatenate(slabs, axis=0), scale=p.scale,
+                        sa=p.sa, bits=p.bits, k_dim=k_local)
+
+
+def _pl_spec(wp_spec: P, scale_spec: P, p: PackedLinear) -> PackedLinear:
+    """Spec tree node mirroring a PackedLinear (data fields hold specs)."""
+    return PackedLinear(wp=wp_spec, scale=scale_spec, sa=P(), bits=p.bits,
+                        k_dim=p.k_dim)
+
+
+def shard_packed_params(pparams: dict, cfg, n_shards: int,
+                        axis: str = MODEL_AXIS) -> Tuple[dict, Any]:
+    """(packed params, n_shards) -> (shard-ready params, PartitionSpec tree).
+
+    Row-parallel leaves are repacked per shard (`_shard_row_packed`) and
+    carry the LOCAL k_dim; everything else keeps its buffers and gets the
+    column/replicated spec.  The spec tree has the same treedef as the
+    params tree (P leaves), ready for ``compat.shard_map`` in_specs and
+    ``jax.device_put`` placement.
+    """
+    reason = tp_shardable(cfg, n_shards)
+    if reason is not None:
+        raise ValueError(f"config not tensor-parallel-shardable: {reason}")
+
+    def walk(node, name):
+        if isinstance(node, PackedLinear):
+            if name in _COLUMN_PARALLEL:
+                return node, _pl_spec(P(None, axis), P(axis), node)
+            if name in _ROW_PARALLEL:
+                local = _shard_row_packed(node, n_shards)
+                return local, _pl_spec(P(axis, None), P(None), local)
+            return node, _pl_spec(P(None, None), P(None), node)  # router etc.
+        if isinstance(node, dict):
+            pairs = {k: walk(v, k) for k, v in node.items()}
+            return ({k: v[0] for k, v in pairs.items()},
+                    {k: v[1] for k, v in pairs.items()})
+        if isinstance(node, (list, tuple)):
+            pairs = [walk(v, name) for v in node]
+            return [v[0] for v in pairs], [v[1] for v in pairs]
+        return node, P(*([None] * getattr(node, "ndim", 0)))
+
+    out, specs = walk(pparams, "")
+    return out, specs
+
+
+def decode_weight_view(params):
+    """Hoistable dequant view for the CPU/ref decode path.
+
+    ``ref.dequant_matmul`` re-unpacks and re-dequantizes the full weight
+    matrix EVERY decode step — which is why packed CPU decode measured
+    slower than fake-quant despite streaming fewer resident bytes.  This
+    view maps each PackedLinear to ``{'wpre': codes*scale (f32), 'sa'}``
+    — the exact fake-quant dequant op order (codes*scale elementwise
+    first, matmul in the activation dtype via models/common.qproj), so
+    greedy-argmax bit-parity with the fake-quant layout is preserved —
+    computed ONCE per decode dispatch (inside the jitted chunk, before
+    the token scan) instead of once per token.  Nothing extra stays
+    resident: the dense view is a per-dispatch temporary.
+
+    TPU keeps the PackedLinear tree: the Pallas quant_matmul streams the
+    packed bytes from HBM, which is the whole point there.
+    """
+    def conv(node):
+        if isinstance(node, PackedLinear):
+            return {"wpre": quant.packed_weight_dense(node, jnp.float32),
+                    "sa": node.sa}
+        return node
+
+    return jax.tree.map(conv, params,
+                        is_leaf=lambda n: isinstance(n, PackedLinear))
 
 
 def params_are_packed(params) -> bool:

@@ -51,6 +51,27 @@ def bf16_resident_bytes(tree: Any) -> int:
                    if hasattr(leaf, "shape")))
 
 
+def per_device_bytes(tree: Any) -> int:
+    """Measured bytes ONE device keeps resident for a (possibly sharded)
+    pytree: each leaf contributes its per-device shard size, read off the
+    leaf's actual sharding (``Sharding.shard_shape``).  Unsharded leaves
+    (single-device or replicated) contribute their full size, so on a
+    1-device engine this equals ``resident_bytes`` exactly — the sharded
+    column of benchmarks/serve_bench.py and ``ServeEngine.residency()``
+    report this number per device."""
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        if not (hasattr(leaf, "shape") and hasattr(leaf, "dtype")):
+            continue
+        shape = leaf.shape
+        shard = getattr(leaf, "sharding", None)
+        if shard is not None and hasattr(shard, "shard_shape"):
+            shape = shard.shard_shape(shape)
+        total += int(np.prod(shape, dtype=np.int64)
+                     * np.dtype(leaf.dtype).itemsize)
+    return total
+
+
 def resident_kv_bytes(cache_or_layers: Any) -> int:
     """Measured resident bytes of a KV cache (ServeCache or bare layers
     pytree) — codes AND scales; the lengths bookkeeping array is excluded
@@ -77,9 +98,12 @@ def report(params: Any, cache: Optional[Any] = None) -> dict:
     measured resident KV bytes plus the combined decode roofline
     bytes/token (weights + per-request KV read).
     """
-    out = {"resident_weight_bytes": resident_bytes(params)}
+    out = {"resident_weight_bytes": resident_bytes(params),
+           "per_device_weight_bytes": per_device_bytes(params)}
     if cache is not None:
         out["resident_kv_bytes"] = resident_kv_bytes(cache)
+        out["per_device_kv_bytes"] = per_device_bytes(
+            getattr(cache, "layers", cache))
         out["kv_read_bytes_per_token"] = kv_read_bytes_per_token(cache)
         out["bytes_per_token_roofline"] = (
             out["resident_weight_bytes"] + out["kv_read_bytes_per_token"])

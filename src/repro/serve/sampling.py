@@ -1,16 +1,29 @@
-"""Token sampling under a fixed PRNG-key threading discipline.
+"""Token sampling under a scheduler-invariant PRNG-key discipline.
 
-One ``jax.random.PRNGKey`` enters ``ServeEngine.generate``; the token at
-ABSOLUTE decode step t derives its key as ``fold_in(fold_in(base, 1), t)``
-(the prefill token uses stream 0), so a ``generate`` trajectory is
-reproducible bit-for-bit for a fixed key regardless of the engine's
-``decode_chunk`` setting.  Scheduler admissions fold a per-admission
-counter into stream 0, so identical prompts admitted at different times
-draw different first tokens.  Caveat: batched non-greedy decode draws ONE
-categorical per batch step, so a request's decode draws in the
-continuous-batching scheduler depend on when it was admitted relative to
-its batchmates; greedy sampling ignores the key entirely and stays
-bit-exact with the stepwise full-context reference in every setting.
+One ``jax.random.PRNGKey`` enters the engine/scheduler; the key for a
+request's ``t``-th generated token (t=0 is the token sampled from the
+prefill logits) is::
+
+    request_key(base, nonce, t) = fold_in(fold_in(base, nonce), t)
+
+where ``nonce`` is the request's ADMISSION NONCE — a per-request integer
+(``ServeEngine.generate`` uses the batch row index; the continuous-batching
+scheduler assigns each admission its own index).  Because the key folds
+only (nonce, per-request generated-token index), a stochastic trajectory
+is a function of (base key, nonce, prompt) and NOTHING else — invariant
+to the engine's ``decode_chunk``, to the scheduler's tail-chunk geometry,
+to which slot the request landed in, to its batchmates, and to how many
+chunks ran before it was admitted.  (The old scheme folded the GLOBAL
+chunk index times the chunk size, so a scheduler tail chunk — which
+advances the chunk counter while consuming fewer steps — skipped key
+indices, and admission folded a different stream than solo ``generate``:
+scheduler-vs-solo parity silently held only for greedy.)
+
+Batched draws use one key PER ROW (``slot_keys`` + a vmapped categorical),
+never one key for the whole batch — a per-batch draw would make each
+row's Gumbel noise depend on its row position and batch width, breaking
+slot/batchmate invariance.  Greedy ignores keys entirely and is bit-exact
+with the stepwise full-context reference in every setting.
 """
 from __future__ import annotations
 
@@ -37,8 +50,43 @@ class SamplerConfig:
 GREEDY = SamplerConfig()
 
 
+def request_key(base: jax.Array, nonce, t) -> jax.Array:
+    """Key for generated token ``t`` (0-based) of the request with
+    admission nonce ``nonce`` (both non-negative int32)."""
+    return jax.random.fold_in(jax.random.fold_in(base, nonce), t)
+
+
+def slot_keys(base: jax.Array, nonces: jax.Array, t: jax.Array) -> jax.Array:
+    """Per-slot keys for one batched sampling step.
+
+    nonces: (B,) admission nonce per slot; t: (B,) or scalar — each slot's
+    own generated-token index (slots admitted at different times sit at
+    different counts).  Returns (B, ...) stacked keys for ``sample``.
+    """
+    nonces = jnp.asarray(nonces, jnp.int32)
+    t = jnp.broadcast_to(jnp.asarray(t, jnp.int32), nonces.shape)
+    return jax.vmap(lambda n, tt: request_key(base, n, tt))(nonces, t)
+
+
+def _is_key_batch(key: jax.Array, logits: jax.Array) -> bool:
+    """True when ``key`` is a per-row key batch (``slot_keys``) rather
+    than one key.  Typed keys (jax.random.key): a single key is a rank-0
+    array, a batch is rank 1.  Legacy raw uint32 keys: a single key is
+    the (2,) key data, a batch stacks them to (B, 2) — one rank above the
+    single key, i.e. rank == logits rank."""
+    if jnp.issubdtype(key.dtype, jax.dtypes.prng_key):
+        return key.ndim == 1
+    return key.ndim == logits.ndim
+
+
 def sample(logits: jax.Array, key: jax.Array, cfg: SamplerConfig) -> jax.Array:
-    """logits: (B, V) -> (B,) int32 token ids."""
+    """logits: (B, V) -> (B,) int32 token ids.
+
+    ``key`` is either one key (a single draw shared across the batch —
+    legacy callers) or a ``slot_keys`` batch of per-row keys (raw uint32
+    or new-style typed keys): each row then draws its own categorical, so
+    row r's draw depends only on ITS key, not on the batch around it.
+    """
     if cfg.kind == "greedy":
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     scaled = logits.astype(jnp.float32) / max(cfg.temperature, 1e-6)
@@ -46,16 +94,7 @@ def sample(logits: jax.Array, key: jax.Array, cfg: SamplerConfig) -> jax.Array:
         k = min(cfg.top_k, logits.shape[-1])
         kth = jnp.sort(scaled, axis=-1)[:, -k][:, None]
         scaled = jnp.where(scaled >= kth, scaled, -1e30)
+    if _is_key_batch(key, logits):              # per-row keys
+        draw = jax.vmap(lambda l, kk: jax.random.categorical(kk, l))
+        return draw(scaled, key).astype(jnp.int32)
     return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
-
-
-PREFILL_CHUNK = 0            # key stream for the prefill token; decode
-                             # steps use stream 1 (fold_in needs
-                             # non-negative data)
-DECODE_STREAM = 1
-
-
-def step_key(base: jax.Array, stream, step_idx) -> jax.Array:
-    """The per-step key: fold the stream id then the (absolute) step index
-    into the base key."""
-    return jax.random.fold_in(jax.random.fold_in(base, stream), step_idx)

@@ -60,6 +60,8 @@ class Completion:
 class _Slot:
     req: Request
     emitted: List[int]
+    nonce: int                     # admission nonce: folds into every
+                                   # sampling key of this request's tokens
 
 
 class ContinuousBatchingScheduler:
@@ -79,8 +81,8 @@ class ContinuousBatchingScheduler:
         self.queue: collections.deque = collections.deque()
         self.slots: List[Optional[_Slot]] = [None] * n_slots
         self._tok = np.zeros((n_slots, 1), np.int32)
-        self._chunk_idx = 1            # stream 0 is the admission stream
-        self._admit_idx = 0            # folds into each admission's draw
+        self._admit_idx = 0            # next admission nonce (sampling keys
+                                       # fold (nonce, per-request token idx))
         self.completed: Dict[str, Completion] = {}
 
     # ------------------------------------------------------------ frontend
@@ -128,14 +130,19 @@ class ContinuousBatchingScheduler:
                 jnp.asarray(toks), jnp.asarray([n_prompt], jnp.int32))
             self.cache = kv_cache.write_slot(self.cache, pre, j, n_prompt,
                                              self._batch_axes)
-            # each admission folds its own index: identical prompts must
-            # not reuse one Gumbel draw for their first sampled token
-            first = int(sampling.sample(
-                last, sampling.step_key(self.key, sampling.PREFILL_CHUNK,
-                                        self._admit_idx),
-                self.engine.sampler)[0])
+            # each admission gets its own nonce: identical prompts admitted
+            # at different times must not reuse one Gumbel draw, and every
+            # later sampling key of this request folds the same nonce — so
+            # its whole trajectory matches engine.generate(..., nonces=[n])
+            # regardless of slot, batchmates, or chunk geometry.
+            nonce = self._admit_idx
             self._admit_idx += 1
-            slot = _Slot(req=req, emitted=[first])
+            first = int(sampling.sample(
+                last, sampling.slot_keys(self.key,
+                                         jnp.asarray([nonce], jnp.int32),
+                                         jnp.zeros((1,), jnp.int32)),
+                self.engine.sampler)[0])
+            slot = _Slot(req=req, emitted=[first], nonce=nonce)
             if self._finish_reason(slot) is not None:
                 self._evict(slot, j)        # finished on its very first token
                 continue
@@ -155,10 +162,19 @@ class ContinuousBatchingScheduler:
         while tail < remaining:
             tail *= 2
         n_steps = min(self.engine.decode_chunk, tail)
+        # per-slot sampling-key state: each live slot's admission nonce and
+        # its own generated-token count (len(emitted) — token 0 was drawn
+        # at admission).  Chunk geometry never enters the keys, so a
+        # shorter tail chunk cannot skip key indices (the old scheme
+        # folded chunk_idx * decode_chunk and silently broke
+        # scheduler-vs-solo parity for everything except greedy).
+        nonces = np.array([s.nonce if s is not None else 0
+                           for s in self.slots], np.int32)
+        t0 = np.array([len(s.emitted) if s is not None else 0
+                       for s in self.slots], np.int32)
         self.cache, tok, toks = self.engine.decode_chunk_step(
-            self.cache, jnp.asarray(self._tok), self.key, self._chunk_idx,
-            active=jnp.asarray(active), n_steps=n_steps)
-        self._chunk_idx += 1
+            self.cache, jnp.asarray(self._tok), self.key, nonces=nonces,
+            step0=t0, active=jnp.asarray(active), n_steps=n_steps)
         toks_np = np.asarray(toks)
         for j, slot in enumerate(self.slots):
             if slot is None:

@@ -162,6 +162,92 @@ def test_pallas_path_non_divisible_blocks(rng, bits, k, n):
     np.testing.assert_allclose(got, want, rtol=3e-2, atol=3e-2)
 
 
+# ------------------------------------------- tensor-parallel shard packing
+def test_shard_row_packed_no_byte_straddle(rng):
+    """Row-parallel repack: every shard's K-slab is nibble-packed
+    independently (no byte straddles a shard), each slab dequantizes to
+    exactly its slice of the global fake-quant weight, and k_dim becomes
+    the LOCAL contraction length — including K_local % pack != 0."""
+    from repro.serve.packing import _shard_row_packed
+    # (4, 36, 4): K_local = 9 % pack 2 != 0 — every slab zero-pads its
+    # tail byte independently (the no-straddle contract's raison d'être);
+    # (2, 36, 2): K_local = 18 % pack 4 != 0 for the int2 container.
+    for bits, k, n_shards in ((4, 40, 4), (2, 24, 2), (4, 12, 2), (8, 32, 4),
+                              (4, 36, 4), (2, 36, 2)):
+        n = 16
+        w = jnp.asarray(rng.normal(size=(k, n)) * 0.05, jnp.float32)
+        step = quant.init_step_from_tensor(w, float(bits))
+        p = quant.pack_linear(w, step, jnp.float32(0.05), bits=bits)
+        local = _shard_row_packed(p, n_shards)
+        k_local = k // n_shards
+        assert local.k_dim == k_local
+        want_full = np.asarray(quant.packed_weight_dense(p))
+        rows = local.wp.shape[0] // n_shards
+        for s in range(n_shards):
+            slab = PackedLinear(wp=local.wp[s * rows:(s + 1) * rows],
+                                scale=local.scale, sa=local.sa,
+                                bits=bits, k_dim=k_local)
+            np.testing.assert_array_equal(
+                np.asarray(quant.packed_weight_dense(slab)),
+                want_full[s * k_local:(s + 1) * k_local])
+
+
+def test_shard_packed_params_specs(packed_smoke):
+    """shard_packed_params: column leaves shard N + their per-channel
+    scales, row leaves shard (repacked) K with replicated scales and local
+    k_dim, edges/norms replicate — and the spec tree mirrors the params
+    treedef exactly (shard_map in_specs / device_put shardings)."""
+    from jax.sharding import PartitionSpec as P
+    from repro.serve.packing import shard_packed_params, tp_shardable
+    cfg, params, policy, pparams = packed_smoke
+    n = 2
+    assert tp_shardable(cfg, n) is None
+    tree, specs = shard_packed_params(
+        pack_params(params, policy.uniform(4.0).as_arrays(), cfg), cfg, n)
+    assert jax.tree.structure(tree) == jax.tree.structure(specs)
+    blk = tree["pat"][0]["p0"]
+    sblk = specs["pat"][0]["p0"]
+    assert sblk["attn"]["wq"].wp == P(None, "model")
+    assert sblk["attn"]["wq"].scale == P("model")
+    assert sblk["attn"]["wo"].wp == P("model", None)
+    assert sblk["attn"]["wo"].scale == P(None)
+    assert blk["attn"]["wo"].k_dim == \
+        pparams["pat"][0]["p0"]["attn"]["wo"].k_dim // n   # local K
+    assert sblk["mlp"]["up"].wp == P(None, "model")
+    assert sblk["mlp"]["down"].wp == P("model", None)
+    assert specs["embed"]["wq"] == P(None, None)     # edges replicate
+    with pytest.raises(ValueError, match="shardable"):
+        shard_packed_params(tree, cfg, 3)            # 4 heads % 3 != 0
+
+
+def test_decode_weight_view_bit_exact(packed_smoke):
+    """decode_weight_view (the per-dispatch dequant of the CPU decode
+    path) produces exactly the fake-quant weight for every PackedLinear —
+    the packed==fake_quant parity ladder rests on this."""
+    from repro.serve.packing import decode_weight_view
+    cfg, params, policy, pparams = packed_smoke
+    view = decode_weight_view(pparams)
+    flat_p = _packed_leaves(pparams)
+    wpre = []
+
+    def collect(node):       # sorted-key walk == jax pytree flatten order
+        if isinstance(node, dict) and "wpre" in node:
+            wpre.append(node)
+        elif isinstance(node, dict):
+            for k in sorted(node):
+                collect(node[k])
+        elif isinstance(node, (list, tuple)):
+            for v in node:
+                collect(v)
+    collect(view)
+    assert len(wpre) == len(flat_p)
+    for p, v in zip(flat_p, wpre):
+        np.testing.assert_array_equal(
+            np.asarray(v["wpre"]),
+            np.asarray(quant.packed_weight_dense(p, jnp.float32)))
+        np.testing.assert_array_equal(np.asarray(v["sa"]), np.asarray(p.sa))
+
+
 def test_resident_bytes_reduction(packed_smoke):
     """Measured packed buffers: >=3x smaller than a bf16-resident model."""
     cfg, params, policy, pparams = packed_smoke

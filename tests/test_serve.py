@@ -606,9 +606,30 @@ def test_temperature_sampled_generation_shapes(setup):
     assert int(a.max()) < cfg.vocab and int(a.min()) >= 0
 
 
+def test_typed_prng_keys_sample_like_raw_keys(setup):
+    """New-style typed keys (jax.random.key) flow through the per-row
+    key batching exactly like legacy raw PRNGKey uint32 keys — same
+    trajectory, no misrouting of the batched-vs-single key detection
+    (regression: key.ndim==logits.ndim misread a (B,) typed key batch
+    as a single key and crashed categorical)."""
+    cfg, ctx, params, policy, pa, qparams = setup
+    engine = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx,
+                         max_seq=64,
+                         sampler=SamplerConfig(kind="temperature",
+                                               temperature=1.3))
+    rng = np.random.default_rng(27)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab, (2, 8)), jnp.int32)
+    raw = np.asarray(engine.generate(prompt, n_new=6,
+                                     key=jax.random.PRNGKey(5)))
+    typed = np.asarray(engine.generate(prompt, n_new=6,
+                                       key=jax.random.key(5)))
+    np.testing.assert_array_equal(typed, raw)
+
+
 def test_sampled_trajectory_invariant_to_decode_chunk(setup):
-    """The per-step key folds the ABSOLUTE decode step, so the same key
-    yields the same sampled trajectory under any decode_chunk."""
+    """Each token's key folds (admission nonce, per-request token index)
+    and nothing about chunk geometry, so the same key yields the same
+    sampled trajectory under any decode_chunk."""
     cfg, ctx, params, policy, pa, qparams = setup
     samp = SamplerConfig(kind="temperature", temperature=1.1)
     rng = np.random.default_rng(12)
@@ -621,6 +642,91 @@ def test_sampled_trajectory_invariant_to_decode_chunk(setup):
                           sampler=samp)
         outs.append(np.asarray(eng.generate(prompt, n_new=9, key=key)))
     np.testing.assert_array_equal(outs[0], outs[1])
+
+
+def test_scheduler_temperature_parity_tail_chunk_and_readmit(setup):
+    """Scheduler == solo under TEMPERATURE sampling — the headline PR-4
+    fix: sampling keys fold (admission nonce, per-request token index)
+    instead of global chunk geometry, so a trajectory survives the
+    scheduler's shorter tail chunks, slot re-admission, and batchmates.
+    (The old scheme folded chunk_idx*decode_chunk: a mid-stream tail
+    chunk skipped key indices and parity held only for greedy.)
+
+    Sequence forced here (decode_chunk=4): r0 (10 toks) and r1 (3 toks)
+    share the batch; r1 finishes mid-chunk; r2 re-admits into the freed
+    slot; the final chunks are tails (remaining < decode_chunk).  Every
+    request must equal ``engine.generate(prompt, key, nonces=[i])`` with
+    its admission index as the nonce."""
+    cfg, ctx, params, policy, pa, qparams = setup
+    engine = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx,
+                         max_seq=64, decode_chunk=4,
+                         sampler=SamplerConfig(kind="temperature",
+                                               temperature=1.2))
+    key = jax.random.PRNGKey(42)
+    rng = np.random.default_rng(25)
+    prompts = [rng.integers(0, cfg.vocab, n).tolist() for n in (9, 12, 7)]
+    budgets = [10, 3, 8]
+    reqs = [Request(uid=f"r{i}", prompt=p, max_new_tokens=b)
+            for i, (p, b) in enumerate(zip(prompts, budgets))]
+    res = serve_all(engine, reqs, n_slots=2, key=key)
+    for i, (p, b) in enumerate(zip(prompts, budgets)):
+        solo = np.asarray(engine.generate(jnp.asarray([p], jnp.int32),
+                                          n_new=b, key=key, nonces=[i]))
+        assert res[f"r{i}"].tokens == solo[0].tolist(), f"r{i}"
+    # and the whole thing is invariant to the engine's chunk size
+    e2 = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx,
+                     max_seq=64, decode_chunk=16, sampler=engine.sampler)
+    res2 = serve_all(e2, [Request(uid=r.uid, prompt=r.prompt,
+                                  max_new_tokens=r.max_new_tokens)
+                          for r in reqs], n_slots=2, key=key)
+    for i in range(3):
+        assert res2[f"r{i}"].tokens == res[f"r{i}"].tokens, f"r{i}"
+
+
+def test_sharded_engine_single_shard_matches_unsharded(setup):
+    """ServeEngine(mesh=...) with a 1-device 'model' mesh runs the full
+    shard_map serving path (shard-packed params, sharded cache specs, the
+    two-psum decode) on the default CPU device — tier-1 coverage of the
+    tensor-parallel machinery without forced host devices (the 8-device
+    bit-exactness ladder lives in tests/test_sharding.py)."""
+    cfg, ctx, params, policy, pa, qparams = setup
+    pparams = pack_params(params, policy.as_arrays(), cfg)
+    mesh = jax.make_mesh((1,), ("model",))
+    e1 = ServeEngine(cfg=cfg, params=pparams, policy_arrays=pa, ctx=ctx,
+                     max_seq=64, weights="packed", cache="quantized",
+                     cache_bits=8)
+    eS = ServeEngine(cfg=cfg,
+                     params=pack_params(params, policy.as_arrays(), cfg),
+                     policy_arrays=pa, ctx=ctx, max_seq=64,
+                     weights="packed", cache="quantized", cache_bits=8,
+                     mesh=mesh)
+    rng = np.random.default_rng(26)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab, (1, 12)), jnp.int32)
+    np.testing.assert_array_equal(np.asarray(eS.generate(prompt, n_new=8)),
+                                  np.asarray(e1.generate(prompt, n_new=8)))
+    rep = eS.residency(eS.new_cache(2))
+    assert rep["per_device_kv_bytes"] == rep["resident_kv_bytes"]
+
+
+def test_sharded_engine_validation(setup):
+    """Sharded serving fails loudly on layouts it cannot shard: fake-quant
+    weights, head counts the mesh does not divide, recurrent mixers."""
+    cfg, ctx, params, policy, pa, qparams = setup
+    mesh = jax.make_mesh((1,), ("model",))
+    with pytest.raises(ValueError, match="packed"):
+        ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx,
+                    max_seq=64, mesh=mesh)
+    pparams = pack_params(params, policy.as_arrays(), cfg)
+    bad = jax.make_mesh((1,), ("data",))
+    with pytest.raises(ValueError, match="model"):
+        ServeEngine(cfg=cfg, params=pparams, policy_arrays=pa, ctx=ctx,
+                    max_seq=64, weights="packed", mesh=bad)
+    from repro.serve import packing as packing_mod
+    assert packing_mod.tp_shardable(cfg, 3) is not None      # 4 heads % 3
+    assert packing_mod.tp_shardable(cfg, 8) is not None      # 4 kv heads % 8
+    assert "recurrent" not in (packing_mod.tp_shardable(cfg, 2) or "")
+    xcfg = configs.get_config("xlstm-1.3b").smoke()
+    assert packing_mod.tp_shardable(xcfg, 2) is not None     # no GQA mixer
 
 
 def test_scheduler_admissions_draw_distinct_first_tokens(setup):
