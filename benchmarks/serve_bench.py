@@ -45,9 +45,10 @@ from repro import configs
 from repro.core import knapsack
 from repro.models import transformer as tf
 from repro.parallel.context import local_context
-from repro.serve import (ServeEngine, bf16_resident_weight_bytes, kv_cache,
-                         pack_params, packing, quantize_for_serving,
-                         residency)
+from repro.serve import (Request, ServeEngine, bf16_resident_weight_bytes,
+                         kv_cache, pack_params, packing,
+                         quantize_for_serving, residency)
+from repro.serve.scheduler import ContinuousBatchingScheduler
 
 
 def _policies(policy):
@@ -151,6 +152,51 @@ def _kv_meta(cfg, batch: int, max_seq: int) -> dict:
     }
 
 
+def _paging_meta(cfg, qparams, pa, max_seq: int) -> dict:
+    """Paged-vs-contiguous residency on a MIXED-length request workload
+    (the 'millions of short requests' serving shape) + the prefix-hit
+    rate of a repeated-system-prompt mix.
+
+    Every column is a deterministic function of the workload GEOMETRY
+    (prompt lengths, budgets, slot count, page size) — page demand never
+    depends on sampled token values — so scripts/check_bench.py gates
+    them tightly and enforces the hard >=2x reduction invariant.
+    """
+    ctx = local_context()
+    n_slots, budget, page = 4, 8, 16
+    rng = np.random.default_rng(0)
+    sys_prompt = rng.integers(0, cfg.vocab, 16).tolist()
+    # short-request mix: 3 distinct prompts, 8 requests (5 repeats -> the
+    # identical-prompt sharing path of the quantized cache)
+    distinct = [sys_prompt + rng.integers(0, cfg.vocab, n).tolist()
+                for n in (5, 9, 7)]
+    prompts = [distinct[i % 3] for i in range(8)]
+    engine = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx,
+                         max_seq=max_seq, cache="quantized", cache_bits=8,
+                         cache_layout="paged", page_size=page)
+    sched = ContinuousBatchingScheduler(engine, n_slots=n_slots)
+    for i, p in enumerate(prompts):
+        sched.submit(Request(uid=f"p{i}", prompt=p, max_new_tokens=budget))
+    sched.run()
+    alloc, reg = sched.allocator, sched.registry
+    cache = engine.new_cache(n_slots)
+    page_bytes = residency.paged_page_bytes(cache)
+    slot_bytes = residency.paged_slot_bytes(cache)
+    paged_bytes = alloc.peak_in_use * page_bytes + slot_bytes
+    contiguous = residency.resident_kv_bytes(
+        kv_cache.init_cache(cfg, n_slots, max_seq, cache_bits=8))
+    return {
+        "n_slots": n_slots, "page_size": page, "budget": budget,
+        "n_requests": len(prompts),
+        "peak_pages_in_use": int(alloc.peak_in_use),
+        "paged_page_bytes": page_bytes,
+        "resident_kv_bytes_paged_peak": int(paged_bytes),
+        "resident_kv_bytes_contiguous": int(contiguous),
+        "paged_residency_reduction": contiguous / max(paged_bytes, 1),
+        "prefix_hit_rate": reg.hits / max(reg.hits + reg.misses, 1),
+    }
+
+
 def run(quick: bool = False, batch: int = 4, prompt_len: int = 16,
         n_chunks: int = 2, arch: str = "olmo-1b") -> dict:
     if quick:
@@ -171,10 +217,14 @@ def run(quick: bool = False, batch: int = 4, prompt_len: int = 16,
     max_seq = prompt_len + (n_chunks + 1) * 16 + 16
     kv_meta = _kv_meta(cfg, batch, max_seq)
 
+    pol4 = policy.uniform(4.0)
+    paging_meta = _paging_meta(
+        cfg, quantize_for_serving(params, pol4.as_arrays(), cfg),
+        jax.tree.map(jnp.asarray, pol4.as_arrays()), max_seq)
     out = {"_meta": {"arch": arch, "batch": batch, "n_chunks": n_chunks,
                      "prompt_len": prompt_len,
                      "bf16_resident_weight_bytes": bf16_bytes,
-                     "kv": kv_meta}}
+                     "kv": kv_meta, "paging": paging_meta}}
     sharded = _sharded_meta(cfg, params, policy, tokens, prompt_len,
                             max_seq, n_chunks)
     if sharded is not None:
@@ -233,6 +283,13 @@ if __name__ == "__main__":
           f"({kv['kv_reduction_int8']:.2f}x), "
           f"int4 {kv['resident_kv_bytes_int4']/1e3:.0f} kB "
           f"({kv['kv_reduction_int4']:.2f}x)")
+    pg = meta["paging"]
+    print(f"paged KV ({pg['n_requests']} mixed requests, "
+          f"{pg['n_slots']} slots): peak {pg['peak_pages_in_use']} pages "
+          f"-> {pg['resident_kv_bytes_paged_peak']/1e3:.0f} kB vs "
+          f"contiguous {pg['resident_kv_bytes_contiguous']/1e3:.0f} kB "
+          f"({pg['paged_residency_reduction']:.2f}x), prefix-hit rate "
+          f"{pg['prefix_hit_rate']:.2f}")
     sh = meta.get("sharded")
     if sh:
         print(f"sharded (model={sh['n_shards']} of {sh['devices']} devices, "

@@ -30,6 +30,11 @@ baseline numbers:
     regression class instead of letting it hide in the JSON);
   * the quantized-cache rows are PRESENT — a bench that silently stops
     reporting the KV columns fails loudly here and in scripts/ci.sh;
+  * the paged-KV workload survey (_meta.paging) stays present and keeps
+    its >= ``min_paged_reduction`` (2x) residency win over contiguous
+    slots on the mixed short-request workload, with its byte and
+    hit-rate columns gated tightly (they are deterministic functions of
+    the workload geometry);
   * once the baseline carries ``_meta.sharded`` (tensor-parallel serving:
     sharded tok/s + per-device resident bytes), those columns are
     REQUIRED too.
@@ -65,7 +70,21 @@ DEFAULT_GATE = {
     # rather than by hand-tuning here.
     "min_packed_speed_ratio": 0.7,
     "packed_ratio_baseline_frac": 0.75,
+    # paged vs contiguous resident KV bytes on the mixed short-request
+    # workload (_meta.paging) — the page-table layout's reason to exist;
+    # purely geometric (page demand never depends on token values), so a
+    # hard floor is safe on any host.
+    "min_paged_reduction": 2.0,
 }
+
+# _meta.paging columns every bench run MUST report once the baseline has
+# the section — same loud-failure rule as the quantized-cache columns
+REQUIRED_PAGING_KEYS = (
+    "resident_kv_bytes_paged_peak",
+    "resident_kv_bytes_contiguous",
+    "paged_residency_reduction",
+    "prefix_hit_rate",
+)
 
 # per-policy columns every bench run MUST report for the quantized cache —
 # missing rows fail loudly (satellite: a refactor that silently drops the
@@ -120,6 +139,32 @@ def check(bench: dict, baseline: dict) -> list:
                  f"(rtol {gate['bytes_rtol']})")
         else:
             ok(f"_meta.kv.{key} = {cur}")
+
+    # paged-cache workload survey (_meta.paging): every column is a
+    # deterministic function of the workload geometry -> tight rtol;
+    # n_* / page_size settings must match exactly
+    base_pg = base_meta.get("paging")
+    cur_pg = cur_meta.get("paging")
+    if base_pg:
+        if cur_pg is None:
+            fail("_meta.paging: paged-KV columns missing from bench output")
+        else:
+            for key in REQUIRED_PAGING_KEYS:
+                if key not in cur_pg:
+                    fail(f"_meta.paging.{key}: paged-cache column missing "
+                         f"from bench output")
+            for key, base_val in base_pg.items():
+                cur = cur_pg.get(key)
+                if key in ("n_slots", "page_size", "budget", "n_requests"):
+                    (ok if cur == base_val else fail)(
+                        f"_meta.paging.{key} = {cur} vs baseline {base_val}")
+                elif cur is None:
+                    fail(f"_meta.paging.{key}: missing")
+                elif not _close(cur, base_val, gate["bytes_rtol"]):
+                    fail(f"_meta.paging.{key} = {cur} vs baseline "
+                         f"{base_val} (rtol {gate['bytes_rtol']})")
+                else:
+                    ok(f"_meta.paging.{key} = {cur}")
 
     for policy, base_row in baseline.items():
         if policy.startswith("_"):
@@ -249,6 +294,15 @@ def check(bench: dict, baseline: dict) -> list:
             fail(f"_meta.kv.{key} = {red:.2f}x < {gate[floor_key]}x")
         else:
             ok(f"_meta.kv.{key} = {red:.2f}x >= {gate[floor_key]}x")
+    # hard paging invariant: per-token actual residency must beat the
+    # contiguous worst case >= 2x on the short-request mix, baseline or not
+    red = (cur_pg or {}).get("paged_residency_reduction", 0.0)
+    if red < gate["min_paged_reduction"]:
+        fail(f"_meta.paging.paged_residency_reduction = {red:.2f}x < "
+             f"{gate['min_paged_reduction']}x")
+    else:
+        ok(f"_meta.paging.paged_residency_reduction = {red:.2f}x "
+           f">= {gate['min_paged_reduction']}x")
     return failures
 
 

@@ -1,8 +1,12 @@
 #!/usr/bin/env bash
 # Tier-1 CI: dev deps -> lint -> test suite -> quick benches -> bench gate.
 #
-#   bash scripts/ci.sh [--skip-bench] [--skip-tests]
+#   bash scripts/ci.sh [--lint-only] [--skip-bench] [--skip-tests]
 #
+#   --lint-only    lint and stop (the workflow's lint job calls exactly
+#                  this, so local and CI lint run ONE entrypoint and
+#                  cannot drift — previously the split jobs never ran
+#                  ruff via ci.sh and the workflow had its own command)
 #   --skip-bench   tests only (the workflow's test job)
 #   --skip-tests   benches + regression gate only (the workflow's bench job)
 #
@@ -12,13 +16,16 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+LINT_ONLY=0
 SKIP_BENCH=0
 SKIP_TESTS=0
 for arg in "$@"; do
     case "$arg" in
+        --lint-only)  LINT_ONLY=1 ;;
         --skip-bench) SKIP_BENCH=1 ;;
         --skip-tests) SKIP_TESTS=1 ;;
-        *) echo "usage: ci.sh [--skip-bench] [--skip-tests]" >&2; exit 2 ;;
+        *) echo "usage: ci.sh [--lint-only] [--skip-bench] [--skip-tests]" \
+               >&2; exit 2 ;;
     esac
 done
 
@@ -28,14 +35,27 @@ done
 python -m pip install -r requirements-dev.txt \
     || echo "WARN: dev-dep install failed (offline?); property tests will skip"
 
-# Lint only on full runs — the workflow's split jobs (--skip-bench /
-# --skip-tests) have a dedicated lint job, so don't triple the signal.
-if [ "$SKIP_BENCH" -eq 0 ] && [ "$SKIP_TESTS" -eq 0 ]; then
+run_lint() {
     if python -m ruff --version >/dev/null 2>&1; then
         python -m ruff check .
+    elif [ "$LINT_ONLY" -eq 1 ]; then
+        # a dedicated lint run with no linter is a failure, not a skip
+        echo "ERROR: --lint-only but ruff is unavailable" >&2
+        exit 1
     else
         echo "WARN: ruff unavailable; lint step skipped"
     fi
+}
+
+if [ "$LINT_ONLY" -eq 1 ]; then
+    run_lint
+    exit 0
+fi
+
+# Full local runs lint too; the workflow's split test/bench jobs skip it
+# (their lint signal comes from the lint job running `ci.sh --lint-only`).
+if [ "$SKIP_BENCH" -eq 0 ] && [ "$SKIP_TESTS" -eq 0 ]; then
+    run_lint
 fi
 
 if [ "$SKIP_TESTS" -eq 0 ]; then

@@ -19,6 +19,12 @@ packed-int4 K/V code tiles from HBM and dequantizes them IN-REGISTER inside
 the score and value matmuls — a full-precision cache is never materialized
 in HBM, so the decode roofline reads 1 (or 0.5) bytes per cache element
 instead of 2–4.
+
+``paged_kv_decode_attention`` is the same fused decode over the PAGED
+cache layout (serve/paging.py): K/V code pages stream through a
+scalar-prefetched (B, max_pages) block table — the physical page id is
+dereferenced in the BlockSpec index maps, so the gather never
+materializes and unmapped pages are never touched.
 """
 from __future__ import annotations
 
@@ -175,6 +181,129 @@ def kv_decode_attention(q: jax.Array, kq: jax.Array, k_scale: jax.Array,
         ],
         interpret=interpret,
     )(q, kq, k_scale, vq, v_scale, pos2)
+    return out
+
+
+def _paged_kv_decode_kernel(tbl_ref, pos_ref, q_ref, kq_ref, ks_ref, vq_ref,
+                            vs_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                            page: int, np_max: int, bits: int, scale: float):
+    j = pl.program_id(2)          # logical page (innermost)
+    b = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = pos_ref[b, 0]
+
+    # Pages entirely past this slot's position are fully masked — skip
+    # them (their table entries may be stale/zero; the guard is what
+    # keeps unmapped physical pages, even NaN-poisoned ones, unread).
+    @pl.when(j * page <= pos)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)                 # (1, D)
+        kq = kq_ref[0, :, 0, :]                          # (page, D or D//2)
+        k = kq.astype(jnp.float32) if bits == 8 else kv_quant.unpack4(kq)
+        k = k * ks_ref[0].astype(jnp.float32)            # per-channel (1, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        kpos = j * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+        live = kpos <= pos
+        s = jnp.where(live, s, NEG_INF)
+        m_prev = m_ref[...]                              # (1, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)                           # (1, page)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        vq = vq_ref[0, :, 0, :]
+        v = vq.astype(jnp.float32) if bits == 8 else kv_quant.unpack4(vq)
+        v = v * vs_ref[0, :, 0].astype(jnp.float32)[:, None]  # per-token
+        # zero masked V rows: their weight is exactly 0, but a poisoned
+        # page's NaN would still smear through 0 * NaN in the dot.
+        v = jnp.where(live[0][:, None], v, 0.0)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == np_max - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def paged_kv_decode_attention(q: jax.Array, kq_pool: jax.Array,
+                              k_scale: jax.Array, vq_pool: jax.Array,
+                              v_scale_pool: jax.Array, tbl: jax.Array,
+                              positions: jax.Array, bits: int = 8,
+                              interpret: bool = True) -> jax.Array:
+    """Fused dequant decode attention over a PAGED quantized KV cache.
+
+    q: (B, H, D) — one query token per slot.
+    kq_pool/vq_pool: (P, page, Hkv, D) int8 or (P, page, Hkv, D//2)
+    packed-int4 uint8 physical pages; v_scale_pool: (P, page, Hkv) f32
+    per-token scales riding their pages; k_scale: (B, Hkv, D) f32
+    per-slot per-channel; tbl: (B, n_pages) int32 block table;
+    positions: (B,) int32.  Returns (B, H, D) f32.
+
+    Grid (B, H, n_pages), pages innermost: the block table rides in as a
+    SCALAR-PREFETCH operand, so each K/V tile's index map dereferences
+    ``tbl[b, j]`` — the kernel streams physical pages straight from HBM
+    in logical order, dequantizes in-register, and never materializes
+    the gathered sequence (the ref oracle's gather is the semantic spec,
+    not the traffic model).  One page (16 rows by default) per grid step
+    is sublane-aligned but narrow; fusing multiple pages per step is a
+    perf follow-up, not a correctness concern.
+    """
+    b, h, d = q.shape
+    p_phys, page, hkv, dp = kq_pool.shape
+    assert h % hkv == 0, (h, hkv)
+    group = h // hkv
+    assert dp == (d if bits == 8 else d // 2), (kq_pool.shape, d, bits)
+    assert vq_pool.shape == kq_pool.shape, (vq_pool.shape, kq_pool.shape)
+    assert v_scale_pool.shape == kq_pool.shape[:3], v_scale_pool.shape
+    np_max = tbl.shape[1]
+    grid = (b, h, np_max)
+    pos2 = positions.reshape(b, 1).astype(jnp.int32)
+
+    # index maps receive the grid indices first, then the scalar-prefetch
+    # refs (tbl, positions) as trailing arguments
+    def kv_map(b, h, j, t, p, g=group):
+        # physical page from the prefetched table; clamp so stale entries
+        # (masked pages) can never index out of the pool
+        return (jnp.clip(t[b, j], 0, p_phys - 1), 0, h // g, 0)
+
+    def vs_map(b, h, j, t, p, g=group):
+        return (jnp.clip(t[b, j], 0, p_phys - 1), 0, h // g)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,           # tbl, positions
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, d), lambda b, h, j, t, p: (b, h, 0)),
+            pl.BlockSpec((1, page, 1, dp), kv_map),
+            pl.BlockSpec((1, 1, d),
+                         lambda b, h, j, t, p, g=group: (b, h // g, 0)),
+            pl.BlockSpec((1, page, 1, dp), kv_map),
+            pl.BlockSpec((1, page, 1), vs_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, d), lambda b, h, j, t, p: (b, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_paged_kv_decode_kernel, page=page, np_max=np_max,
+                          bits=bits, scale=d ** -0.5),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, d), jnp.float32),
+        interpret=interpret,
+    )(tbl.astype(jnp.int32), pos2, q, kq_pool, k_scale, vq_pool,
+      v_scale_pool)
     return out
 
 

@@ -42,8 +42,10 @@ _EPS = 1e-8
 def cache_bits(cache: dict) -> int:
     """Static bit-width of a quantized cache dict, derived from the code
     container (int8 -> 8, packed uint8 nibbles -> 4) — no metadata has to
-    ride through scan/jit."""
-    return 8 if cache["kq"].dtype == jnp.int8 else 4
+    ride through scan/jit.  Works on both the contiguous ('kq') and the
+    paged ('pkq' pool) layouts."""
+    codes = cache["kq"] if "kq" in cache else cache["pkq"]
+    return 8 if codes.dtype == jnp.int8 else 4
 
 
 def code_dtype(bits: int):
@@ -137,6 +139,69 @@ def dequant_v(vq: jnp.ndarray, v_scale: jnp.ndarray, bits: int,
               dtype=jnp.float32) -> jnp.ndarray:
     codes = vq.astype(jnp.float32) if bits == 8 else unpack4(vq)
     return (codes * v_scale[..., None].astype(jnp.float32)).astype(dtype)
+
+
+# --------------------------------------------------------- page primitives
+# The paged serving cache (serve/paging.py, DESIGN.md §3) stores K/V in
+# fixed-size PAGES: pool buffers shaped (..., P, page, Hkv, X) indexed
+# through a per-slot (B, max_pages) int32 block table.  These are the ONE
+# definition of the page read/write layout — models/attention.py (decode
+# writes + full-dtype gather reads), kernels/ref.py (the paged-attention
+# oracle) and serve/paging.py (admission writes) all go through them, so
+# the layouts cannot drift.
+
+def page_count(n_tokens: int, page_size: int) -> int:
+    """Pages needed to hold ``n_tokens`` rows (host-side sizing)."""
+    return -(-int(n_tokens) // int(page_size))
+
+
+def gather_pages(pool: jnp.ndarray, tbl: jnp.ndarray) -> jnp.ndarray:
+    """Assemble each slot's virtual sequence from its mapped pages.
+
+    pool: (P, page, ...) physical pages; tbl: (B, n) int32 page ids.
+    Returns (B, n*page, ...) — logical row ``s`` of slot ``b`` is
+    ``pool[tbl[b, s // page], s % page]``.  Rows mapped through stale /
+    zero table entries are garbage-until-overwritten exactly like the
+    contiguous cache's tail rows: the decode position mask keeps them
+    unread.
+    """
+    b, n = tbl.shape
+    page = pool.shape[1]
+    # clip, don't wrap: unmapped entries (-1 sentinel / stale ids) must
+    # resolve to SOME in-pool page — its rows sit at masked positions
+    got = jnp.take(pool, jnp.clip(tbl, 0, pool.shape[0] - 1), axis=0)
+    return got.reshape((b, n * page) + pool.shape[2:])
+
+
+def paged_write_row(pool: jnp.ndarray, new: jnp.ndarray,
+                    positions: jnp.ndarray, tbl: jnp.ndarray) -> jnp.ndarray:
+    """Write one decode-step row per slot through the block table.
+
+    pool: (P, page, ...); new: (B, 1, ...) — the step's row per slot;
+    positions: (B, 1) absolute LOGICAL positions; tbl: (B, n) int32.
+    The paged counterpart of models/attention.cache_write: logical
+    position ``pos`` lands in page ``tbl[b, pos // page]`` at row
+    ``pos % page``.
+
+    Writes through UNMAPPED table entries are dropped, never redirected:
+    entries < 0 (the ``set_table_rows`` sentinel beyond a slot's mapped
+    range) and positions >= n*page (an evicted slot run past its window)
+    push the ROW offset out of range so the ``mode='drop'`` scatter
+    drops them.  This is load-bearing for page isolation — a slot whose
+    budget ends mid-chunk keeps scanning (and "writing") to advancing
+    positions, and in the contiguous layout those overrun writes land in
+    its own (B, S_max) rows; here they would land wherever a stale table
+    entry points, i.e. in ANOTHER request's page.
+    """
+    b, n = tbl.shape
+    page = pool.shape[1]
+    pos = positions[:, 0]
+    page_idx = jnp.clip(pos // page, 0, n - 1)
+    phys_raw = tbl[jnp.arange(b), page_idx]
+    valid = (pos < n * page) & (phys_raw >= 0)
+    phys = jnp.clip(phys_raw, 0, pool.shape[0] - 1)
+    off = jnp.where(valid, pos % page, page)     # page -> dropped
+    return pool.at[phys, off].set(new[:, 0].astype(pool.dtype), mode="drop")
 
 
 # -------------------------------------------------------- prefill handoff

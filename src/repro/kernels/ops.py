@@ -175,6 +175,31 @@ def kv_cache_attention(q: jax.Array, kq: jax.Array, k_scale: jax.Array,
                                       interpret=(impl == "interpret"), **kw)
 
 
+def paged_kv_cache_attention(q: jax.Array, kq_pool: jax.Array,
+                             k_scale: jax.Array, vq_pool: jax.Array,
+                             v_scale_pool: jax.Array, tbl: jax.Array,
+                             positions: jax.Array, bits: int,
+                             impl: str = "auto") -> jax.Array:
+    """Decode attention over a PAGED quantized KV cache (serving read path
+    for ``ServeEngine(cache_layout='paged')``, DESIGN.md §3).
+
+    Dispatch mirrors ``kv_cache_attention``: the Pallas kernel on TPU
+    streams physical pages through a scalar-prefetched block table and
+    dequantizes in-register; the ref oracle — also the production CPU
+    path — gathers the pages then runs the EXACT contiguous
+    quantized-cache decode math, so a paged decode differs from the
+    contiguous decode by the page indirection and nothing else.
+    """
+    impl = _resolve(impl)
+    if impl == "ref":
+        return ref.paged_kv_cache_attention(q, kq_pool, k_scale, vq_pool,
+                                            v_scale_pool, tbl, positions,
+                                            bits)
+    return _flash.paged_kv_decode_attention(
+        q, kq_pool, k_scale, vq_pool, v_scale_pool, tbl, positions,
+        bits=bits, interpret=(impl == "interpret"))
+
+
 def flash_attention(q, k, v, causal: bool = True, impl: str = "auto", **kw):
     impl = _resolve(impl)
     if impl == "ref":

@@ -165,6 +165,44 @@ def kv_cache_attention(q: jax.Array, kq: jax.Array, k_scale: jax.Array,
     return jnp.einsum("bhs,bshd->bhd", p, v)
 
 
+def paged_kv_cache_attention(q: jax.Array, kq_pool: jax.Array,
+                             k_scale: jax.Array, vq_pool: jax.Array,
+                             v_scale_pool: jax.Array, tbl: jax.Array,
+                             positions: jax.Array, bits: int) -> jax.Array:
+    """Decode attention over a PAGED quantized KV cache — the pure-jnp
+    oracle of kernels/flash_attention.paged_kv_decode_attention, and the
+    production CPU serving path (kernels/ops dispatch, impl='auto'
+    off-TPU).
+
+    The pools hold fixed-size pages; each slot's virtual (B, n*page)
+    sequence is assembled through its block-table row
+    (kv_quant.gather_pages) and then runs EXACTLY the contiguous
+    quantized-cache decode math (``kv_cache_attention`` above) — so the
+    paged read differs from the contiguous read by the page indirection
+    and NOTHING else; masked softmax rows contribute exactly 0 either
+    way, which is what makes paged==contiguous decode bit-exact
+    (tests/test_serve.py) and unmapped-page contents (even NaN — the
+    poisoned-free-page test) unobservable.
+
+    q: (B, H, D); kq_pool/vq_pool: (P, page, Hkv, D or D//2) codes;
+    k_scale: (B, Hkv, D) per-slot per-channel; v_scale_pool:
+    (P, page, Hkv) per-token rows riding their pages; tbl: (B, n) int32;
+    positions: (B,) int32.  Returns (B, H, D) f32.
+    """
+    kq = kv_quant.gather_pages(kq_pool, tbl)             # (B, S_virt, ...)
+    vq = kv_quant.gather_pages(vq_pool, tbl)
+    vs = kv_quant.gather_pages(v_scale_pool, tbl)
+    s_virt = kq.shape[1]
+    # Zero the V rows past each slot's position BEFORE the value einsum:
+    # their softmax weight is exactly 0, but 0 * NaN (a poisoned free
+    # page) would still smear — the contiguous path never holds NaN, so
+    # the zeroing keeps bit-parity AND NaN-safety.
+    mask = jnp.arange(s_virt)[None, :] <= positions[:, None]
+    vq = jnp.where(mask[..., None, None], vq, 0).astype(vq.dtype)
+    vs = jnp.where(mask[..., None], vs, 0.0)
+    return kv_cache_attention(q, kq, k_scale, vq, vs, positions, bits)
+
+
 # ---------------------------------------------------------- flash_attention
 def attention(q: jax.Array, k: jax.Array, v: jax.Array,
               causal: bool = True, scale: float | None = None) -> jax.Array:

@@ -128,6 +128,59 @@ def gqa_apply(p, x, bits, cfg, mode: str, cache, positions,
                                        cfg.mrope_sections, cfg.rope_base)
         q, k = common.apply_rope(q, cos, sin), common.apply_rope(k, cos, sin)
 
+    if mode == "decode" and isinstance(cache, dict) and "pkq" in cache:
+        # PAGED quantized serving cache (serve/paging.py): physical page
+        # pools + a block table ("tbl", injected per dispatch by the
+        # engine).  Identical quantization semantics to the contiguous
+        # quantized cache — the new row quantizes against the slot's
+        # prefill-calibrated per-channel K grid and its own exact V row
+        # scale — only the row addressing goes through the table, so
+        # paged decode is bit-exact with contiguous decode.
+        tbl = cache["tbl"]
+        cbits = kvq.cache_bits(cache)
+        kq_new = kvq.quantize_k(k, cache["k_scale"], cbits)
+        vs_new = kvq.v_token_scale(v, cbits)
+        vq_new = kvq.quantize_v(v, vs_new, cbits)
+        ck = kvq.paged_write_row(cache["pkq"], kq_new, positions, tbl)
+        cv = kvq.paged_write_row(cache["pvq"], vq_new, positions, tbl)
+        cvs = kvq.paged_write_row(cache["pv_scale"], vs_new, positions, tbl)
+        out = kops.paged_kv_cache_attention(q[:, 0], ck, cache["k_scale"],
+                                            cv, cvs, tbl, positions[:, 0],
+                                            cbits)
+        out = out.astype(x.dtype).reshape(b, s, h * dh)
+        y = qproj(out, p["wo"], bits["attn_wo"])
+        return y, {"pkq": ck, "k_scale": cache["k_scale"],
+                   "pvq": cv, "pv_scale": cvs, "tbl": tbl}
+
+    if mode == "decode" and isinstance(cache, dict) and "pk" in cache:
+        # PAGED full-dtype serving cache: page pools in the cache dtype.
+        # Gather each slot's virtual sequence through its table row, then
+        # run EXACTLY the contiguous full-dtype decode math below — masked
+        # softmax rows contribute exactly 0 either way, so paged decode is
+        # bit-exact with contiguous decode regardless of what unmapped
+        # pages hold.
+        tbl = cache["tbl"]
+        ck = kvq.paged_write_row(cache["pk"], k, positions, tbl)
+        cv = kvq.paged_write_row(cache["pv"], v, positions, tbl)
+        kk = _repeat_kv(kvq.gather_pages(ck, tbl), group)
+        vv = _repeat_kv(kvq.gather_pages(cv, tbl), group)
+        s_virt = kk.shape[1]
+        logits = jnp.einsum("bqhd,bshd->bhqs", q.astype(jnp.float32),
+                            kk.astype(jnp.float32)) * (dh ** -0.5)
+        s_pos = jnp.arange(s_virt)
+        mask = s_pos[None, None, None, :] <= positions[:, None, None, :]
+        logits = jnp.where(mask, logits, -1e30)
+        pr = jax.nn.softmax(logits, axis=-1)
+        # zero masked V rows: their weight is exactly 0, but a poisoned
+        # free page's NaN would still smear through 0 * NaN.
+        vv = jnp.where(s_pos[None, :, None, None]
+                       <= positions[:, :1, None, None],
+                       vv.astype(jnp.float32), 0.0)
+        out = jnp.einsum("bhqs,bshd->bqhd", pr, vv)
+        out = out.astype(x.dtype).reshape(b, s, h * dh)
+        y = qproj(out, p["wo"], bits["attn_wo"])
+        return y, {"pk": ck, "pv": cv, "tbl": tbl}
+
     if mode == "decode" and isinstance(cache, dict) and "kq" in cache:
         # QUANTIZED serving cache (kernels/kv_quant.py): int8 / packed-int4
         # codes + per-channel K / per-token V f32 scales.  The new row is
@@ -167,6 +220,50 @@ def gqa_apply(p, x, bits, cfg, mode: str, cache, positions,
         out = out.astype(x.dtype).reshape(b, s, h * dh)
         y = qproj(out, p["wo"], bits["attn_wo"])
         return y, {"k": ck, "v": cv}
+
+    if mode == "prefill" and isinstance(cache, dict) and "pk" in cache:
+        # SUFFIX prefill over shared prefix pages (paged full-dtype cache,
+        # serve/paging.py prefix sharing): the unshared suffix tokens run
+        # a normal prefill pass, but their attention extends over the
+        # prefix K/V gathered from the shared pages.  ``positions`` carry
+        # the absolute offsets (arange(prefix_len, prefix_len + s_pad)),
+        # so RoPE and the causal mask line up with what a full-prompt
+        # prefill would compute; rows past the valid suffix (right pad /
+        # stale pool rows) sit at future positions and stay causally
+        # masked.  Exactness vs the full-prompt prefill: the prefix rows
+        # are bit-identical (cache dtype == compute dtype in serving) and
+        # the only deviation is online-softmax chunk-order noise, which
+        # the next activation fake-quant snaps back onto the shared grid
+        # (DESIGN.md §3).  Single-request admission path only.
+        assert b == 1, "suffix prefill is a single-request admission path"
+        tbl = cache["tbl"]
+        kk_virt = kvq.gather_pages(cache["pk"], tbl)   # (1, S_virt, hkv, dh)
+        vv_virt = kvq.gather_pages(cache["pv"], tbl)
+        off = positions[0, 0]
+        kk_virt = jax.lax.dynamic_update_slice(
+            kk_virt, k.astype(kk_virt.dtype), (0, off, 0, 0))
+        vv_virt = jax.lax.dynamic_update_slice(
+            vv_virt, v.astype(vv_virt.dtype), (0, off, 0, 0))
+        s_virt = kk_virt.shape[1]
+        chunk = min(DEFAULT_CHUNK, s_virt)
+        n_chunks = -(-s_virt // chunk)
+        pad = n_chunks * chunk - s_virt
+        kp = jnp.pad(kk_virt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vp = jnp.pad(vv_virt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+        def kv_fn(i):
+            kc = jax.lax.dynamic_slice_in_dim(kp, i * chunk, chunk, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(vp, i * chunk, chunk, axis=1)
+            return _repeat_kv(kc, group), _repeat_kv(vc, group)
+
+        out = chunked_attention(q, kv_fn, n_chunks, chunk, causal=True,
+                                q_offset=off)
+        out = out.reshape(b, s, h * dh)
+        y = qproj(out, p["wo"], bits["attn_wo"])
+        # hand back ONLY the fresh suffix rows — the engine writes them
+        # into the slot's unshared pages (serve/paging.write_prefill)
+        return y, {"k": k.astype(cfg.cache_dtype),
+                   "v": v.astype(cfg.cache_dtype)}
 
     # train / prefill: chunked flash-style attention.
     chunk = min(DEFAULT_CHUNK, s)
@@ -321,6 +418,49 @@ def init_gqa_quant_cache(cfg, batch: int, max_seq: int, bits: int) -> dict:
         "k_scale": jnp.ones((batch, hkv, dh), jnp.float32),
         "vq": jnp.zeros((batch, max_seq, hkv, dp), dt),
         "v_scale": jnp.zeros((batch, max_seq, hkv), jnp.float32),
+    }
+
+
+def init_gqa_paged_cache(cfg, batch: int, n_pages: int, page_size: int,
+                         dtype=None) -> dict:
+    """Paged full-dtype GQA cache: physical page pools (serve/paging.py).
+
+    Pools are (P, page, Hkv, D) — no batch axis; slots map logical pages
+    to physical pages through the engine-held (B, max_pages) block table
+    (injected per dispatch as the layer dict's ``tbl`` entry).  Unmapped
+    pages are garbage-until-mapped; the decode position mask keeps them
+    unread exactly like the contiguous cache's tail rows.
+    """
+    dtype = cfg.cache_dtype if dtype is None else dtype
+    hkv, dh = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "pk": jnp.zeros((n_pages, page_size, hkv, dh), dtype),
+        "pv": jnp.zeros((n_pages, page_size, hkv, dh), dtype),
+    }
+
+
+def init_gqa_paged_quant_cache(cfg, batch: int, n_pages: int, page_size: int,
+                               bits: int) -> dict:
+    """Paged quantized GQA cache (kernels/kv_quant.py code layout).
+
+    Codes and the per-token V scales ride PER PAGE ((P, page, ...) pools);
+    the per-channel K scale stays PER SLOT ((B, Hkv, D), exactly the
+    contiguous layout) — it is calibrated from the request's own prefill
+    and shared by every page the slot maps, which is what keeps paged
+    decode bit-exact with contiguous decode (DESIGN.md §3).
+    """
+    assert bits in (4, 8), bits
+    hkv, dh = cfg.n_kv_heads, cfg.head_dim
+    dp = kvq.packed_dim(dh, bits)
+    dt = kvq.code_dtype(bits)
+    return {
+        "pkq": jnp.zeros((n_pages, page_size, hkv, dp), dt),
+        # ones, not zeros — same NaN-avoidance rule as the contiguous
+        # quantized cache (a never-admitted slot's garbage decode writes
+        # divide by k_scale).
+        "k_scale": jnp.ones((batch, hkv, dh), jnp.float32),
+        "pvq": jnp.zeros((n_pages, page_size, hkv, dp), dt),
+        "pv_scale": jnp.zeros((n_pages, page_size, hkv), jnp.float32),
     }
 
 

@@ -115,16 +115,36 @@ def block_apply(p, x, bits, cfg, ctx, bdef: BlockDef, mode: str, cache,
 
 
 def init_block_cache(cfg, bdef: BlockDef, batch: int, max_seq: int,
-                     cache_dtype=None, cache_bits=None):
+                     cache_dtype=None, cache_bits=None, page_geom=None):
     """``cache_bits`` 4/8 selects the quantized GQA cache layout; None or
     16 keeps the full-dtype buffers.  Only GQA caches quantize: MLA's
     cache is already the compressed latent (its memory story), and
     recurrent/SSM states have no sequence axis — all stay full precision
-    (DESIGN.md §3)."""
+    (DESIGN.md §3).
+
+    ``page_geom`` = (n_pages, page_size) selects the PAGED pool layout
+    (serve/paging.py) instead of the contiguous (B, S_max) buffers.
+    Only GQA caches page: MLA's latent and recurrent state have no
+    shareable per-token sequence rows (a 16-passthrough GQA layer in a
+    paged config would need full-dtype rows addressed per page, which
+    ``init_gqa_paged_cache`` provides)."""
     if bdef.mixer in ("gqa",):
+        if page_geom is not None:
+            n_pages, page_size = page_geom
+            if cache_bits in (4, 8):
+                return attn.init_gqa_paged_quant_cache(
+                    cfg, batch, n_pages, page_size, cache_bits)
+            return attn.init_gqa_paged_cache(cfg, batch, n_pages, page_size,
+                                             cache_dtype)
         if cache_bits in (4, 8):
             return attn.init_gqa_quant_cache(cfg, batch, max_seq, cache_bits)
         return attn.init_gqa_cache(cfg, batch, max_seq, cache_dtype)
+    if page_geom is not None and bdef.mixer in ("mla", "mamba", "mlstm",
+                                                "slstm"):
+        raise ValueError(
+            f"paged KV cache supports GQA attention only; {bdef.mixer!r} "
+            f"state has no per-token page structure (serve paged configs "
+            f"with cache_layout='contiguous')")
     if bdef.mixer == "mla":
         return attn.init_mla_cache(cfg, batch, max_seq, cache_dtype)
     if bdef.mixer == "mamba":
@@ -201,7 +221,7 @@ def _cache_bits_for(cache_bits, group: str, layer: int):
 
 
 def init_caches(cfg, batch: int, max_seq: int, cache_dtype=None,
-                cache_bits=None) -> dict:
+                cache_bits=None, page_geom=None) -> dict:
     """Preallocated per-layer decode caches (attention: (B, S_max, ...)).
 
     Cache contract (serve/kv_cache.py builds on this):
@@ -224,12 +244,16 @@ def init_caches(cfg, batch: int, max_seq: int, cache_dtype=None,
         per-layer LIST and models/transformer.apply runs the pattern
         python-unrolled (the same trade mixed-precision packed weights
         already make).
+      - ``page_geom`` = (n_pages, page_size) swaps the per-slot buffers
+        for physical page POOLS (serve/paging.py — GQA only); the block
+        table addressing them lives in the engine's PagedServeCache and
+        is injected per dispatch.
     """
     caches: dict = {}
     for i, bdef in enumerate(cfg.prefix):
         caches[f"prefix{i}"] = init_block_cache(
             cfg, bdef, batch, max_seq, cache_dtype,
-            _cache_bits_for(cache_bits, f"prefix{i}", 0))
+            _cache_bits_for(cache_bits, f"prefix{i}", 0), page_geom)
     if cfg.n_repeats:
         bits_grid = [[_cache_bits_for(cache_bits, f"pat{j}", r)
                       for j, _ in enumerate(cfg.pattern)]
@@ -239,7 +263,8 @@ def init_caches(cfg, batch: int, max_seq: int, cache_dtype=None,
         if mixed:
             caches["pat"] = [
                 {f"p{j}": init_block_cache(cfg, bd, batch, max_seq,
-                                           cache_dtype, bits_grid[r][j])
+                                           cache_dtype, bits_grid[r][j],
+                                           page_geom)
                  for j, bd in enumerate(cfg.pattern)}
                 for r in range(cfg.n_repeats)]
         else:
@@ -249,7 +274,8 @@ def init_caches(cfg, batch: int, max_seq: int, cache_dtype=None,
                     c)
             caches["pat"] = {
                 f"p{j}": stack(init_block_cache(cfg, bd, batch, max_seq,
-                                                cache_dtype, bits_grid[0][j]))
+                                                cache_dtype, bits_grid[0][j],
+                                                page_geom))
                 for j, bd in enumerate(cfg.pattern)}
     return caches
 

@@ -249,6 +249,13 @@ def serve_cache_specs(cache_tree) -> object:
       kq/vq    (..., B, S, Hkv, Dp)   -> Hkv at ndim-2
       k_scale  (..., B, Hkv, D)       -> Hkv at ndim-2
       v_scale  (..., B, S, Hkv)       -> Hkv at ndim-1
+    PAGED pools (serve/paging.py) shard along the KV-head axis exactly
+    like the contiguous codes+scales — the page axes (P, page) replace
+    (B, S) but the trailing head/D layout (and the D-major nibble rule
+    that makes the head slice byte-clean) is unchanged:
+      pk/pv/pkq/pvq (..., P, page, Hkv, D·) -> Hkv at ndim-2
+      pv_scale      (..., P, page, Hkv)     -> Hkv at ndim-1
+      tbl/block table                        -> replicated
     Everything else (recurrent state, MLA latent — excluded from sharded
     serving anyway; sentinel ints) is replicated.
     """
@@ -258,9 +265,10 @@ def serve_cache_specs(cache_tree) -> object:
         if not hasattr(leaf, "shape"):
             return P()
         ndim = len(leaf.shape)
-        if name in ("k", "v", "kq", "vq", "k_scale"):
+        if name in ("k", "v", "kq", "vq", "k_scale",
+                    "pk", "pv", "pkq", "pvq"):
             return P(*([None] * (ndim - 2) + [MODEL, None]))
-        if name == "v_scale":
+        if name in ("v_scale", "pv_scale"):
             return P(*([None] * (ndim - 1) + [MODEL]))
         return P(*([None] * ndim))
 

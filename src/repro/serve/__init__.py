@@ -8,16 +8,23 @@
   kv_cache.py   preallocated (B, S_max) cache with valid-length tracking;
                 full-dtype or quantized (int8 / packed-int4 + scales);
                 shards along the KV-head axis under a mesh
+  paging.py     block/page-table cache layout (cache_layout="paged"):
+                fixed-size page pools + refcounted prefix sharing with
+                admission-time copy-on-write — per-token actual
+                residency instead of per-slot worst case, decode
+                bit-exact with the contiguous layout
   residency.py  the ONE resident/roofline byte accounting (weights + KV,
                 totals and per-device shares)
   sampling.py   greedy / temperature / top-k; keys fold (admission nonce,
                 per-request token index) — scheduler-invariant
   scheduler.py  continuous batching: slot admission, per-request stop/evict
 """
-from repro.serve import residency
+from repro.serve import paging, residency
 from repro.serve.engine import ServeEngine, quantize_for_serving
 from repro.serve.kv_cache import (QuantizedServeCache, ServeCache,
                                   init_cache, splice_prefill)
+from repro.serve.paging import (PageAllocator, PagedServeCache,
+                                PrefixRegistry)
 from repro.serve.packing import (bf16_resident_weight_bytes, pack_params,
                                  params_are_packed, resident_weight_bytes)
 from repro.serve.sampling import GREEDY, SamplerConfig, sample
@@ -29,6 +36,7 @@ __all__ = [
     "pack_params", "params_are_packed", "resident_weight_bytes",
     "bf16_resident_weight_bytes", "residency",
     "ServeCache", "QuantizedServeCache", "init_cache", "splice_prefill",
+    "paging", "PagedServeCache", "PageAllocator", "PrefixRegistry",
     "SamplerConfig", "GREEDY", "sample",
     "Request", "Completion", "ContinuousBatchingScheduler", "serve_all",
 ]

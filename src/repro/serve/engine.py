@@ -41,6 +41,16 @@ measure slower than fake_quant.
     the same amplification that outlaws bf16 caches applies to any lossy
     cache (DESIGN.md §3, tests/test_serve.py).
 
+**Cache layouts** (``cache_layout=``, DESIGN.md §3): ``"contiguous"``
+(default) preallocates dense (B, S_max) slots; ``"paged"`` stores K/V in
+fixed-size physical pages behind a block table (serve/paging.py) — same
+quantization semantics, BIT-exact decode parity with contiguous, and
+per-token actual residency instead of per-slot worst case.  The
+scheduler adds prefix sharing on top (page-aligned prefixes for full
+caches, identical prompts for quantized ones, copy-on-write at
+admission); ``generate`` runs the paged path solo with capacity-parity
+sequential tables so every solo test doubles as a differential oracle.
+
 **Tensor-parallel serving** (``ServeEngine(mesh=...)``, DESIGN.md §3):
 packed weights shard along output channels (attention heads for QKV, d_ff
 for gate/up) and input channels (heads for O, d_ff for down — repacked so
@@ -84,8 +94,9 @@ from repro.kernels import ops as kops
 from repro.models import transformer as tf
 from repro.parallel import compat, sharding
 from repro.parallel.context import local_context
-from repro.serve import kv_cache, packing, residency, sampling
+from repro.serve import kv_cache, packing, paging, residency, sampling
 from repro.serve.kv_cache import ServeCache
+from repro.serve.paging import PagedServeCache
 
 
 def _quantize_qdense(p: dict, bits) -> dict:
@@ -194,6 +205,10 @@ class ServeEngine:
     cache_bits: Any = 8             # int 8/4, or {group: per-layer bits}
                                     # (PrecisionPolicy.cache_bits_arrays())
     mesh: Any = None                # jax Mesh with a "model" axis -> TP
+    cache_layout: str = "contiguous"  # "contiguous" | "paged" (serve/paging)
+    page_size: int = 16             # tokens per physical page (paged layout)
+    n_pages: Any = None             # physical pool size; None -> capacity
+                                    # parity with contiguous (B*max_pages)
 
     def __post_init__(self):
         if self.weights not in ("fake_quant", "packed"):
@@ -202,6 +217,27 @@ class ServeEngine:
         if self.cache not in ("full", "quantized"):
             raise ValueError(f"cache must be 'full' or 'quantized', "
                              f"got {self.cache!r}")
+        if self.cache_layout not in ("contiguous", "paged"):
+            raise ValueError(f"cache_layout must be 'contiguous' or "
+                             f"'paged', got {self.cache_layout!r}")
+        if self.cache_layout == "paged":
+            blocks = tuple(self.cfg.prefix) + tuple(self.cfg.pattern)
+            bad = sorted({b.mixer for b in blocks if b.mixer != "gqa"})
+            if bad or not self.cfg.causal:
+                raise ValueError(
+                    f"cache_layout='paged' serves causal GQA caches only "
+                    f"(got mixers {bad or ['bidir']}): MLA's latent and "
+                    f"recurrent state have no per-token page structure — "
+                    f"serve such configs with cache_layout='contiguous'")
+            if self.mesh is not None:
+                raise ValueError(
+                    "cache_layout='paged' is single-device this release; "
+                    "the page pools already carry KV-head-axis shard specs "
+                    "(parallel/sharding.serve_cache_specs) but the sharded "
+                    "decode wrapper pins the contiguous layout")
+            if self.page_size < 1:
+                raise ValueError(f"page_size must be >= 1, "
+                                 f"got {self.page_size}")
         is_packed = packing.params_are_packed(self.params)
         if is_packed != (self.weights == "packed"):
             have = "packed" if is_packed else "fake_quant"
@@ -224,6 +260,7 @@ class ServeEngine:
             self._tp_axis = None
             self.n_shards = 1
             self._prefill = jax.jit(self._prefill_impl)
+            self._prefill_suffix = jax.jit(self._prefill_suffix_impl)
             # n_steps is the scan length -> static (one compile per distinct
             # chunk size; generate uses at most two: decode_chunk + a tail)
             self._decode = jax.jit(self._decode_impl, static_argnums=(9,))
@@ -335,6 +372,40 @@ class ServeEngine:
         return self._prefill(self.params, self.policy_arrays, tokens,
                              jnp.asarray(lengths, jnp.int32))
 
+    def _prefill_suffix_impl(self, params, pa, tokens: jax.Array,
+                             length: jax.Array, prefix_len: jax.Array,
+                             layers):
+        """Suffix prefill for a prefix-hit admission (paged full-dtype
+        cache): run the unshared suffix tokens at absolute positions
+        [prefix_len, prefix_len + S_pad) while every GQA layer's
+        attention extends over the shared prefix pages (the
+        prefill-with-cache branch of models/attention.gqa_apply).
+        Returns (last-valid logits (1, V), suffix cache rows)."""
+        b, s = tokens.shape
+        positions = prefix_len + jnp.broadcast_to(
+            jnp.arange(s, dtype=jnp.int32)[None, :], (b, s))
+        batch = {"tokens": tokens, **self._positions_batch(positions)}
+        logits, suf, _ = tf.apply(params, pa, batch, self._cfg, self.ctx,
+                                  mode="prefill", caches=layers,
+                                  positions=positions)
+        last = logits[jnp.arange(b), length - 1]
+        return last, suf
+
+    def prefill_suffix(self, tokens: jax.Array, length: int, prefix_len: int,
+                       cache: PagedServeCache, slot: int):
+        """Prefill only a request's unshared suffix against slot ``slot``'s
+        already-mapped prefix pages (scheduler prefix-hit admission;
+        full-dtype paged caches — a quantized prefix hit never prefills,
+        see serve/paging.py).  ``tokens``: (1, S_pad) suffix tokens;
+        ``length``: valid suffix tokens; ``prefix_len``: shared rows
+        (page-aligned)."""
+        layers = paging.with_tables(
+            cache.layers,
+            jax.lax.dynamic_slice_in_dim(cache.block_tbl, slot, 1, axis=0))
+        return self._prefill_suffix(self.params, self.policy_arrays, tokens,
+                                    jnp.int32(length), jnp.int32(prefix_len),
+                                    layers)
+
     def new_cache(self, batch: int) -> ServeCache:
         """Preallocated (B, S_max) cache in this engine's layout: full
         compute-dtype buffers, or — ``cache='quantized'`` — int8 /
@@ -343,6 +414,12 @@ class ServeEngine:
         DESIGN.md §3).  Sharded engines place every leaf along its KV-head
         axis on the mesh."""
         bits = self.cache_bits if self.cache == "quantized" else None
+        if self.cache_layout == "paged":
+            n_pages = (self.n_pages if self.n_pages is not None
+                       else batch * self.max_pages)
+            return paging.init_paged_cache(
+                self._cfg, batch, self.max_seq, int(n_pages), self.page_size,
+                dtype=self.cache_dtype, cache_bits=bits)
         c = kv_cache.init_cache(self._cfg, batch, self.max_seq,
                                 dtype=self.cache_dtype, cache_bits=bits)
         if self.mesh is None:
@@ -352,6 +429,11 @@ class ServeEngine:
                                   self._shardings(self._cache_specs)),
             lengths=jax.device_put(c.lengths,
                                    NamedSharding(self.mesh, P(None))))
+
+    @property
+    def max_pages(self) -> int:
+        """Block-table width: logical pages per slot (ceil(S_max/page))."""
+        return -(-self.max_seq // self.page_size)
 
     def cache_batch_axes(self):
         """Per-leaf batch-axis pytree for scheduler slot admission — built
@@ -451,18 +533,25 @@ class ServeEngine:
             nonces = jnp.arange(b, dtype=jnp.int32)
         nonces = jnp.broadcast_to(jnp.asarray(nonces, jnp.int32), (b,))
         t0 = jnp.broadcast_to(jnp.asarray(step0, jnp.int32), (b,))
+        paged = isinstance(cache, PagedServeCache)
+        layers_in = (paging.with_tables(cache.layers, cache.block_tbl)
+                     if paged else cache.layers)
         if self.mesh is None:
             layers, tok, toks = self._decode(
-                self.params, self.policy_arrays, cache.layers, cache.lengths,
+                self.params, self.policy_arrays, layers_in, cache.lengths,
                 tok, active, key, nonces, t0, n_steps)
         else:
             fn = self._sharded_decode(int(n_steps),
                                       int(jnp.asarray(key).ndim))
             layers, tok, toks = fn(
-                self.params, self.policy_arrays, cache.layers, cache.lengths,
+                self.params, self.policy_arrays, layers_in, cache.lengths,
                 tok, active, key, nonces, t0)
-        cache = kv_cache.advance(cache, layers, steps=n_steps,
-                                 active=active)
+        if paged:
+            cache = paging.advance(cache, layers, steps=n_steps,
+                                   active=active)
+        else:
+            cache = kv_cache.advance(cache, layers, steps=n_steps,
+                                     active=active)
         return cache, tok, toks
 
     # ------------------------------------------------------------ generate
@@ -498,7 +587,10 @@ class ServeEngine:
         nonces = (jnp.arange(b, dtype=jnp.int32) if nonces is None
                   else jnp.asarray(nonces, jnp.int32))
         last, pre = self.prefill(tokens, lengths)
-        cache = kv_cache.splice_prefill(self.new_cache(b), pre, lengths)
+        fresh = self.new_cache(b)
+        cache = (paging.splice_prefill(fresh, pre, lengths)
+                 if isinstance(fresh, PagedServeCache)
+                 else kv_cache.splice_prefill(fresh, pre, lengths))
         first = sampling.sample(
             last, sampling.slot_keys(key, nonces, 0), self.sampler)
         tok = first[:, None]

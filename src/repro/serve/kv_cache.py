@@ -32,6 +32,13 @@ The wrapper is a pytree, so it threads through jit/scan unchanged.
 LAYERS pytree (code+scale leaf dicts), so every length/splice/slot
 operation below works on both layouts through one structural dispatch.
 
+This module is the CONTIGUOUS layout (dense (B, S_max) slots — per-slot
+worst-case residency).  Its sibling ``serve/paging.py`` implements the
+same explicit-lengths contract over fixed-size page pools + a block
+table (``ServeEngine(cache_layout="paged")``) with refcounted prefix
+sharing; decode is bit-exact between the two, so every parity test here
+doubles as a differential oracle for the paged path.
+
 Tensor-parallel serving (``ServeEngine(mesh=...)``) allocates every leaf
 sharded along its KV-HEAD axis (parallel/sharding.serve_cache_specs —
 codes AND scales; the packed-int4 cache's D-major nibbles never straddle

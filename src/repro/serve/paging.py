@@ -1,0 +1,660 @@
+"""Block/page-table KV cache with refcounted prefix sharing (DESIGN.md §3).
+
+The contiguous serving cache preallocates dense (B, S_max) slots, so every
+short request keeps S_max rows of (already-quantized) K/V resident and
+identical system prompts are prefilled from scratch.  This module turns
+per-slot WORST-CASE residency into per-request ACTUAL residency:
+
+  * K/V live in fixed-size physical PAGES (``page_size`` tokens, default
+    16): per-layer pools shaped (P, page, Hkv, X) with no batch axis
+    (models/attention.init_gqa_paged_cache / init_gqa_paged_quant_cache —
+    int8 / packed-int4 codes and the per-token V scales ride per page;
+    the per-channel K scale stays per SLOT, exactly the contiguous
+    layout, which is what keeps paged decode bit-exact with contiguous
+    decode).
+  * a (B, max_pages) int32 BLOCK TABLE maps each slot's logical pages to
+    physical pages.  It lives once on ``PagedServeCache`` and is injected
+    into every layer's cache dict per dispatch (``with_tables``), so
+    ``models/transformer.apply``'s signature is untouched.
+  * a host-side ``PageAllocator`` (free list + per-page refcounts) and
+    ``PrefixRegistry`` implement PREFIX SHARING: requests whose prompts
+    share a page-aligned token prefix map the SAME physical pages
+    (refcount per mapping), and admission prefills only the unshared
+    suffix (``plan_admission``).  A shared page is never written through:
+    the one divergent-write case — a partial tail page of an
+    identical-prompt hit — is resolved by an admission-time COPY
+    (``AdmitPlan.cow_src``: copy-on-write executed eagerly at the moment
+    the first divergent write becomes known, which is admission).
+
+Exactness contract (why the differential ladder in tests/test_serve.py can
+demand token-for-token parity):
+
+  * paged == contiguous, always: identical quantization semantics (same
+    per-request K grid, same per-token V scales), identical decode math —
+    only the row addressing goes through the table, and masked softmax
+    rows contribute exactly 0 either way.
+  * full-dtype prefix hits == solo: the shared prefix rows are bit-exact
+    (cache dtype == compute dtype), and the suffix prefill's only
+    deviation is online-softmax chunk-order noise, snapped by the next
+    activation fake-quant (the PR-4 psum argument).
+  * quantized prefix hits are restricted to IDENTICAL full prompts: the
+    per-request K grid is calibrated over the whole prompt, so a partial
+    prefix's codes are donor-grid-dependent — reading them back would
+    destroy information and break solo parity.  An identical prompt gives
+    an identical grid, so the donor's pages, K scales and last-position
+    logits ARE what the sharer's own prefill would produce; admission
+    maps the pages, copies the partial tail page, and skips the model
+    entirely.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import kv_quant as kvq
+from repro.models import transformer as tf
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PagedServeCache:
+    """Per-layer page pools + the one canonical block table + lengths.
+
+    ``layers`` mirrors ``transformer.init_caches(..., page_geom=...)``;
+    ``block_tbl`` is (B, max_pages) int32 — entries beyond a slot's
+    mapped range are stale-until-remapped and provably unread (the decode
+    position mask, same argument as the contiguous cache's tail rows)."""
+    layers: Any
+    block_tbl: jax.Array
+    lengths: jax.Array
+
+
+def is_paged_leaf(node) -> bool:
+    """True for a paged attention-cache leaf dict (full or quantized)."""
+    return isinstance(node, dict) and ("pk" in node or "pkq" in node)
+
+
+def init_paged_cache(cfg, batch: int, max_seq: int, n_pages: int,
+                     page_size: int, dtype=None,
+                     cache_bits=None) -> PagedServeCache:
+    """Fresh pools + an all-zeros block table (slot 0's convention is
+    harmless: unmapped entries are never read)."""
+    layers = tf.init_caches(cfg, batch, max_seq, cache_dtype=dtype,
+                            cache_bits=cache_bits,
+                            page_geom=(n_pages, page_size))
+    max_pages = kvq.page_count(max_seq, page_size)
+    # -1 everywhere: a never-admitted slot must hold only the unmapped
+    # sentinel — its inactive-decode writes are pinned to pos == max_seq,
+    # which sits INSIDE the table range whenever max_seq % page != 0, and
+    # a zeros row would route that write into physical page 0 (the first
+    # page the allocator hands out, i.e. another request's prompt).
+    return PagedServeCache(
+        layers=layers,
+        block_tbl=jnp.full((batch, max_pages), -1, jnp.int32),
+        lengths=jnp.zeros((batch,), jnp.int32))
+
+
+# ----------------------------------------------------- table injection
+def _walk(node, fn):
+    """Apply ``fn(leaf_dict, stacked)`` to every paged cache leaf dict."""
+    if is_paged_leaf(node):
+        pool = node.get("pk", node.get("pkq"))
+        return fn(node, pool.ndim == 5)
+    if isinstance(node, dict):
+        return {k: _walk(v, fn) for k, v in node.items()}
+    if isinstance(node, (list, tuple)):
+        return [_walk(v, fn) for v in node]
+    return node
+
+
+def with_tables(layers: Any, tbl: jax.Array) -> Any:
+    """Inject the block table into every paged leaf dict (as ``tbl``) so
+    the cache pytree that threads through jit/scan is self-contained.
+    Stacked scan leaves get a broadcast (L, B, n) copy that the layer
+    scan slices back to (B, n)."""
+    def put(d, stacked):
+        t = tbl
+        if stacked:
+            lead = d.get("pk", d.get("pkq")).shape[0]
+            t = jnp.broadcast_to(tbl, (lead,) + tbl.shape)
+        return dict(d, tbl=t)
+    return _walk(layers, put)
+
+
+def strip_tables(layers: Any) -> Any:
+    """Inverse of ``with_tables`` (the table is canonical on the wrapper;
+    per-layer copies must not survive into cache state)."""
+    return _walk(layers, lambda d, _s: {k: v for k, v in d.items()
+                                        if k != "tbl"})
+
+
+def advance(cache: PagedServeCache, new_layers: Any, steps: int = 1,
+            active=None) -> PagedServeCache:
+    """Post-decode bookkeeping (the paged kv_cache.advance)."""
+    delta = jnp.int32(steps)
+    if active is not None:
+        delta = jnp.where(active, delta, 0).astype(jnp.int32)
+    return PagedServeCache(layers=strip_tables(new_layers),
+                           block_tbl=cache.block_tbl,
+                           lengths=cache.lengths + delta)
+
+
+# ------------------------------------------------------- device writes
+def set_table_rows(cache: PagedServeCache, slot: int,
+                   pages) -> PagedServeCache:
+    """Map slot ``slot``'s logical pages [0, len(pages)) to ``pages`` and
+    UNMAP the rest of the row (-1 sentinel).  The sentinel is what makes
+    budget-overrun decode writes drop instead of landing wherever a
+    previous occupant's stale entry points (kv_quant.paged_write_row);
+    reads clamp it to page 0, whose rows sit at masked positions."""
+    max_pages = int(cache.block_tbl.shape[1])
+    row = np.full((1, max_pages), -1, np.int32)
+    row[0, :len(pages)] = np.asarray(pages, np.int32)
+    tbl = jax.lax.dynamic_update_slice(cache.block_tbl,
+                                       jnp.asarray(row), (slot, 0))
+    return dataclasses.replace(cache, block_tbl=tbl)
+
+
+def set_length(cache: PagedServeCache, slot: int,
+               length: int) -> PagedServeCache:
+    return dataclasses.replace(
+        cache, lengths=cache.lengths.at[slot].set(jnp.int32(length)))
+
+
+def _fit_rows(rows: jax.Array, axis: int, n_rows: int) -> jax.Array:
+    """Pad or trim ``rows`` to exactly ``n_rows`` along ``axis``."""
+    have = rows.shape[axis]
+    if have < n_rows:
+        pad = [(0, 0)] * rows.ndim
+        pad[axis] = (0, n_rows - have)
+        return jnp.pad(rows, pad)
+    idx = [slice(None)] * rows.ndim
+    idx[axis] = slice(0, n_rows)
+    return rows[tuple(idx)]
+
+
+def _scatter_pages(pool: jax.Array, rows: jax.Array, phys: jax.Array,
+                   stacked: bool) -> jax.Array:
+    """Write logical rows into physical pages.
+
+    pool: (P, page, *trail) or stacked (L, P, page, *trail);
+    rows: (S, *trail) or (L, S, *trail) — padded/trimmed to
+    len(phys)*page rows; phys: (npw,) int32 physical page ids.
+    """
+    trail = pool.shape[3:] if stacked else pool.shape[2:]
+    page = pool.shape[2] if stacked else pool.shape[1]
+    npw = int(phys.shape[0])
+    rows = _fit_rows(rows, 1 if stacked else 0, npw * page)
+    if stacked:
+        paged = rows.reshape((rows.shape[0], npw, page) + tuple(trail))
+        return pool.at[:, phys].set(paged.astype(pool.dtype))
+    paged = rows.reshape((npw, page) + tuple(trail))
+    return pool.at[phys].set(paged.astype(pool.dtype))
+
+
+def write_slot_pages(cache: PagedServeCache, got_layers: Any, slot: int,
+                     n_valid: int, start_tok: int,
+                     pages) -> PagedServeCache:
+    """Write one request's prefill output into its mapped pages.
+
+    got_layers: batch-1 prefill cache layers ({'k','v'} per block, rows
+    covering tokens [start_tok, start_tok + S_pad)); ``pages``: the
+    physical pages covering those rows (``start_tok`` must be
+    page-aligned — admission plans guarantee it).  A QUANTIZED pool
+    quantizes on the way in with the slot's own per-request K grid
+    calibrated from its valid rows (``start_tok`` is then 0: quantized
+    admission always prefills the whole prompt — or none of it, for an
+    identical-prompt hit).  Rows beyond ``n_valid`` inside an owned page
+    are garbage-until-overwritten, unread by the decode mask.
+    """
+    assert start_tok % _page_size_of(cache) == 0, start_tok
+    phys = jnp.asarray(np.asarray(pages, np.int32))
+
+    def put(d, got, stacked):
+        if "pkq" in d:
+            assert start_tok == 0, "quantized admission prefills from 0"
+            bits = kvq.cache_bits(d)
+            qc = kvq.quantize_prefill(got, jnp.asarray([n_valid], jnp.int32),
+                                      bits)
+            out = dict(d)
+            out["pkq"] = _scatter_pages(d["pkq"],
+                                        _squeeze_b(qc["kq"], stacked),
+                                        phys, stacked)
+            out["pvq"] = _scatter_pages(d["pvq"],
+                                        _squeeze_b(qc["vq"], stacked),
+                                        phys, stacked)
+            out["pv_scale"] = _scatter_pages(
+                d["pv_scale"], _squeeze_b(qc["v_scale"], stacked), phys,
+                stacked)
+            ks = qc["k_scale"]                     # (L?, 1, Hkv, D)
+            start = (0, slot, 0, 0) if stacked else (slot, 0, 0)
+            out["k_scale"] = jax.lax.dynamic_update_slice(
+                d["k_scale"], ks.astype(d["k_scale"].dtype), start)
+            return out
+        out = dict(d)
+        out["pk"] = _scatter_pages(d["pk"], _squeeze_b(got["k"], stacked),
+                                   phys, stacked)
+        out["pv"] = _scatter_pages(d["pv"], _squeeze_b(got["v"], stacked),
+                                   phys, stacked)
+        return out
+
+    return dataclasses.replace(cache,
+                               layers=_walk_with(cache.layers, got_layers,
+                                                 put))
+
+
+def copy_pages(cache: PagedServeCache, src: int, dst: int) -> PagedServeCache:
+    """Duplicate one physical page across every pool leaf — the
+    admission-time copy-on-write for a shared partial tail page."""
+    def put(d, stacked):
+        out = dict(d)
+        for key in ("pk", "pv", "pkq", "pvq", "pv_scale"):
+            if key in d:
+                pool = d[key]
+                out[key] = (pool.at[:, dst].set(pool[:, src]) if stacked
+                            else pool.at[dst].set(pool[src]))
+        return out
+    return dataclasses.replace(cache, layers=_walk(cache.layers, put))
+
+
+def get_slot_k_scales(cache: PagedServeCache, slot: int) -> Dict[str, Any]:
+    """Snapshot every layer's per-request K grid for slot ``slot`` — kept
+    by the prefix registry so an identical-prompt hit can restore the
+    donor's grid even after the donor's slot was recycled."""
+    out = {}
+
+    def grab(path, d, stacked):
+        if "k_scale" in d:
+            ks = d["k_scale"]
+            out[path] = ks[:, slot] if stacked else ks[slot]
+        return d
+
+    _walk_paths(cache.layers, (), grab)
+    return out
+
+
+def set_slot_k_scales(cache: PagedServeCache, slot: int,
+                      scales: Dict[str, Any]) -> PagedServeCache:
+    """Restore a registry-held K grid into slot ``slot``."""
+    def put(path, d, stacked):
+        if "k_scale" not in d or path not in scales:
+            return d
+        ks = scales[path]
+        out = dict(d)
+        out["k_scale"] = (d["k_scale"].at[:, slot].set(ks) if stacked
+                          else d["k_scale"].at[slot].set(ks))
+        return out
+    return dataclasses.replace(
+        cache, layers=_walk_paths(cache.layers, (), put))
+
+
+def _scatter_pages_batch(pool: jax.Array, rows: jax.Array, tbl: jax.Array,
+                         stacked: bool) -> jax.Array:
+    """Batched page write for ``splice_prefill``: rows (L?, B, S, *trail)
+    land in pages ``tbl[:, :ceil(S/page)]`` (disjoint per slot — the
+    sequential tables ``splice_prefill`` builds)."""
+    page = pool.shape[2] if stacked else pool.shape[1]
+    trail = pool.shape[3:] if stacked else pool.shape[2:]
+    s = rows.shape[2] if stacked else rows.shape[1]
+    b = rows.shape[1] if stacked else rows.shape[0]
+    npw = -(-s // page)
+    phys = tbl[:, :npw]
+    rows = _fit_rows(rows, 2 if stacked else 1, npw * page)
+    if stacked:
+        paged = rows.reshape((rows.shape[0], b, npw, page) + tuple(trail))
+        return pool.at[:, phys].set(paged.astype(pool.dtype))
+    paged = rows.reshape((b, npw, page) + tuple(trail))
+    return pool.at[phys].set(paged.astype(pool.dtype))
+
+
+def splice_prefill(cache: PagedServeCache, prefill_layers: Any,
+                   lengths: jax.Array) -> PagedServeCache:
+    """Write a BATCH prefill into sequentially-mapped pages — the paged
+    counterpart of kv_cache.splice_prefill, used by the solo
+    ``ServeEngine.generate`` path (the scheduler admits per slot through
+    ``write_slot_pages`` + an allocator instead).
+
+    Slot ``i`` maps pages [i*max_pages, (i+1)*max_pages) — capacity
+    parity with the contiguous layout, no sharing; the pool must be at
+    least B*max_pages (the engine's default sizing).  Quantization
+    semantics are identical to the contiguous splice: per-request K
+    grids calibrated on each request's own valid rows.
+    """
+    lengths = jnp.asarray(lengths, jnp.int32)
+    b = int(cache.lengths.shape[0])
+    max_pages = int(cache.block_tbl.shape[1])
+    assert n_pool_pages(cache) >= b * max_pages, \
+        "generate() needs a capacity-parity pool (n_pages >= B*max_pages)"
+    tbl = (jnp.arange(b, dtype=jnp.int32)[:, None] * max_pages
+           + jnp.arange(max_pages, dtype=jnp.int32)[None, :])
+
+    def put(d, got, stacked):
+        out = dict(d)
+        if "pkq" in d:
+            qc = kvq.quantize_prefill(got, lengths, kvq.cache_bits(d))
+            out["pkq"] = _scatter_pages_batch(d["pkq"], qc["kq"], tbl,
+                                              stacked)
+            out["pvq"] = _scatter_pages_batch(d["pvq"], qc["vq"], tbl,
+                                              stacked)
+            out["pv_scale"] = _scatter_pages_batch(d["pv_scale"],
+                                                   qc["v_scale"], tbl,
+                                                   stacked)
+            out["k_scale"] = qc["k_scale"].astype(d["k_scale"].dtype)
+            return out
+        out["pk"] = _scatter_pages_batch(d["pk"], got["k"], tbl, stacked)
+        out["pv"] = _scatter_pages_batch(d["pv"], got["v"], tbl, stacked)
+        return out
+
+    return PagedServeCache(layers=_walk_with(cache.layers, prefill_layers,
+                                             put),
+                           block_tbl=tbl, lengths=lengths)
+
+
+# ------------------------------------------------- structural plumbing
+def _page_size_of(cache: PagedServeCache) -> int:
+    size = []
+
+    def grab(d, stacked):
+        pool = d.get("pk", d.get("pkq"))
+        size.append(pool.shape[2] if stacked else pool.shape[1])
+        return d
+    _walk(cache.layers, grab)
+    assert size, "no paged attention leaves in cache"
+    return size[0]
+
+
+def n_pool_pages(cache: PagedServeCache) -> int:
+    """Physical pool size P (identical across layers by construction)."""
+    n = []
+
+    def grab(d, stacked):
+        pool = d.get("pk", d.get("pkq"))
+        n.append(pool.shape[1] if stacked else pool.shape[0])
+        return d
+    _walk(cache.layers, grab)
+    return n[0]
+
+
+def _squeeze_b(rows: jax.Array, stacked: bool) -> jax.Array:
+    """Drop the batch-1 axis of a single-request prefill leaf:
+    (L?, 1, S, ...) -> (L?, S, ...)."""
+    return rows[:, 0] if stacked else rows[0]
+
+
+def _walk_with(node, got, fn):
+    """Like ``_walk`` but pairs each paged leaf with the matching subtree
+    of a contiguous-layout prefill cache ({'k','v'} leaf dicts)."""
+    if is_paged_leaf(node):
+        pool = node.get("pk", node.get("pkq"))
+        return fn(node, got, pool.ndim == 5)
+    if isinstance(node, dict):
+        return {k: _walk_with(v, got[k], fn) for k, v in node.items()}
+    if isinstance(node, (list, tuple)):
+        # per-layer LIST pools consume a stacked prefill tree one
+        # leading-axis slice at a time (same rule as kv_cache.quantize_like)
+        return [_walk_with(t, jax.tree.map(lambda a, i=i: a[i], got), fn)
+                for i, t in enumerate(node)]
+    return node
+
+
+def _walk_paths(node, path, fn):
+    if is_paged_leaf(node):
+        pool = node.get("pk", node.get("pkq"))
+        return fn(path, node, pool.ndim == 5)
+    if isinstance(node, dict):
+        return {k: _walk_paths(v, path + (k,), fn) for k, v in node.items()}
+    if isinstance(node, (list, tuple)):
+        return [_walk_paths(v, path + (i,), fn) for i, v in enumerate(node)]
+    return node
+
+
+# ======================================================= host allocator
+class PageAllocator:
+    """Free list + per-page refcounts (host-side; numpy only).
+
+    Invariants (property-tested in tests/test_paging.py):
+      * a page is on the free list iff its refcount is 0;
+      * refcount == number of live mappings (slot block-table rows +
+        prefix-registry holds);
+      * pages are conserved: free + in-use == n_pages, always.
+    ``peak_in_use`` records the high-water mark — the number
+    benchmarks/serve_bench.py reports as the paged workload's actual
+    residency.
+    """
+
+    def __init__(self, n_pages: int, page_size: int):
+        assert n_pages > 0 and page_size > 0
+        self.n_pages = int(n_pages)
+        self.page_size = int(page_size)
+        self.refcount = np.zeros(n_pages, np.int32)
+        self._free: List[int] = list(range(n_pages - 1, -1, -1))
+        self.peak_in_use = 0
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return self.n_pages - len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Pop ``n`` pages (refcount 1 each) or None if short — the caller
+        (scheduler admission) defers the request rather than over-mapping."""
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            assert self.refcount[p] == 0, (p, int(self.refcount[p]))
+            self.refcount[p] = 1
+        self.peak_in_use = max(self.peak_in_use, self.in_use)
+        return pages
+
+    def ref(self, pages) -> None:
+        """Add one mapping per page (prefix sharing / registry holds)."""
+        for p in pages:
+            assert self.refcount[p] > 0, f"ref of free page {p}"
+            self.refcount[p] += 1
+
+    def release(self, pages) -> None:
+        """Drop one mapping per page; pages at refcount 0 return to the
+        free list (and only then — a still-shared page stays resident)."""
+        for p in pages:
+            assert self.refcount[p] > 0, f"release of free page {p}"
+            self.refcount[p] -= 1
+            if self.refcount[p] == 0:
+                self._free.append(int(p))
+
+    def writable(self, page: int) -> bool:
+        """A page may be written through only while it has exactly one
+        mapping — the copy-on-write guard admission plans against."""
+        return self.refcount[page] == 1
+
+    def check(self) -> None:
+        free = set(self._free)
+        assert len(free) == len(self._free), "duplicate free-list entries"
+        for p in range(self.n_pages):
+            if p in free:
+                assert self.refcount[p] == 0, f"page {p} free AND mapped"
+            else:
+                assert self.refcount[p] > 0, f"page {p} leaked (no refs)"
+        assert self.free_count + self.in_use == self.n_pages
+
+
+@dataclasses.dataclass
+class PrefixEntry:
+    key: Tuple[int, ...]
+    pages: List[int]               # registry-held refs (one per page)
+    n_tokens: int                  # tokens the pages cover (key length)
+    full_prompt: bool              # quantized entries: key == whole prompt
+    last_logits: Optional[Any] = None    # (V,) — set when key == prompt
+    k_scales: Optional[Dict] = None      # per-layer grids (quantized only)
+
+
+class PrefixRegistry:
+    """Host-side prefix index: token-prefix -> physical pages.
+
+    Each entry holds ONE allocator ref per page, so registered pages
+    survive their donor's eviction; LRU entries are dropped under pool
+    pressure (``make_room``) and their pages return to the free list only
+    when no live slot still maps them.
+    """
+
+    def __init__(self, allocator: PageAllocator, capacity: int = 64):
+        self.allocator = allocator
+        self.capacity = capacity
+        self.entries: Dict[Tuple, PrefixEntry] = {}
+        self._clock = 0
+        self._lru: Dict[Tuple, int] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def _touch(self, key) -> None:
+        self._clock += 1
+        self._lru[key] = self._clock
+
+    def register(self, entry: PrefixEntry) -> None:
+        if not entry.pages or entry.key in self.entries:
+            if entry.key in self.entries:
+                self._touch(entry.key)
+            return
+        if len(self.entries) >= self.capacity:
+            self.make_room(0)
+        self.allocator.ref(entry.pages)
+        self.entries[entry.key] = entry
+        self._touch(entry.key)
+
+    def lookup_aligned(self, prompt: Tuple[int, ...],
+                       page: int) -> Optional[PrefixEntry]:
+        """Longest registered page-aligned prefix of ``prompt``."""
+        for k in range((len(prompt) // page) * page, 0, -page):
+            e = self.entries.get(tuple(prompt[:k]))
+            if e is not None and not e.full_prompt:
+                self._touch(e.key)
+                self.hits += 1
+                return e
+        self.misses += 1
+        return None
+
+    def lookup_full(self, prompt: Tuple[int, ...]) -> Optional[PrefixEntry]:
+        """Identical-full-prompt entry (the quantized-cache sharing rule:
+        only an identical prompt yields an identical per-request K grid,
+        so only then are the donor's codes the sharer's codes)."""
+        e = self.entries.get(tuple(prompt))
+        if e is not None and e.full_prompt:
+            self._touch(e.key)
+            self.hits += 1
+            return e
+        self.misses += 1
+        return None
+
+    def drop(self, key) -> None:
+        e = self.entries.pop(key, None)
+        self._lru.pop(key, None)
+        if e is not None:
+            self.allocator.release(e.pages)
+
+    def make_room(self, n_pages_needed: int) -> None:
+        """Drop LRU entries until the allocator can serve the request (or
+        the registry is empty).  Dropping releases only the REGISTRY's
+        refs — pages still mapped by live slots stay resident."""
+        while self.entries and (self.allocator.free_count < n_pages_needed
+                                or len(self.entries) >= self.capacity):
+            key = min(self._lru, key=self._lru.get)
+            self.drop(key)
+
+
+@dataclasses.dataclass
+class AdmitPlan:
+    """What one admission will do — produced by ``plan_admission``
+    (pure-ish: touches only allocator/registry state, never the device),
+    executed by the scheduler.
+
+    ``shared``: pages mapped read-only (one allocator ref each, already
+    claimed); ``fresh``: newly allocated pages, the ONLY pages this
+    request will ever write (the property suite pins this); ``cow_src``:
+    a still-shared partial tail page whose contents must be copied into
+    ``fresh[0]`` before decode writes land there; ``suffix_start``: first
+    token index admission must still prefill (== tokens covered by
+    ``shared``); ``entry``: the registry hit (its memoized last-position
+    logits / K grids), if any.
+    """
+    shared: List[int]
+    fresh: List[int]
+    cow_src: Optional[int]
+    suffix_start: int
+    entry: Optional[PrefixEntry]
+
+    @property
+    def pages(self) -> List[int]:
+        return list(self.shared) + list(self.fresh)
+
+
+def plan_admission(alloc: PageAllocator, registry: Optional[PrefixRegistry],
+                   prompt: Tuple[int, ...], max_new_tokens: int,
+                   quantized: bool) -> Optional[AdmitPlan]:
+    """Plan one request's page mapping; None when the pool cannot cover
+    its worst case (the scheduler then defers admission).
+
+    Worst-case sizing is eager: ALL pages the request can ever touch
+    (prompt + full token budget) are claimed at admission, so the block
+    table never changes mid-decode and the jitted chunk never needs a
+    host allocation.
+    """
+    page = alloc.page_size
+    n_prompt = len(prompt)
+    need = kvq.page_count(n_prompt + max_new_tokens, page)
+    shared: List[int] = []
+    cow_src: Optional[int] = None
+    suffix_start = 0
+    entry: Optional[PrefixEntry] = None
+
+    if registry is not None:
+        if quantized:
+            e = registry.lookup_full(tuple(prompt))
+            if e is not None:
+                full_pages = n_prompt // page
+                shared = list(e.pages[:full_pages])
+                if n_prompt % page:
+                    # the partial tail page WILL receive decode writes —
+                    # copy-on-write, resolved eagerly here where the
+                    # divergent write is already known
+                    cow_src = e.pages[full_pages]
+                suffix_start = n_prompt           # nothing left to prefill
+                entry = e
+        else:
+            e = registry.lookup_aligned(tuple(prompt), page)
+            if e is not None:
+                shared = list(e.pages)
+                suffix_start = e.n_tokens
+                entry = e
+                if suffix_start == n_prompt and e.last_logits is None:
+                    # nothing to prefill but no memoized logits: hand the
+                    # last shared page back to the suffix so its tokens
+                    # re-prefill and produce the sampling logits
+                    shared = shared[:-1]
+                    suffix_start -= page
+
+    n_fresh = need - len(shared)
+    if alloc.free_count < n_fresh and registry is not None:
+        registry.make_room(n_fresh)
+        # a make_room sweep may have dropped the entry we planned against —
+        # its pages are safe only if still mapped somewhere; re-validate
+        if entry is not None and entry.key not in registry.entries \
+                and any(alloc.refcount[p] == 0 for p in shared):
+            return plan_admission(alloc, registry, prompt, max_new_tokens,
+                                  quantized)
+    fresh = alloc.alloc(n_fresh)
+    if fresh is None:
+        return None
+    if shared:
+        alloc.ref(shared)
+    # the COW guard, enforced: every page this request will write is
+    # exclusively owned
+    assert all(alloc.writable(p) for p in fresh), "fresh pages not private"
+    return AdmitPlan(shared=shared, fresh=fresh, cow_src=cow_src,
+                     suffix_start=suffix_start, entry=entry)

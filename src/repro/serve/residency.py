@@ -80,6 +80,51 @@ def resident_kv_bytes(cache_or_layers: Any) -> int:
     return resident_bytes(layers)
 
 
+# Physical page-pool leaves of the PAGED cache layout (serve/paging.py).
+# Name-keyed on purpose: residency must not import the serving layer.
+_PAGED_POOL_KEYS = {"pk": 4, "pv": 4, "pkq": 4, "pvq": 4, "pv_scale": 3}
+
+
+def paged_page_bytes(cache_or_layers: Any) -> int:
+    """Measured bytes ONE physical page keeps resident, summed across all
+    layers (pool bytes / pool size) — the unit the paged residency story
+    is denominated in: a pool sized to a workload's peak page demand
+    keeps ``peak_pages * paged_page_bytes + paged_slot_bytes`` resident.
+    """
+    layers = getattr(cache_or_layers, "layers", cache_or_layers)
+    total = 0
+    n_pages = None
+    for path, leaf in jax.tree_util.tree_flatten_with_path(layers)[0]:
+        name = next((str(p.key) for p in reversed(path)
+                     if hasattr(p, "key")), "")
+        core = _PAGED_POOL_KEYS.get(name)
+        if core is None or not hasattr(leaf, "shape"):
+            continue
+        p_axis = leaf.ndim - core              # 0 unstacked, 1 scan-stacked
+        n_pages = leaf.shape[p_axis]
+        total += int(np.prod(leaf.shape, dtype=np.int64)
+                     * np.dtype(leaf.dtype).itemsize)
+    if n_pages is None:
+        raise ValueError("not a paged cache: no page-pool leaves found")
+    return total // int(n_pages)
+
+
+def paged_slot_bytes(cache_or_layers: Any) -> int:
+    """Resident bytes of the paged cache's per-SLOT state (the per-request
+    K grids) — pool-size independent, reported next to the per-page
+    term."""
+    layers = getattr(cache_or_layers, "layers", cache_or_layers)
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(layers)[0]:
+        name = next((str(p.key) for p in reversed(path)
+                     if hasattr(p, "key")), "")
+        if name in _PAGED_POOL_KEYS or not hasattr(leaf, "shape"):
+            continue
+        total += int(np.prod(leaf.shape, dtype=np.int64)
+                     * np.dtype(leaf.dtype).itemsize)
+    return total
+
+
 def kv_read_bytes_per_token(cache: Any) -> float:
     """HBM bytes of cache state one generated token pays at decode.
 

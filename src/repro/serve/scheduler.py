@@ -36,7 +36,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serve import kv_cache, sampling
+from repro.kernels import kv_quant as kvq
+from repro.serve import kv_cache, paging, sampling
 from repro.serve.engine import ServeEngine
 
 
@@ -69,15 +70,30 @@ class ContinuousBatchingScheduler:
 
     def __init__(self, engine: ServeEngine, n_slots: int = 4,
                  prompt_bucket: int = 16,
-                 key: Optional[jax.Array] = None):
+                 key: Optional[jax.Array] = None,
+                 share_prefixes: bool = True):
         self.engine = engine
         self.n_slots = n_slots
         self.prompt_bucket = prompt_bucket
         self.key = jax.random.PRNGKey(0) if key is None else key
         self.cache = engine.new_cache(n_slots)
-        # batch axes come from the ENGINE's cache layout (a quantized cache
-        # carries code+scale leaves the default full-dtype template lacks)
-        self._batch_axes = engine.cache_batch_axes()
+        self._paged = getattr(engine, "cache_layout",
+                              "contiguous") == "paged"
+        if self._paged:
+            # host-side page bookkeeping (serve/paging.py): worst-case
+            # pages are claimed at admission, released at eviction; the
+            # registry holds recently-seen prefixes alive for sharing
+            self.allocator = paging.PageAllocator(
+                paging.n_pool_pages(self.cache), engine.page_size)
+            self.registry = (paging.PrefixRegistry(self.allocator)
+                             if share_prefixes else None)
+            self._slot_pages: List[Optional[List[int]]] = [None] * n_slots
+            self._batch_axes = None
+        else:
+            # batch axes come from the ENGINE's cache layout (a quantized
+            # cache carries code+scale leaves the default full-dtype
+            # template lacks)
+            self._batch_axes = engine.cache_batch_axes()
         self.queue: collections.deque = collections.deque()
         self.slots: List[Optional[_Slot]] = [None] * n_slots
         self._tok = np.zeros((n_slots, 1), np.int32)
@@ -96,6 +112,14 @@ class ContinuousBatchingScheduler:
             raise ValueError(
                 f"request {req.uid}: {n_prompt}+{req.max_new_tokens} "
                 f"exceeds max_seq {self.engine.max_seq}")
+        if self._paged:
+            need = kvq.page_count(n_prompt + req.max_new_tokens,
+                                  self.engine.page_size)
+            if need > self.allocator.n_pages:
+                raise ValueError(
+                    f"request {req.uid}: needs {need} pages but the pool "
+                    f"holds {self.allocator.n_pages} — raise "
+                    f"ServeEngine(n_pages=...)")
         self.queue.append(req)
 
     def run(self) -> Dict[str, Completion]:
@@ -112,24 +136,15 @@ class ContinuousBatchingScheduler:
             if self.slots[j] is not None or not self.queue:
                 continue
             req = self.queue.popleft()
-            n_prompt = len(req.prompt)
-            # pad the lone prompt to a bucket so single-request prefill
-            # compiles once per bucket, not once per prompt length; never
-            # past max_seq (the prefill cache must fit the slot buffers).
-            # Recurrent-state configs (mamba/xlstm) prefill at the EXACT
-            # length instead: their states have no position masking, so
-            # pad tokens would be integrated into the state.
-            if self.engine.has_recurrent_state:
-                pad = n_prompt
+            if self._paged:
+                last = self._admit_paged(j, req)
+                if last is None:
+                    # pool exhausted: defer admission (FIFO preserved)
+                    # until an eviction returns pages to the free list
+                    self.queue.appendleft(req)
+                    return
             else:
-                pad = min(-(-n_prompt // self.prompt_bucket)
-                          * self.prompt_bucket, self.engine.max_seq)
-            toks = np.zeros((1, pad), np.int32)
-            toks[0, :n_prompt] = np.asarray(req.prompt, np.int32)
-            last, pre = self.engine.prefill(
-                jnp.asarray(toks), jnp.asarray([n_prompt], jnp.int32))
-            self.cache = kv_cache.write_slot(self.cache, pre, j, n_prompt,
-                                             self._batch_axes)
+                last = self._admit_contiguous(j, req)
             # each admission gets its own nonce: identical prompts admitted
             # at different times must not reuse one Gumbel draw, and every
             # later sampling key of this request folds the same nonce — so
@@ -148,6 +163,119 @@ class ContinuousBatchingScheduler:
                 continue
             self.slots[j] = slot
             self._tok[j, 0] = first
+
+    def _bucket_pad(self, n: int, cap: int) -> int:
+        """Bucket a prompt/suffix length so jit caches stay warm, never
+        past ``cap`` (the written rows must fit the slot window)."""
+        return min(-(-n // self.prompt_bucket) * self.prompt_bucket, cap)
+
+    def _admit_contiguous(self, j: int, req: Request) -> jax.Array:
+        n_prompt = len(req.prompt)
+        # pad the lone prompt to a bucket so single-request prefill
+        # compiles once per bucket, not once per prompt length; never
+        # past max_seq (the prefill cache must fit the slot buffers).
+        # Recurrent-state configs (mamba/xlstm) prefill at the EXACT
+        # length instead: their states have no position masking, so
+        # pad tokens would be integrated into the state.
+        if self.engine.has_recurrent_state:
+            pad = n_prompt
+        else:
+            pad = self._bucket_pad(n_prompt, self.engine.max_seq)
+        toks = np.zeros((1, pad), np.int32)
+        toks[0, :n_prompt] = np.asarray(req.prompt, np.int32)
+        last, pre = self.engine.prefill(
+            jnp.asarray(toks), jnp.asarray([n_prompt], jnp.int32))
+        self.cache = kv_cache.write_slot(self.cache, pre, j, n_prompt,
+                                         self._batch_axes)
+        return last
+
+    def _admit_paged(self, j: int, req: Request) -> Optional[jax.Array]:
+        """Map pages (sharing any registered prefix), prefill only what
+        the mapping does not already cover, register the new prefix.
+        Returns the last-valid prompt logits, or None when the pool
+        cannot cover the request's worst case (caller defers).
+        """
+        eng = self.engine
+        page = eng.page_size
+        n_prompt = len(req.prompt)
+        quantized = eng.cache == "quantized"
+        plan = paging.plan_admission(self.allocator, self.registry,
+                                     tuple(req.prompt), req.max_new_tokens,
+                                     quantized=quantized)
+        if plan is None:
+            return None
+        self.cache = paging.set_table_rows(self.cache, j, plan.pages)
+        self._slot_pages[j] = plan.pages
+        if plan.cow_src is not None:
+            # copy-on-write of the shared partial tail page, resolved at
+            # the moment the first divergent write is known (= admission:
+            # this slot's decode will write into that page)
+            self.cache = paging.copy_pages(self.cache, plan.cow_src,
+                                           plan.fresh[0])
+        if plan.suffix_start >= n_prompt and plan.entry is not None:
+            # identical-prompt hit: the donor's pages, K grids and
+            # last-position logits ARE what this request's own prefill
+            # would produce — no model call at all
+            if plan.entry.k_scales is not None:
+                self.cache = paging.set_slot_k_scales(self.cache, j,
+                                                      plan.entry.k_scales)
+            last = plan.entry.last_logits[None]
+        elif plan.suffix_start > 0:
+            # page-aligned prefix hit (full-dtype cache): prefill only the
+            # unshared suffix, attending over the shared prefix pages
+            suffix = list(req.prompt[plan.suffix_start:])
+            pad = self._bucket_pad(len(suffix),
+                                   eng.max_seq - plan.suffix_start)
+            toks = np.zeros((1, pad), np.int32)
+            toks[0, :len(suffix)] = np.asarray(suffix, np.int32)
+            last, suf = eng.prefill_suffix(jnp.asarray(toks), len(suffix),
+                                           plan.suffix_start, self.cache, j)
+            start_page = plan.suffix_start // page
+            phys = plan.pages[start_page:
+                              start_page + kvq.page_count(pad, page)]
+            self.cache = paging.write_slot_pages(self.cache, suf, j,
+                                                 len(suffix),
+                                                 plan.suffix_start, phys)
+        else:
+            # miss: full prefill, exactly the contiguous admission math
+            pad = self._bucket_pad(n_prompt, eng.max_seq)
+            toks = np.zeros((1, pad), np.int32)
+            toks[0, :n_prompt] = np.asarray(req.prompt, np.int32)
+            last, pre = eng.prefill(jnp.asarray(toks),
+                                    jnp.asarray([n_prompt], jnp.int32))
+            n_write = min(kvq.page_count(pad, page), len(plan.pages))
+            self.cache = paging.write_slot_pages(self.cache, pre, j,
+                                                 n_prompt, 0,
+                                                 plan.pages[:n_write])
+            self._register_prefix(j, req, plan, last)
+        self.cache = paging.set_length(self.cache, j, n_prompt)
+        return last
+
+    def _register_prefix(self, j: int, req: Request, plan: paging.AdmitPlan,
+                         last: jax.Array) -> None:
+        """After a miss admission, make this prompt's prefix shareable."""
+        if self.registry is None:
+            return
+        eng = self.engine
+        page = eng.page_size
+        n_prompt = len(req.prompt)
+        if eng.cache == "quantized":
+            # only an identical full prompt reproduces the per-request K
+            # grid, so quantized entries memoize the WHOLE admission:
+            # pages (incl. the partial tail), grids, last logits
+            self.registry.register(paging.PrefixEntry(
+                key=tuple(req.prompt),
+                pages=plan.pages[:kvq.page_count(n_prompt, page)],
+                n_tokens=n_prompt, full_prompt=True, last_logits=last[0],
+                k_scales=paging.get_slot_k_scales(self.cache, j)))
+            return
+        aligned = (n_prompt // page) * page
+        if aligned >= page:
+            self.registry.register(paging.PrefixEntry(
+                key=tuple(req.prompt[:aligned]),
+                pages=plan.pages[:aligned // page], n_tokens=aligned,
+                full_prompt=False,
+                last_logits=(last[0] if aligned == n_prompt else None)))
 
     def _decode_harvest(self) -> None:
         active = np.array([s is not None for s in self.slots])
@@ -204,14 +332,27 @@ class ContinuousBatchingScheduler:
             uid=slot.req.uid, prompt_len=len(slot.req.prompt),
             tokens=list(slot.emitted), finish_reason=reason)
         self.slots[j] = None
+        if self._paged and self._slot_pages[j] is not None:
+            # drop this slot's mappings; pages return to the free list
+            # only at refcount 0 (a prefix the registry or another slot
+            # still holds stays resident)
+            self.allocator.release(self._slot_pages[j])
+            self._slot_pages[j] = None
+            # and UNMAP the table row: until re-admission this slot keeps
+            # decoding as an inactive lane, and with max_seq % page != 0
+            # its pinned position is in table range — a stale entry would
+            # route the write into a freed (possibly re-allocated) page
+            self.cache = paging.set_table_rows(self.cache, j, [])
 
 
 def serve_all(engine: ServeEngine, requests: Sequence[Request],
               n_slots: int = 4, prompt_bucket: int = 16,
-              key: Optional[jax.Array] = None) -> Dict[str, Completion]:
+              key: Optional[jax.Array] = None,
+              share_prefixes: bool = True) -> Dict[str, Completion]:
     """Convenience one-shot: submit everything, drain, return completions."""
     sched = ContinuousBatchingScheduler(engine, n_slots=n_slots,
-                                        prompt_bucket=prompt_bucket, key=key)
+                                        prompt_bucket=prompt_bucket, key=key,
+                                        share_prefixes=share_prefixes)
     for r in requests:
         sched.submit(r)
     return sched.run()

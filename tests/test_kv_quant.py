@@ -135,6 +135,142 @@ def test_kv_decode_attention_mask_positions(rng, pos):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(bb))
 
 
+# --------------------------------------------- paged decode attention
+def _paged_cache(rng, b, hkv, d, bits, lengths, page, n_pages, pool_extra=2,
+                 poison=None):
+    """Build a contiguous quant cache and scatter it into page pools via
+    disjoint per-slot tables; returns (contiguous qc, pools, tbl)."""
+    s_virt = n_pages * page
+    k = jnp.asarray(rng.normal(size=(b, s_virt, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s_virt, hkv, d)), jnp.float32)
+    qc = kvq.quantize_prefill({"k": k, "v": v}, jnp.asarray(lengths), bits)
+    p_phys = b * n_pages + pool_extra
+    dp = qc["kq"].shape[-1]
+    fill_c = 127 if poison is None else poison[0]
+    fill_s = 0.0 if poison is None else poison[1]
+    kq_pool = jnp.full((p_phys, page, hkv, dp), fill_c, qc["kq"].dtype)
+    vq_pool = jnp.full((p_phys, page, hkv, dp), fill_c, qc["vq"].dtype)
+    vs_pool = jnp.full((p_phys, page, hkv), fill_s, jnp.float32)
+    tbl = jnp.asarray([[i * n_pages + j for j in range(n_pages)]
+                      for i in range(b)], jnp.int32)
+    for i in range(b):
+        for j in range(n_pages):
+            sl = slice(j * page, (j + 1) * page)
+            kq_pool = kq_pool.at[tbl[i, j]].set(qc["kq"][i, sl])
+            vq_pool = vq_pool.at[tbl[i, j]].set(qc["vq"][i, sl])
+            vs_pool = vs_pool.at[tbl[i, j]].set(qc["v_scale"][i, sl])
+    return qc, (kq_pool, vq_pool, vs_pool), tbl
+
+
+@pytest.mark.parametrize("lengths,page,n_pages", [
+    ((37, 53), 16, 4),   # non-page-multiple lengths, mid-page positions
+    ((1, 64), 16, 4),    # first-row-only and exactly-full
+    ((23, 9), 8, 5),     # non-16 page size
+])
+@pytest.mark.parametrize("bits", [8, 4])
+def test_paged_decode_matches_contiguous_and_interpret(rng, lengths, page,
+                                                       n_pages, bits):
+    """The paged ref oracle is BIT-exact with the contiguous oracle (the
+    differential contract serve parity builds on), and the Pallas paged
+    kernel (interpret) matches the oracle through the block-table
+    indirection — including last-partial-page masking (positions sit
+    mid-page)."""
+    b, hkv, group, d = len(lengths), 2, 2, 32
+    qc, (kqp, vqp, vsp), tbl = _paged_cache(rng, b, hkv, d, bits, lengths,
+                                            page, n_pages)
+    q = jnp.asarray(rng.normal(size=(b, hkv * group, d)), jnp.float32)
+    positions = jnp.asarray(lengths, jnp.int32) - 1
+    want = ops.kv_cache_attention(q, qc["kq"], qc["k_scale"], qc["vq"],
+                                  qc["v_scale"], positions, bits, impl="ref")
+    got_ref = ops.paged_kv_cache_attention(q, kqp, qc["k_scale"], vqp, vsp,
+                                           tbl, positions, bits, impl="ref")
+    np.testing.assert_array_equal(np.asarray(got_ref), np.asarray(want))
+    got_int = ops.paged_kv_cache_attention(q, kqp, qc["k_scale"], vqp, vsp,
+                                           tbl, positions, bits,
+                                           impl="interpret")
+    np.testing.assert_allclose(np.asarray(got_int), np.asarray(got_ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+def test_paged_decode_poisoned_free_pages(rng, bits):
+    """Fill every UNMAPPED physical page with poison (saturated codes and
+    NaN V scales) — decode output must be bit-identical: free pages are
+    only reachable through masked positions or not at all."""
+    b, hkv, d, page, n_pages = 2, 2, 32, 16, 3
+    lengths = (20, 41)
+    qc, pools, tbl = _paged_cache(np.random.default_rng(3), b, hkv, d, bits,
+                                  lengths, page, n_pages, pool_extra=3)
+    qp, pools_poison, _ = _paged_cache(np.random.default_rng(3), b, hkv, d,
+                                       bits, lengths, page, n_pages,
+                                       pool_extra=3, poison=(127, np.nan))
+    # same seed -> mapped pages identical; only the free-page fill differs
+    q = jnp.asarray(np.random.default_rng(1).normal(size=(b, hkv * 2, d)),
+                    jnp.float32)
+    positions = jnp.asarray(lengths, jnp.int32) - 1
+    for impl in ("ref", "interpret"):
+        a = ops.paged_kv_cache_attention(q, pools[0], qc["k_scale"],
+                                         pools[1], pools[2], tbl, positions,
+                                         bits, impl=impl)
+        bb = ops.paged_kv_cache_attention(q, pools_poison[0], qp["k_scale"],
+                                          pools_poison[1], pools_poison[2],
+                                          tbl, positions, bits, impl=impl)
+        assert np.isfinite(np.asarray(a)).all()
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(bb),
+                                      err_msg=impl)
+
+
+def test_paged_decode_stale_table_entries_unread(rng):
+    """Table entries beyond a slot's position (stale ids / -1 sentinel)
+    must not contribute — remapping them arbitrarily leaves the output
+    unchanged."""
+    b, hkv, d, page, n_pages = 1, 2, 32, 16, 4
+    qc, (kqp, vqp, vsp), tbl = _paged_cache(rng, b, hkv, d, 8, (17,), page,
+                                            n_pages)
+    positions = jnp.asarray([16], jnp.int32)     # only pages 0-1 live
+    q = jnp.asarray(rng.normal(size=(b, hkv, d)), jnp.float32)
+    stale = tbl.at[0, 2].set(0).at[0, 3].set(-1)
+    for impl in ("ref", "interpret"):
+        a = ops.paged_kv_cache_attention(q, kqp, qc["k_scale"], vqp, vsp,
+                                         tbl, positions, 8, impl=impl)
+        bb = ops.paged_kv_cache_attention(q, kqp, qc["k_scale"], vqp, vsp,
+                                          stale, positions, 8, impl=impl)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(bb),
+                                      err_msg=impl)
+
+
+def test_paged_write_row_drop_semantics(rng):
+    """paged_write_row drops (never redirects) writes through unmapped
+    table entries: -1 sentinel pages and out-of-range positions — the
+    page-isolation guarantee a budget-overrun decode chunk relies on."""
+    pool = jnp.zeros((4, 4, 2, 3))
+    tbl = jnp.asarray([[2, -1], [3, 1]], jnp.int32)
+    new = jnp.asarray(rng.normal(size=(2, 1, 2, 3)), jnp.float32)
+    # slot 0 writes pos 5 -> logical page 1 -> UNMAPPED (-1): dropped
+    # slot 1 writes pos 6 -> page 1 -> phys 1: lands
+    out = kvq.paged_write_row(pool, new, jnp.asarray([[5], [6]], jnp.int32),
+                              tbl)
+    assert float(jnp.abs(out[0]).sum()) == 0.0   # clamp target untouched
+    assert float(jnp.abs(out[2]).sum()) == 0.0
+    np.testing.assert_array_equal(np.asarray(out[1, 2]),
+                                  np.asarray(new[1, 0]))
+    # out-of-range position (>= n*page): dropped entirely
+    out = kvq.paged_write_row(pool, new, jnp.asarray([[8], [9]], jnp.int32),
+                              tbl)
+    assert float(jnp.abs(out).sum()) == 0.0
+
+
+def test_gather_pages_roundtrip(rng):
+    pool = jnp.asarray(rng.normal(size=(6, 4, 2, 3)), jnp.float32)
+    tbl = jnp.asarray([[5, 0, 2], [1, 1, 4]], jnp.int32)
+    got = np.asarray(kvq.gather_pages(pool, tbl))
+    for i in range(2):
+        for j in range(3):
+            np.testing.assert_array_equal(got[i, j * 4:(j + 1) * 4],
+                                          np.asarray(pool[tbl[i, j]]))
+    assert kvq.page_count(17, 16) == 2 and kvq.page_count(16, 16) == 1
+
+
 def test_kv_decode_attention_close_to_full_precision(rng):
     """int8 quantized-cache attention tracks exact f32 attention within the
     quantization error budget (sanity: the lossy path is NEAR, the exact

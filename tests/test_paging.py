@@ -1,0 +1,250 @@
+"""Property suite for the paged-KV-cache host machinery (serve/paging.py).
+
+Drives the REAL allocator + prefix registry + admission planner — the
+exact objects the continuous-batching scheduler uses — through random
+admit/decode/evict/re-admit interleavings (hypothesis) and checks the
+allocator invariants after every step:
+
+  * no page is simultaneously free and mapped;
+  * every page's refcount equals its number of live mappings (slot
+    block-table rows + registry holds) — tracked independently here;
+  * freed pages return to the free list (and only at refcount 0);
+  * pages are conserved: free + in-use == n_pages, always;
+  * a prefix-shared page is never among a plan's writable pages — the
+    copy-on-write guard (the only divergent-write case, a shared partial
+    tail page, shows up as ``cow_src`` + a private copy target instead).
+
+hypothesis is a DEV-ONLY dependency (requirements-dev.txt); without it
+this module must skip cleanly rather than kill collection.
+"""
+import numpy as np
+import pytest
+
+from repro.kernels import kv_quant as kvq
+from repro.serve import paging
+
+PAGE = 4
+
+
+def _check_model(alloc, slot_maps, registry):
+    """The independent refcount model: every page's refcount must equal
+    its mapping count (slots + registry entries)."""
+    alloc.check()
+    counts = np.zeros(alloc.n_pages, np.int64)
+    for pages in slot_maps.values():
+        for p in pages:
+            counts[p] += 1
+    if registry is not None:
+        for e in registry.entries.values():
+            for p in e.pages:
+                counts[p] += 1
+    np.testing.assert_array_equal(counts, alloc.refcount,
+                                  err_msg="refcount != live mappings")
+    assert alloc.free_count + alloc.in_use == alloc.n_pages
+
+
+def _run_trace(n_pages, ops, share):
+    alloc = paging.PageAllocator(n_pages, PAGE)
+    registry = paging.PrefixRegistry(alloc, capacity=4) if share else None
+    slot_maps = {}          # slot -> pages (the scheduler's _slot_pages)
+    slot_plans = {}
+    next_slot = 0
+    rng = np.random.default_rng(0)
+    prompts = [tuple(rng.integers(0, 50, n).tolist())
+               for n in (3, PAGE, PAGE + 2, 2 * PAGE, 2 * PAGE + 1)]
+    for op, arg in ops:
+        if op == "admit":
+            prompt = prompts[arg % len(prompts)]
+            budget = 1 + (arg % 5)
+            quantized = bool(arg % 2)
+            plan = paging.plan_admission(alloc, registry, prompt, budget,
+                                         quantized=quantized)
+            if plan is not None:
+                # COW guard: every writable (fresh) page is private, and
+                # no shared page is ever writable
+                assert all(alloc.refcount[p] >= 1 for p in plan.fresh)
+                assert not (set(plan.fresh) & set(plan.shared))
+                for p in plan.shared:
+                    assert alloc.refcount[p] >= 2  # slot + donor/registry
+                if plan.cow_src is not None:
+                    assert plan.cow_src not in plan.fresh
+                    assert plan.fresh, "COW needs a private copy target"
+                # worst-case sizing: the mapping covers prompt + budget
+                assert len(plan.pages) == kvq.page_count(
+                    len(prompt) + budget, PAGE)
+                slot_maps[next_slot] = plan.pages
+                slot_plans[next_slot] = (plan, prompt, quantized)
+                # a miss admission registers its prefix (scheduler rule)
+                if registry is not None and plan.entry is None:
+                    if quantized:
+                        registry.register(paging.PrefixEntry(
+                            key=prompt,
+                            pages=plan.pages[:kvq.page_count(len(prompt),
+                                                             PAGE)],
+                            n_tokens=len(prompt), full_prompt=True,
+                            last_logits=np.zeros(4)))
+                    else:
+                        aligned = (len(prompt) // PAGE) * PAGE
+                        if aligned >= PAGE:
+                            registry.register(paging.PrefixEntry(
+                                key=prompt[:aligned],
+                                pages=plan.pages[:aligned // PAGE],
+                                n_tokens=aligned, full_prompt=False))
+                next_slot += 1
+        elif op == "evict" and slot_maps:
+            keys = sorted(slot_maps)
+            victim = keys[arg % len(keys)]
+            alloc.release(slot_maps.pop(victim))
+            slot_plans.pop(victim)
+        elif op == "drop_entry" and registry is not None \
+                and registry.entries:
+            keys = sorted(registry.entries)
+            registry.drop(keys[arg % len(keys)])
+        _check_model(alloc, slot_maps, registry)
+    # drain: every eviction returns pages; dropping the registry empties
+    # the pool completely (conservation end-to-end)
+    for pages in slot_maps.values():
+        alloc.release(pages)
+    if registry is not None:
+        for key in list(registry.entries):
+            registry.drop(key)
+    alloc.check()
+    assert alloc.free_count == alloc.n_pages, "pages leaked"
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_allocator_invariants_seeded_interleavings(seed):
+    """Dep-free arm of the property suite: the same trace runner on fixed
+    pseudo-random interleavings, so the invariants run even where
+    hypothesis is unavailable (offline hosts importorskip it below)."""
+    rng = np.random.default_rng(seed)
+    ops = [(["admit", "admit", "evict", "drop_entry"][rng.integers(4)],
+            int(rng.integers(10**6))) for _ in range(40)]
+    _run_trace(int(rng.integers(4, 13)), ops, share=bool(seed % 2))
+
+
+def test_alloc_release_roundtrip():
+    alloc = paging.PageAllocator(8, PAGE)
+    assert alloc.alloc(9) is None   # over-ask refuses, state untouched
+    alloc.check()
+    assert alloc.free_count == 8
+    got = alloc.alloc(5)
+    assert len(set(got)) == 5
+    assert alloc.peak_in_use == 5
+    alloc.release(got)
+    alloc.check()
+    assert alloc.free_count == 8    # freed pages return to the free list
+
+
+def test_shared_page_release_order_independent():
+    """A page mapped by two slots + the registry survives any release
+    order and frees exactly once."""
+    alloc = paging.PageAllocator(4, PAGE)
+    registry = paging.PrefixRegistry(alloc)
+    pages = alloc.alloc(2)
+    registry.register(paging.PrefixEntry(key=(1, 2, 3, 4), pages=pages[:1],
+                                         n_tokens=4, full_prompt=False))
+    alloc.ref(pages[:1])            # second slot maps the shared page
+    assert alloc.refcount[pages[0]] == 3
+    alloc.release(pages)            # slot 1 evicts
+    assert alloc.refcount[pages[0]] == 2 and alloc.free_count == 3
+    registry.drop((1, 2, 3, 4))
+    assert alloc.refcount[pages[0]] == 1
+    alloc.release(pages[:1])        # slot 2 evicts
+    alloc.check()
+    assert alloc.free_count == 4
+
+
+def test_registry_make_room_frees_lru_only_unmapped():
+    """Registry eviction under pressure releases registry holds; pages a
+    live slot still maps stay resident (never handed to alloc)."""
+    alloc = paging.PageAllocator(4, PAGE)
+    registry = paging.PrefixRegistry(alloc, capacity=8)
+    a = alloc.alloc(2)              # "slot" keeps these mapped
+    b = alloc.alloc(2)
+    registry.register(paging.PrefixEntry(key=(1,) * PAGE, pages=a[:1],
+                                         n_tokens=PAGE, full_prompt=False))
+    registry.register(paging.PrefixEntry(key=(2,) * PAGE, pages=b[:1],
+                                         n_tokens=PAGE, full_prompt=False))
+    alloc.release(b)                # b's slot evicts; b[0] held by registry
+    registry.make_room(2)           # needs 2 free -> drops LRU entries
+    assert alloc.free_count >= 2
+    # a's pages are still slot-mapped: refcount dropped but NOT freed
+    assert alloc.refcount[a[0]] >= 1
+    got = alloc.alloc(alloc.free_count)
+    assert a[0] not in got and a[1] not in got
+
+
+def test_plan_defers_when_pool_exhausted():
+    alloc = paging.PageAllocator(2, PAGE)
+    plan = paging.plan_admission(alloc, None, (1, 2, 3), PAGE,
+                                 quantized=False)
+    assert plan is not None
+    assert paging.plan_admission(alloc, None, (9, 9, 9), 1,
+                                 quantized=False) is None
+    alloc.check()                   # failed plan leaks nothing
+    alloc.release(plan.pages)
+    assert alloc.free_count == 2
+
+
+def test_quantized_hit_requires_identical_prompt():
+    """The quantized sharing rule: a page-aligned PARTIAL prefix match is
+    NOT a hit (its codes are donor-grid-dependent); only the identical
+    full prompt is."""
+    alloc = paging.PageAllocator(8, PAGE)
+    registry = paging.PrefixRegistry(alloc)
+    prompt = (5, 6, 7, 8, 9)        # 5 tokens: one full page + partial
+    plan = paging.plan_admission(alloc, registry, prompt, 3, quantized=True)
+    registry.register(paging.PrefixEntry(
+        key=prompt, pages=plan.pages[:2], n_tokens=5, full_prompt=True,
+        last_logits=np.zeros(3), k_scales={}))
+    longer = prompt + (1, 2)
+    p2 = paging.plan_admission(alloc, registry, longer, 3, quantized=True)
+    assert p2.entry is None and not p2.shared      # no partial-prefix hit
+    same = paging.plan_admission(alloc, registry, prompt, 6, quantized=True)
+    assert same.entry is not None
+    assert same.shared == plan.pages[:1]           # the full page
+    assert same.cow_src == plan.pages[1]           # partial tail -> COW
+    assert same.suffix_start == len(prompt)        # no prefill at all
+
+
+def test_aligned_hit_suffix_and_logit_fallback():
+    """Full-dtype sharing: longest page-aligned prefix wins; an exact-
+    prefix hit without memoized logits hands its last page back to the
+    suffix so admission can still produce sampling logits."""
+    alloc = paging.PageAllocator(16, PAGE)
+    registry = paging.PrefixRegistry(alloc)
+    prefix = (1, 2, 3, 4, 5, 6, 7, 8)              # 2 aligned pages
+    plan = paging.plan_admission(alloc, registry, prefix + (9,), 3,
+                                 quantized=False)
+    registry.register(paging.PrefixEntry(
+        key=prefix, pages=plan.pages[:2], n_tokens=8, full_prompt=False))
+    hit = paging.plan_admission(alloc, registry, prefix + (7, 7, 7), 2,
+                                quantized=False)
+    assert hit.shared == plan.pages[:2] and hit.suffix_start == 8
+    # prompt == registered prefix, but no logits memoized -> the plan
+    # un-shares the last page rather than admit without logits
+    exact = paging.plan_admission(alloc, registry, prefix, 2,
+                                  quantized=False)
+    assert exact.suffix_start == 4 and exact.shared == plan.pages[:1]
+
+
+# --------------------------------------------------- hypothesis arm
+def test_allocator_invariants_random_interleavings():
+    """The generative arm: hypothesis explores arbitrary interleavings
+    (the seeded test above is its dep-free subset).  importorskip lives
+    INSIDE the test so the rest of this module still runs offline."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.integers(4, 12),
+           st.lists(st.tuples(st.sampled_from(["admit", "evict",
+                                               "drop_entry"]),
+                              st.integers(0, 10**6)),
+                    min_size=1, max_size=40),
+           st.booleans())
+    def prop(n_pages, ops, share):
+        _run_trace(n_pages, ops, share)
+
+    prop()

@@ -729,6 +729,242 @@ def test_sharded_engine_validation(setup):
     assert packing_mod.tp_shardable(xcfg, 2) is not None     # no GQA mixer
 
 
+# ------------------------------------------------------- paged KV cache
+PAGED_CACHE_MODES = [("full", 8), ("quantized", 8), ("quantized", 4)]
+
+
+@pytest.fixture(scope="module")
+def paged_prompts(setup):
+    cfg = setup[0]
+    rng = np.random.default_rng(31)
+    sys_prompt = rng.integers(0, cfg.vocab, 16).tolist()  # one full page
+    return {
+        "sys": sys_prompt,
+        "a": sys_prompt + rng.integers(0, cfg.vocab, 5).tolist(),
+        "b": sys_prompt + rng.integers(0, cfg.vocab, 9).tolist(),
+        "c": rng.integers(0, cfg.vocab, 7).tolist(),
+    }
+
+
+def _paged_engine(setup, cache, bits, **kw):
+    cfg, ctx, params, policy, pa, qparams = setup
+    return ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx,
+                       max_seq=64, cache=cache, cache_bits=bits,
+                       cache_layout="paged", **kw)
+
+
+@pytest.mark.parametrize("cache,bits", PAGED_CACHE_MODES)
+def test_paged_generate_matches_contiguous(setup, cache, bits):
+    """Solo paged decode == solo contiguous decode, token-for-token, for
+    every cache mode: identical quantization semantics (same per-request
+    K grid, same per-token V scales) + identical decode math — only the
+    row addressing goes through the block table."""
+    cfg, ctx, params, policy, pa, qparams = setup
+    e_p = _paged_engine(setup, cache, bits)
+    e_c = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx,
+                      max_seq=64, cache=cache, cache_bits=bits)
+    rng = np.random.default_rng(32)
+    toks = np.zeros((2, 20), np.int32)
+    toks[0, :13] = rng.integers(0, cfg.vocab, 13)
+    toks[1, :20] = rng.integers(0, cfg.vocab, 20)
+    lengths = [13, 20]
+    got = np.asarray(e_p.generate(jnp.asarray(toks), n_new=16,
+                                  lengths=lengths))
+    want = np.asarray(e_c.generate(jnp.asarray(toks), n_new=16,
+                                   lengths=lengths))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("cache,bits", PAGED_CACHE_MODES)
+def test_paged_scheduler_differential_ladder(setup, paged_prompts, cache,
+                                             bits):
+    """The paged==contiguous==solo ladder, GREEDY, through the forced
+    sequence: prefix-hit admission (full dtype: page-aligned prefix +
+    suffix prefill; quantized: identical prompt + partial-tail COW),
+    eviction, and re-admission onto recycled pages (the final request
+    maps pages whose contents are a previous occupant's stale rows —
+    provably unread)."""
+    cfg, ctx, params, policy, pa, qparams = setup
+    p = paged_prompts
+    order = [p["a"], p["b"], p["c"], p["a"]]
+    reqs = [Request(uid=f"r{i}", prompt=pr, max_new_tokens=6)
+            for i, pr in enumerate(order)]
+    e_p = _paged_engine(setup, cache, bits)
+    e_c = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx,
+                      max_seq=64, cache=cache, cache_bits=bits)
+    res_p = serve_all(e_p, reqs, n_slots=2)
+    res_c = serve_all(e_c, [Request(uid=r.uid, prompt=r.prompt,
+                                    max_new_tokens=r.max_new_tokens)
+                            for r in reqs], n_slots=2)
+    for i, pr in enumerate(order):
+        solo = np.asarray(e_p.generate(jnp.asarray([pr], jnp.int32),
+                                       n_new=6))
+        assert res_p[f"r{i}"].tokens == solo[0].tolist(), f"r{i} vs solo"
+        assert res_p[f"r{i}"].tokens == res_c[f"r{i}"].tokens, \
+            f"r{i} paged vs contiguous"
+
+
+@pytest.mark.parametrize("kind,kw", [
+    ("temperature", {"temperature": 1.2}),
+    ("top_k", {"top_k": 5, "temperature": 0.9}),
+])
+def test_paged_scheduler_sampled_parity_prefix_hit_readmit(setup,
+                                                           paged_prompts,
+                                                           kind, kw):
+    """Sampled (temperature AND top-k) paged scheduler == solo under the
+    scheduler-invariant keys, through prefix hits, tail chunks
+    (decode_chunk=4, short budgets), eviction and re-admission onto a
+    deliberately TIGHT pool (n_pages=6 forces page recycling and
+    registry pressure)."""
+    cfg, ctx, params, policy, pa, qparams = setup
+    p = paged_prompts
+    samp = SamplerConfig(kind=kind, **kw)
+    engine = _paged_engine(setup, "quantized", 8, decode_chunk=4,
+                           n_pages=6, sampler=samp)
+    key = jax.random.PRNGKey(42)
+    order = [(p["a"], 10), (p["c"], 3), (p["a"], 8)]
+    reqs = [Request(uid=f"t{i}", prompt=pr, max_new_tokens=b)
+            for i, (pr, b) in enumerate(order)]
+    res = serve_all(engine, reqs, n_slots=2, key=key)
+    # solo reproduction needs a capacity-parity pool -> fresh engine
+    solo_eng = _paged_engine(setup, "quantized", 8, decode_chunk=4,
+                             sampler=samp)
+    for i, (pr, b) in enumerate(order):
+        solo = np.asarray(solo_eng.generate(jnp.asarray([pr], jnp.int32),
+                                            n_new=b, key=key, nonces=[i]))
+        assert res[f"t{i}"].tokens == solo[0].tolist(), f"t{i}"
+
+
+def test_paged_prefix_sharing_actually_shares(setup, paged_prompts):
+    """The memory story, not just parity: admissions after the first map
+    strictly fewer fresh pages (the registry reports hits), and disabling
+    sharing admits every page fresh."""
+    p = paged_prompts
+    reqs = [Request(uid=f"r{i}", prompt=pr, max_new_tokens=4)
+            for i, pr in enumerate([p["a"], p["b"], p["a"]])]
+    engine = _paged_engine(setup, "full", 8)
+    from repro.serve.scheduler import ContinuousBatchingScheduler
+    sched = ContinuousBatchingScheduler(engine, n_slots=1)
+    for r in reqs:
+        sched.submit(r)
+    sched.run()
+    assert sched.registry.hits >= 2      # r1 shares r0's page; r2 shares
+    assert sched.registry.misses >= 1
+    # shared page: refcount carried it across evictions (still registered)
+    assert sched.allocator.in_use >= 1
+    sched2 = ContinuousBatchingScheduler(_paged_engine(setup, "full", 8),
+                                         n_slots=1, share_prefixes=False)
+    for r in reqs:
+        sched2.submit(Request(uid=r.uid, prompt=r.prompt,
+                              max_new_tokens=r.max_new_tokens))
+    out2 = sched2.run()
+    assert sched2.allocator.in_use == 0  # no registry: everything freed
+    for r in reqs:                       # and sharing never changed tokens
+        assert sched.completed[r.uid].tokens == out2[r.uid].tokens
+
+
+def test_paged_residency_short_request_mix(setup):
+    """The acceptance bar at engine level: a pool sized to a short-request
+    mix keeps >=2x fewer resident KV bytes than the contiguous slots the
+    same mix would preallocate (benchmarks/serve_bench.py gates the same
+    number in CI)."""
+    from repro.serve import paging, residency
+    cfg, ctx, params, policy, pa, qparams = setup
+    n_slots, budget = 4, 8
+    prompt_lens = [5, 9, 7, 12]          # the short-request mix
+    need = sum(-(-(pl + budget) // 16) for pl in prompt_lens)
+    e_c = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx,
+                      max_seq=64, cache="quantized", cache_bits=8)
+    e_p = _paged_engine(setup, "quantized", 8, n_pages=need)
+    contiguous = residency.resident_kv_bytes(e_c.new_cache(n_slots))
+    paged = residency.resident_kv_bytes(e_p.new_cache(n_slots))
+    assert contiguous / paged >= 2.0, (contiguous, paged)
+    # per-page accounting is consistent with the pool total
+    cache = e_p.new_cache(n_slots)
+    assert paging.n_pool_pages(cache) == need
+
+
+def test_paged_idle_slots_never_corrupt_neighbors(setup, paged_prompts):
+    """Regression: with max_seq NOT a page multiple, an idle slot's pinned
+    decode position (max_seq) sits INSIDE the table range, so its
+    per-step garbage writes reach the block-table lookup.  A
+    never-admitted slot (zeros row) used to write into physical page 0 —
+    the first admitted request's prompt page — and an evicted slot's
+    stale row into freed (re-allocated) pages.  Both rows must now hold
+    the -1 unmapped sentinel, whose writes DROP: served tokens match
+    solo exactly even with idle lanes decoding alongside."""
+    cfg, ctx, params, policy, pa, qparams = setup
+    p = paged_prompts
+    engine = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx,
+                         max_seq=60,            # 60 % 16 != 0 -> 4 pages=64
+                         cache="quantized", cache_bits=8,
+                         cache_layout="paged")
+    # 4 slots, 1 request: three never-admitted lanes decode garbage the
+    # whole run; then a second wave re-admits over the evicted lane
+    res = serve_all(engine, [Request(uid="lone", prompt=p["a"],
+                                     max_new_tokens=8)], n_slots=4)
+    solo = np.asarray(engine.generate(jnp.asarray([p["a"]], jnp.int32),
+                                      n_new=8))
+    assert res["lone"].tokens == solo[0].tolist()
+    res2 = serve_all(engine, [Request(uid="x", prompt=p["a"],
+                                      max_new_tokens=6),
+                              Request(uid="y", prompt=p["c"],
+                                      max_new_tokens=10)], n_slots=4)
+    for uid, pr, n in (("x", p["a"], 6), ("y", p["c"], 10)):
+        solo = np.asarray(engine.generate(jnp.asarray([pr], jnp.int32),
+                                          n_new=n))
+        assert res2[uid].tokens == solo[0].tolist(), uid
+
+
+def test_paged_engine_validation(setup):
+    """Paged serving fails loudly where its contract does not hold:
+    non-GQA cached mixers, tensor-parallel meshes, bad layout strings,
+    and requests that cannot fit the pool."""
+    cfg, ctx, params, policy, pa, qparams = setup
+    with pytest.raises(ValueError, match="cache_layout"):
+        ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx,
+                    max_seq=64, cache_layout="pages")
+    xcfg = configs.get_config("xlstm-1.3b").smoke()
+    xparams = tf.init_params(xcfg, jax.random.PRNGKey(1))
+    xpolicy = tf.build_policy(xcfg)
+    xpa = jax.tree.map(jnp.asarray, xpolicy.as_arrays())
+    xq = quantize_for_serving(xparams, xpolicy.as_arrays(), xcfg)
+    with pytest.raises(ValueError, match="GQA"):
+        ServeEngine(cfg=xcfg, params=xq, policy_arrays=xpa, ctx=ctx,
+                    max_seq=64, cache_layout="paged")
+    pparams = pack_params(params, policy.as_arrays(), cfg)
+    mesh = jax.make_mesh((1,), ("model",))
+    with pytest.raises(ValueError, match="paged"):
+        ServeEngine(cfg=cfg, params=pparams, policy_arrays=pa, ctx=ctx,
+                    max_seq=64, weights="packed", mesh=mesh,
+                    cache_layout="paged")
+    small = _paged_engine(setup, "full", 8, n_pages=1)
+    from repro.serve.scheduler import ContinuousBatchingScheduler
+    sched = ContinuousBatchingScheduler(small, n_slots=1)
+    with pytest.raises(ValueError, match="pages"):
+        sched.submit(Request(uid="big", prompt=[1] * 30, max_new_tokens=8))
+
+
+def test_paged_cache_shards_on_kv_head_axis(setup):
+    """Page pools carry the SAME KV-head-axis shard specs as contiguous
+    codes+scales (parallel/sharding.serve_cache_specs) — the packed-int4
+    cache's D-major nibbles never straddle a shard."""
+    from repro.parallel import sharding
+    e_p = _paged_engine(setup, "quantized", 4, n_pages=8)
+    specs = sharding.serve_cache_specs(e_p.new_cache(2).layers)
+    flat = {tuple(str(k.key) for k in path if hasattr(k, "key")): s
+            for path, s in
+            jax.tree_util.tree_flatten_with_path(specs)[0]}
+    for path, spec in flat.items():
+        leaf = path[-1]
+        if leaf in ("pkq", "pvq"):       # (L, P, page, Hkv, Dp)
+            assert tuple(spec) == (None, None, None, "model", None), path
+        elif leaf == "pv_scale":         # (L, P, page, Hkv)
+            assert tuple(spec) == (None, None, None, "model"), path
+        elif leaf == "k_scale":          # (L, B, Hkv, D)
+            assert tuple(spec) == (None, None, "model", None), path
+
+
 def test_scheduler_admissions_draw_distinct_first_tokens(setup):
     """Identical prompts admitted at different times must not reuse one
     Gumbel draw for their first sampled token (per-admission key fold)."""
