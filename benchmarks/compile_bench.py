@@ -1,0 +1,126 @@
+"""Compile-cost benchmark: bucketed scan-over-layers vs python unroll.
+
+The bucketed layout's reason to exist is O(#buckets) PROGRAM SIZE: the
+decode step's jaxpr must stop growing with depth.  This bench measures,
+for n_repeats in {8, 32, 80} under a 4-level mixed policy (weight 4/2 bit
+x cache 8/4 bit by quarters -> exactly 4 buckets at every depth):
+
+  * trace+lower wall time of the decode step (``jax.jit(...).lower`` —
+    no backend compile, so the number is dominated by tracing and
+    StableHLO emission, the part that scales with program size);
+  * total jaxpr equation count (recursing into scan/cond/checkpoint
+    subjaxprs), the host-independent proxy check_bench gates on.
+
+Writes BENCH_compile.json via benchmarks/run.py.  The hard invariants
+(scripts/check_bench.py --compile): bucketed eqns grow ~O(1) in depth
+(80-deep <= 1.5x the 8-deep count) while unrolled grows O(L) (>= 4x),
+and at depth 80 the bucketed program is >= 3x smaller than unrolled.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.models import transformer as tf
+from repro.parallel.context import local_context
+from repro.serve import kv_cache, pack_params
+
+DEPTHS = (8, 32, 80)
+
+
+def count_eqns(jaxpr) -> int:
+    """Total equations including scan/cond/remat/pjit subjaxprs."""
+    n = 0
+    for eqn in jaxpr.eqns:
+        n += 1
+        for v in eqn.params.values():
+            n += _sub_eqns(v)
+    return n
+
+
+def _sub_eqns(v) -> int:
+    if hasattr(v, "jaxpr"):                   # ClosedJaxpr
+        return count_eqns(v.jaxpr)
+    if hasattr(v, "eqns"):                    # Jaxpr
+        return count_eqns(v)
+    if isinstance(v, (tuple, list)):
+        return sum(_sub_eqns(x) for x in v)
+    return 0
+
+
+def _four_level_policy(cfg):
+    """Weight bits 4/2 by halves x cache bits 8/4 by quarters-within-half:
+    4 distinct (w, c) signatures -> 4 buckets at every depth."""
+    n = cfg.n_repeats
+    q = max(n // 4, 1)
+    policy = tf.build_policy(cfg)
+    arr = policy.as_arrays()
+    wbits = np.full(n, 2.0, np.float32)
+    wbits[:2 * q] = 4.0
+    for g, slots in arr.items():
+        if g.startswith("pat"):
+            for s in slots:
+                slots[s] = wbits.copy()
+    cbits = np.full(n, 4.0, np.float32)
+    cbits[:q] = 8.0
+    cbits[2 * q:3 * q] = 8.0
+    cache_bits = {f"pat{j}": cbits.copy()
+                  for j, _ in enumerate(cfg.pattern)}
+    return arr, cache_bits
+
+
+def _measure(cfg, params, arr, cache_bits, layout):
+    ctx = local_context()
+    pa = jax.tree.map(jnp.asarray, arr)
+    if layout == "bucketed":
+        pparams = pack_params(params, arr, cfg, cache_bits=cache_bits)
+        cache = kv_cache.init_cache(
+            cfg, 1, 32, cache_bits=cache_bits,
+            plan=pparams["pat"].sizes)
+    else:
+        pparams = pack_params(params, arr, cfg, layout="unrolled")
+        cache = kv_cache.init_cache(cfg, 1, 32, cache_bits=cache_bits,
+                                    plan="unrolled")
+    tok = jnp.zeros((1, 1), jnp.int32)
+    pos = jnp.zeros((1, 1), jnp.int32)
+
+    def decode_step(p, layers, t, ps):
+        logits, new_layers, _ = tf.apply(p, pa, {"tokens": t}, cfg, ctx,
+                                         mode="decode", caches=layers,
+                                         positions=ps)
+        return logits, new_layers
+
+    t0 = time.perf_counter()
+    jax.jit(decode_step).lower(pparams, cache.layers, tok, pos)
+    lower_s = time.perf_counter() - t0
+    eqns = count_eqns(
+        jax.make_jaxpr(decode_step)(pparams, cache.layers, tok, pos).jaxpr)
+    n_buckets = (len(pparams["pat"].sizes) if layout == "bucketed"
+                 else len(pparams["pat"]))
+    return {"lower_s": round(lower_s, 3), "jaxpr_eqns": int(eqns),
+            "n_buckets": n_buckets}
+
+
+def run(quick: bool = False, depths=DEPTHS,
+        layouts=("bucketed", "unrolled")) -> dict:
+    base = configs.get_config("olmo-1b").smoke()
+    out = {"_meta": {"depths": list(depths),
+                     "policy": "weight 4/2 x cache 8/4 (4 buckets)"}}
+    for n in depths:
+        cfg = dataclasses.replace(base, n_repeats=n)
+        params = tf.init_params(cfg, jax.random.PRNGKey(0))
+        arr, cache_bits = _four_level_policy(cfg)
+        for layout in layouts:
+            out[f"{layout}@{n}"] = _measure(cfg, params, arr, cache_bits,
+                                            layout)
+    return out
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=2, sort_keys=True))

@@ -9,6 +9,9 @@ Prints ``name,us_per_call,derived`` CSV.  ``--quick`` shrinks sizes for CI.
   quant         Table 1 (TPU terms): packed-weight matmul bytes/time
   serve         deployment: decode tokens/sec + weight bytes/token per
                 policy (also written to BENCH_serve.json for CI)
+  compile       bucketed-vs-unrolled decode-step compile cost (trace+lower
+                wall time + jaxpr eqns) at depth 8/32/80 under a 4-level
+                mixed policy (also written to BENCH_compile.json for CI)
 """
 from __future__ import annotations
 
@@ -57,6 +60,17 @@ def main() -> None:
         with open("BENCH_knapsack.json", "w") as f:
             json.dump({k: v * 1e6 for k, v in kout.items()}, f, indent=2,
                       sort_keys=True)
+
+    if only is None or "compile" in only:
+        from benchmarks import compile_bench
+        cout = compile_bench.run(quick=q)
+        for name, r in sorted(cout.items()):
+            if name.startswith("_"):
+                continue
+            _row(f"compile/{name}", r["lower_s"] * 1e6,
+                 f"jaxpr_eqns={r['jaxpr_eqns']};n_buckets={r['n_buckets']}")
+        with open("BENCH_compile.json", "w") as f:
+            json.dump(cout, f, indent=2, sort_keys=True)
 
     if only is None or "quant" in only:
         from benchmarks import quant_bench

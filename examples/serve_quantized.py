@@ -43,8 +43,19 @@ gains = eagl.eagl_gains(
 mixed = policy.apply_selection(
     knapsack.select_for_budget(policy, gains, 0.7).take)
 
-# pack offline into the packed-integer serving layout (uint8 codes)
-pparams = pack_params(state.params, mixed.as_arrays(), cfg)
+# pack offline into the packed-integer serving layout (uint8 codes).
+# The default layout is BUCKETED: maximal contiguous runs of layers
+# sharing a (weight bits, cache bits) signature are stacked and served
+# as one lax.scan each, so compile cost is O(#buckets) not O(depth) —
+# cache_bits= folds the engine's KV bit-widths into the same plan so
+# packed weights and quantized cache share bucket boundaries.
+pparams = pack_params(state.params, mixed.as_arrays(), cfg,
+                      cache_bits=mixed.cache_bits_arrays())
+plan = mixed.bucket_plan()
+print(f"bucket plan ({len(plan.sizes)} scanned bucket(s) over "
+      f"{plan.n_layers} pattern layers):")
+for line in plan.describe().splitlines():
+    print(f"  {line}")
 n_params = sum(u.n_params for u in policy.units)
 packed_mb = resident_weight_bytes(pparams) / 1e6
 bf16_mb = bf16_resident_weight_bytes(state.params) / 1e6

@@ -306,11 +306,116 @@ def check(bench: dict, baseline: dict) -> list:
     return failures
 
 
+# compile-cost gate (BENCH_compile.json vs benchmarks/baselines/compile.json)
+COMPILE_GATE = {
+    # jaxpr eqn counts are deterministic functions of the program — a
+    # loose-ish rtol absorbs jax-version churn while still catching a
+    # layout regression (bucketed drivers silently unrolling again would
+    # blow the count by an order of magnitude, not 10%)
+    "eqns_rtol": 0.10,
+    # HARD sublinearity invariants, independent of the baseline numbers:
+    # the bucketed program must stop growing with depth (O(#buckets)),
+    # the unrolled program must keep growing (the contrast proves the
+    # bench measures what it claims), and at the deepest point the
+    # bucketed program must be materially smaller.
+    "max_bucketed_depth_growth": 1.5,    # eqns(deepest)/eqns(shallowest)
+    "min_unrolled_depth_growth": 4.0,
+    "min_deep_advantage": 3.0,           # unrolled/bucketed at max depth
+}
+
+
+def check_compile(bench: dict, baseline: dict) -> list:
+    gate = dict(COMPILE_GATE, **baseline.get("_gate", {}))
+    failures = []
+
+    def fail(msg):
+        failures.append(msg)
+        print(f"FAIL  {msg}")
+
+    def ok(msg):
+        print(f"ok    {msg}")
+
+    depths = sorted(bench.get("_meta", {}).get("depths", []))
+    if len(depths) < 2:
+        fail("compile bench reports < 2 depths — nothing to gate")
+        return failures
+
+    def eqns(layout, depth):
+        row = bench.get(f"{layout}@{depth}")
+        if row is None or "jaxpr_eqns" not in row:
+            fail(f"compile.{layout}@{depth}: row missing from bench output")
+            return None
+        return row["jaxpr_eqns"]
+
+    # baseline drift on the deterministic eqn counts
+    for name, base_row in sorted(baseline.items()):
+        if name.startswith("_"):
+            continue
+        cur = bench.get(name)
+        if cur is None:
+            fail(f"compile.{name}: missing from bench output")
+            continue
+        a, b = cur.get("jaxpr_eqns"), base_row.get("jaxpr_eqns")
+        if a is None or not _close(a, b, gate["eqns_rtol"]):
+            fail(f"compile.{name}.jaxpr_eqns = {a} vs baseline {b} "
+                 f"(rtol {gate['eqns_rtol']})")
+        else:
+            ok(f"compile.{name}.jaxpr_eqns = {a}")
+
+    lo, hi = depths[0], depths[-1]
+    b_lo, b_hi = eqns("bucketed", lo), eqns("bucketed", hi)
+    u_lo, u_hi = eqns("unrolled", lo), eqns("unrolled", hi)
+    if None in (b_lo, b_hi, u_lo, u_hi):
+        return failures
+    growth = b_hi / b_lo
+    if growth > gate["max_bucketed_depth_growth"]:
+        fail(f"compile: bucketed eqns grow {growth:.2f}x from depth {lo} "
+             f"to {hi} (> {gate['max_bucketed_depth_growth']}x — the "
+             f"program is scaling with DEPTH, not #buckets)")
+    else:
+        ok(f"compile: bucketed eqns {b_lo} -> {b_hi} "
+           f"({growth:.2f}x <= {gate['max_bucketed_depth_growth']}x)")
+    growth = u_hi / u_lo
+    if growth < gate["min_unrolled_depth_growth"]:
+        fail(f"compile: unrolled eqns grow only {growth:.2f}x from depth "
+             f"{lo} to {hi} (< {gate['min_unrolled_depth_growth']}x — "
+             f"the contrast baseline is broken)")
+    else:
+        ok(f"compile: unrolled eqns {u_lo} -> {u_hi} ({growth:.2f}x)")
+    adv = u_hi / max(b_hi, 1)
+    if adv < gate["min_deep_advantage"]:
+        fail(f"compile: at depth {hi} bucketed is only {adv:.2f}x smaller "
+             f"than unrolled (< {gate['min_deep_advantage']}x)")
+    else:
+        ok(f"compile: depth-{hi} program {adv:.1f}x smaller bucketed")
+    return failures
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--bench", default="BENCH_serve.json")
     ap.add_argument("--baseline", default="benchmarks/baselines/serve.json")
+    ap.add_argument("--compile-bench", default="BENCH_compile.json")
+    ap.add_argument("--compile-baseline",
+                    default="benchmarks/baselines/compile.json")
+    ap.add_argument("--compile-only", action="store_true",
+                    help="gate only the compile-cost bench")
     args = ap.parse_args()
+    if args.compile_only:
+        try:
+            with open(args.compile_bench) as f:
+                cbench = json.load(f)
+            with open(args.compile_baseline) as f:
+                cbase = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"FAIL  cannot read compile bench/baseline: {e}")
+            return 1
+        failures = check_compile(cbench, cbase)
+        if failures:
+            print(f"\ncheck_bench: {len(failures)} compile regression(s)")
+            return 1
+        print("\ncheck_bench: compile checks passed")
+        return 0
     try:
         with open(args.bench) as f:
             bench = json.load(f)
@@ -324,6 +429,21 @@ def main() -> int:
         print(f"FAIL  cannot read baseline {args.baseline}: {e}")
         return 1
     failures = check(bench, baseline)
+    # compile-cost gate rides along whenever its baseline is committed —
+    # a bench run that stops emitting BENCH_compile.json fails loudly here
+    if os.path.exists(args.compile_baseline):
+        try:
+            with open(args.compile_bench) as f:
+                cbench = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            failures.append(str(e))
+            print(f"FAIL  cannot read compile bench {args.compile_bench}: "
+                  f"{e}")
+            cbench = None
+        if cbench is not None:
+            with open(args.compile_baseline) as f:
+                cbase = json.load(f)
+            failures += check_compile(cbench, cbase)
     if failures:
         print(f"\ncheck_bench: {len(failures)} regression(s) vs "
               f"{args.baseline}")

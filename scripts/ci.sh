@@ -2,6 +2,7 @@
 # Tier-1 CI: dev deps -> lint -> test suite -> quick benches -> bench gate.
 #
 #   bash scripts/ci.sh [--lint-only] [--skip-bench] [--skip-tests]
+#                      [--compile-smoke]
 #
 #   --lint-only    lint and stop (the workflow's lint job calls exactly
 #                  this, so local and CI lint run ONE entrypoint and
@@ -9,6 +10,11 @@
 #                  ruff via ci.sh and the workflow had its own command)
 #   --skip-bench   tests only (the workflow's test job)
 #   --skip-tests   benches + regression gate only (the workflow's bench job)
+#   --compile-smoke  deep-config compile smoke only (the workflow's
+#                  compile-smoke job): an 80-repeat 4-bucket mixed config
+#                  must trace+lower inside a tight wall budget — catches
+#                  O(depth) program-size regressions without waiting for
+#                  the full bench leg
 #
 # The bench step emits BENCH_serve.json and BENCH_knapsack.json in the repo
 # root and gates BENCH_serve.json against benchmarks/baselines/serve.json
@@ -19,15 +25,23 @@ cd "$(dirname "$0")/.."
 LINT_ONLY=0
 SKIP_BENCH=0
 SKIP_TESTS=0
+COMPILE_SMOKE=0
 for arg in "$@"; do
     case "$arg" in
         --lint-only)  LINT_ONLY=1 ;;
         --skip-bench) SKIP_BENCH=1 ;;
         --skip-tests) SKIP_TESTS=1 ;;
+        --compile-smoke) COMPILE_SMOKE=1 ;;
         *) echo "usage: ci.sh [--lint-only] [--skip-bench] [--skip-tests]" \
-               >&2; exit 2 ;;
+               "[--compile-smoke]" >&2; exit 2 ;;
     esac
 done
+
+if [ "$COMPILE_SMOKE" -eq 1 ]; then
+    JAX_PLATFORMS=cpu PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} \
+        python scripts/compile_smoke.py
+    exit $?
+fi
 
 # Dev-only deps (pytest, hypothesis, ruff). Offline/airgapped hosts keep
 # going: the suite importorskips hypothesis-based property tests and the
@@ -63,17 +77,17 @@ if [ "$SKIP_TESTS" -eq 0 ]; then
 fi
 
 if [ "$SKIP_BENCH" -eq 0 ]; then
-    rm -f BENCH_serve.json BENCH_knapsack.json
+    rm -f BENCH_serve.json BENCH_knapsack.json BENCH_compile.json
     # The bench runs on 8 forced CPU host devices so the serve bench's
     # tensor-parallel section (_meta.sharded: sharded tok/s + per-device
     # resident bytes) always reports — check_bench REQUIRES those columns.
     JAX_PLATFORMS=cpu \
     XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=8" \
     PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-        python -m benchmarks.run --quick --only serve,knapsack
-    # fail LOUDLY if either quick bench emitted no JSON: a bench that
+        python -m benchmarks.run --quick --only serve,knapsack,compile
+    # fail LOUDLY if any quick bench emitted no JSON: a bench that
     # silently stops reporting is itself a CI regression.
-    for f in BENCH_serve.json BENCH_knapsack.json; do
+    for f in BENCH_serve.json BENCH_knapsack.json BENCH_compile.json; do
         if [ ! -s "$f" ]; then
             echo "ERROR: quick bench emitted no $f" >&2
             exit 1
@@ -86,7 +100,10 @@ if [ "$SKIP_BENCH" -eq 0 ]; then
     # (weights AND the _meta.kv resident-KV survey), the hard >=1.8x
     # int8 / >=3x int4 cache-reduction invariants, and REQUIRED
     # quantized-cache columns — a bench that silently stops reporting the
-    # KV rows fails here, loudly.
+    # KV rows fails here, loudly.  The compile-cost gate (BENCH_compile
+    # vs baselines/compile.json: bucketed jaxpr stays O(#buckets) in
+    # depth, unrolled keeps growing, deep advantage >= 3x) rides in the
+    # same call.
     python scripts/check_bench.py \
         || { echo "ERROR: bench regression gate failed (see FAIL lines" \
                   "above — includes missing quantized-KV columns)" >&2; \

@@ -1,0 +1,54 @@
+#!/usr/bin/env python
+"""CI compile smoke: a DEEP mixed-precision config must stay cheap to
+trace.
+
+Builds an 80-repeat config under a 4-level mixed policy (weight 4/2 bit x
+cache 8/4 bit — 4 buckets), packs it into the bucketed layout, and
+trace+lowers the packed decode step.  The wall-clock budget is deliberately
+tight: the bucketed program is O(#buckets), so tracing the 80-deep stack
+costs the same as an 8-deep one (~1-2 s on the CI runner class).  If a
+change reintroduces per-layer python unrolling, tracing balloons to
+O(depth) (>10 s for this config) and this smoke times out loudly instead
+of every deep-config user paying the compile tax at import time.
+
+    python scripts/compile_smoke.py [--depth 80] [--budget-s 30]
+
+Exits nonzero if the trace+lower exceeds the budget (or crashes).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--depth", type=int, default=80)
+    ap.add_argument("--budget-s", type=float, default=30.0,
+                    help="wall budget for trace+lower of the decode step "
+                         "(bucketed layout traces this in ~1-2 s; the "
+                         "headroom absorbs slow shared runners, not an "
+                         "O(depth) regression, which costs >10 s extra)")
+    args = ap.parse_args()
+
+    from benchmarks import compile_bench
+
+    t0 = time.perf_counter()
+    out = compile_bench.run(depths=(args.depth,), layouts=("bucketed",))
+    dt = time.perf_counter() - t0
+    row = out[f"bucketed@{args.depth}"]
+    print(f"compile_smoke: depth={args.depth} buckets={row['n_buckets']} "
+          f"jaxpr_eqns={row['jaxpr_eqns']} lower_s={row['lower_s']} "
+          f"total_s={dt:.1f}")
+    if row["lower_s"] > args.budget_s:
+        print(f"FAIL  trace+lower took {row['lower_s']:.1f}s "
+              f"> budget {args.budget_s:.0f}s — deep-config compile cost "
+              f"is scaling with depth again", file=sys.stderr)
+        return 1
+    print("compile_smoke: ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -31,6 +31,127 @@ CACHE_FULL_BITS = 16.0          # "16-passthrough": cache stays full dtype
 
 
 @dataclasses.dataclass(frozen=True)
+class BucketPlan:
+    """Partition of a repeat pattern into maximal contiguous same-signature
+    runs (DESIGN.md §3, "bucketed" layout).
+
+    A layer's signature is its joint serving precision: per-slot weight
+    bits (per-expert rows become tuples) plus per-layer cache bits.  Two
+    adjacent layers with equal signatures have identical packed-code /
+    scale / cache-leaf shapes and dtypes, so their params and caches can
+    be stacked on a leading axis and driven by one ``lax.scan`` — the
+    compiled program size is O(#buckets), not O(depth).  Contiguity (runs,
+    not global groups) is what preserves the unrolled path's exact
+    per-layer op order, which is the bit-exactness oracle.
+    """
+    sizes: Tuple[int, ...]          # layers per bucket; sum == n_repeats
+    signatures: Tuple[Tuple, ...]   # hashable per-bucket signature
+
+    @property
+    def n_layers(self) -> int:
+        return int(sum(self.sizes))
+
+    @property
+    def starts(self) -> Tuple[int, ...]:
+        out, s = [], 0
+        for m in self.sizes:
+            out.append(s)
+            s += m
+        return tuple(out)
+
+    def describe(self) -> str:
+        """Human-readable plan: one line per bucket, signature → run."""
+        lines = []
+        for start, m, sig in zip(self.starts, self.sizes, self.signatures):
+            parts = []
+            for entry in sig:
+                if entry[0] == "w":
+                    _, group, slot, bits = entry
+                    val = ("/".join(f"{b:g}" for b in bits)
+                           if isinstance(bits, tuple) else f"{bits:g}")
+                    parts.append(f"{slot}={val}")
+                else:
+                    parts.append(f"cache={entry[2]:g}")
+            lines.append(f"layers [{start:3d}:{start + m:3d})  x{m:<3d} "
+                         + " ".join(parts))
+        return "\n".join(lines)
+
+
+def bucket_plan(weight_arrays=None, cache_bits=None,
+                n_layers: Optional[int] = None) -> BucketPlan:
+    """Compute the joint (weight-bits, cache-bits) bucket plan for the
+    repeat pattern ("pat*" groups only — prefix/embed/head layers are
+    never scanned).
+
+    ``weight_arrays``: policy.as_arrays() output (or None for fake-quant /
+    uniform serving, where weight bits are traced operands and never
+    change shapes).  ``cache_bits``: cache_bits_arrays() output, a scalar,
+    or None — scalars are layout-uniform and contribute no boundaries.
+    ``n_layers`` validates (and, with no per-layer inputs, determines)
+    the pattern depth.
+
+    Buckets are MAXIMAL CONTIGUOUS runs: per-expert bits rows enter the
+    signature as tuples, so MoE stacks bucket by their whole expert-bank
+    assignment.
+    """
+    wsig: Dict[Tuple[str, str], np.ndarray] = {}
+    depth = n_layers
+    if weight_arrays:
+        for group in sorted(weight_arrays):
+            if not group.startswith("pat"):
+                continue
+            for slot in sorted(weight_arrays[group]):
+                arr = np.asarray(weight_arrays[group][slot], np.float32)
+                if depth is None:
+                    depth = int(arr.shape[0])
+                elif arr.shape[0] != depth:
+                    raise ValueError(
+                        f"bucket_plan: {group}/{slot} has {arr.shape[0]} "
+                        f"layers, expected {depth}")
+                wsig[(group, slot)] = arr
+    csig: Dict[str, np.ndarray] = {}
+    if cache_bits is not None and isinstance(cache_bits, dict):
+        for group in sorted(cache_bits):
+            if not group.startswith("pat"):
+                continue
+            arr = np.asarray(cache_bits[group], np.float32).reshape(-1)
+            if depth is None:
+                depth = int(arr.shape[0])
+            elif arr.shape[0] != depth:
+                raise ValueError(
+                    f"bucket_plan: cache bits for {group} has "
+                    f"{arr.shape[0]} layers, expected {depth}")
+            csig[group] = arr
+    if depth is None:
+        raise ValueError("bucket_plan needs per-layer weight_arrays, "
+                         "per-layer cache_bits, or n_layers")
+
+    def sig(r: int) -> Tuple:
+        parts = []
+        for key in sorted(wsig):
+            row = np.atleast_1d(wsig[key][r])
+            val = (float(row[0]) if row.shape == (1,)
+                   else tuple(float(b) for b in row))
+            parts.append(("w",) + key + (val,))
+        for g in sorted(csig):
+            parts.append(("cache", g, float(csig[g][r])))
+        return tuple(parts)
+
+    sizes: List[int] = []
+    signatures: List[Tuple] = []
+    prev = None
+    for r in range(depth):
+        s = sig(r)
+        if sizes and s == prev:
+            sizes[-1] += 1
+        else:
+            sizes.append(1)
+            signatures.append(s)
+            prev = s
+    return BucketPlan(tuple(sizes), tuple(signatures))
+
+
+@dataclasses.dataclass(frozen=True)
 class CacheUnit:
     """One per-layer KV-cache precision atom (serving-side state).
 
@@ -225,6 +346,17 @@ class PrecisionPolicy:
             else:
                 grp[u.slot][u.layer] = self._bits[u.name]
         return out
+
+    def bucket_plan(self, weights: bool = True,
+                    cache: bool = True) -> BucketPlan:
+        """The selector's output AS the scan layout: maximal contiguous
+        runs of pattern layers sharing this policy's joint (weight bits,
+        cache bits) signature (module-level ``bucket_plan``).  ``weights``
+        / ``cache`` drop that side from the signature — e.g.
+        ``bucket_plan(cache=False)`` is the plan pack_params uses when the
+        engine serves a full-dtype cache."""
+        return bucket_plan(self.as_arrays() if weights else None,
+                           self.cache_bits_arrays() if cache else None)
 
     # ------------------------------------------------------------ accounting
     def cost_bmacs_per_token(self, selectable_only: bool = True) -> float:

@@ -188,7 +188,9 @@ class PackedLinear:
 
     @property
     def k_padded(self) -> int:
-        return self.wp.shape[0] * self.pack
+        # -2 (not 0): a bucketed serve layout stacks same-signature layers
+        # on a leading axis (models/layout.py), so wp may be (m, Kp/pack, N).
+        return self.wp.shape[-2] * self.pack
 
 
 def pack_codes_kmajor(codes: jax.Array, bits: int) -> jax.Array:
@@ -216,7 +218,9 @@ def pack_codes_kmajor(codes: jax.Array, bits: int) -> jax.Array:
 
 def unpack_codes_kmajor(wp: jax.Array, bits: int,
                         dtype=jnp.float32) -> jax.Array:
-    """Inverse of pack_codes_kmajor: (Kp//pack, N) uint8 -> (Kp, N) codes."""
+    """Inverse of pack_codes_kmajor: (..., Kp//pack, N) uint8 ->
+    (..., Kp, N) codes.  Leading axes (a bucketed layer stack) pass
+    through untouched — the byte layout is per-(K, N) slab."""
     assert bits in (2, 4), bits
     pack = 8 // bits
     parts = []
@@ -224,8 +228,9 @@ def unpack_codes_kmajor(wp: jax.Array, bits: int,
         c = ((wp >> (bits * i)) & ((1 << bits) - 1)).astype(jnp.int8)
         c = jnp.where(c >= (1 << (bits - 1)), c - (1 << bits), c)
         parts.append(c)
-    w = jnp.stack(parts, axis=1)                  # (Kp//pack, pack, N)
-    return w.reshape(wp.shape[0] * pack, wp.shape[1]).astype(dtype)
+    w = jnp.stack(parts, axis=-2)                 # (..., Kp//pack, pack, N)
+    out_shape = wp.shape[:-2] + (wp.shape[-2] * pack, wp.shape[-1])
+    return w.reshape(out_shape).astype(dtype)
 
 
 def pack_linear(w: jax.Array, step: jax.Array, sa, bits: int) -> PackedLinear:
@@ -253,7 +258,8 @@ def pack_linear(w: jax.Array, step: jax.Array, sa, bits: int) -> PackedLinear:
 
 
 def packed_weight_dense(p: PackedLinear, dtype=jnp.float32) -> jax.Array:
-    """Dequantize a PackedLinear back to its (k_dim, N) weight matrix.
+    """Dequantize a PackedLinear back to its (k_dim, N) weight matrix
+    (a bucketed (m, ...) layer stack dequantizes to (m, k_dim, N)).
 
     Dequant order matches the fake-quant path (codes * scale elementwise,
     THEN any downstream matmul) so the two layouts agree bit-for-bit.
@@ -266,10 +272,11 @@ def packed_weight_dense(p: PackedLinear, dtype=jnp.float32) -> jax.Array:
     silently different shape per container.
     """
     if p.bits == 8:
-        codes = p.wp.astype(jnp.float32)[:p.k_dim]
+        codes = p.wp.astype(jnp.float32)[..., :p.k_dim, :]
     else:
-        codes = unpack_codes_kmajor(p.wp, p.bits, jnp.float32)[:p.k_dim]
-    return (codes * p.scale[None, :].astype(jnp.float32)).astype(dtype)
+        codes = unpack_codes_kmajor(p.wp, p.bits,
+                                    jnp.float32)[..., :p.k_dim, :]
+    return (codes * p.scale[..., None, :].astype(jnp.float32)).astype(dtype)
 
 
 def pack_int4(codes: jax.Array) -> jax.Array:

@@ -1,0 +1,192 @@
+"""Pattern-layer layouts: stacked | unrolled | bucketed (DESIGN.md §3).
+
+The repeat pattern's params and caches can live in three layouts:
+
+  * **stacked** — every leaf carries a leading ``n_repeats`` axis and one
+    ``lax.scan`` drives the whole stack.  Requires a layout-uniform
+    precision assignment (identical packed shapes / cache dtypes at every
+    depth).
+  * **unrolled** — a python list with one entry per repeat; compile time
+    and program size grow linearly with depth.  Kept as the differential
+    oracle and as the escape hatch for layouts that cannot stack.
+  * **bucketed** — ``LayerBuckets``: maximal contiguous runs of layers
+    sharing a joint (weight-bits, cache-bits) signature
+    (core/policy.bucket_plan), each run stacked on a leading axis and
+    scanned, with a python step only across run boundaries.  Program size
+    is O(#buckets) — a 4-level mixed policy compiles ~4 block programs at
+    any depth.
+
+``resolve_pattern`` is the single validated layout property derived from
+params (and cache, when present).  It replaces the old footgun of two
+INDEPENDENT ``isinstance(..., list)`` checks in ``transformer.apply``,
+which silently zipped a stacked tree against a list of the wrong length:
+every params/cache layout disagreement now raises with the offending
+shapes spelled out.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+
+
+@functools.partial(jax.tree_util.register_dataclass,
+                   data_fields=("buckets",), meta_fields=("sizes",))
+@dataclasses.dataclass
+class LayerBuckets:
+    """Bucketed pattern container: one stacked pytree per contiguous run.
+
+    ``buckets[i]`` holds the run's params (or cache) with every array
+    leaf stacked on a leading axis of length ``sizes[i]``;
+    ``sum(sizes) == n_repeats``.  ``sizes`` is static metadata, so two
+    ``LayerBuckets`` with equal plans share a treedef — ``jax.tree.map``
+    zips them structurally, and jit/scan/shard_map thread the container
+    like any registered pytree.
+    """
+    buckets: Tuple[Any, ...]
+    sizes: Tuple[int, ...]
+
+    def __post_init__(self):
+        self.buckets = tuple(self.buckets)
+        self.sizes = tuple(int(s) for s in self.sizes)
+        if len(self.buckets) != len(self.sizes):
+            raise ValueError(
+                f"LayerBuckets: {len(self.buckets)} buckets vs "
+                f"{len(self.sizes)} sizes")
+
+    @property
+    def n_layers(self) -> int:
+        return int(sum(self.sizes))
+
+    @property
+    def starts(self) -> Tuple[int, ...]:
+        out, s = [], 0
+        for m in self.sizes:
+            out.append(s)
+            s += m
+        return tuple(out)
+
+
+def slice_stacked(tree: Any, start: int, size: int) -> Any:
+    """Leading-axis slice [start, start+size) of every array leaf."""
+    return jax.tree.map(lambda a: a[start:start + size], tree)
+
+
+def from_stacked(tree: Any, sizes) -> LayerBuckets:
+    """Split a stacked tree into buckets along the leading axis."""
+    sizes = tuple(int(s) for s in sizes)
+    buckets, start = [], 0
+    for m in sizes:
+        buckets.append(slice_stacked(tree, start, m))
+        start += m
+    return LayerBuckets(tuple(buckets), sizes)
+
+
+def kind_of(node: Any) -> str:
+    """'missing' | 'stacked' | 'unrolled' | 'bucketed' for a pattern tree."""
+    if node is None:
+        return "missing"
+    if isinstance(node, LayerBuckets):
+        return "bucketed"
+    if isinstance(node, (list, tuple)):
+        return "unrolled"
+    return "stacked"
+
+
+@dataclasses.dataclass(frozen=True)
+class PatternLayout:
+    """Resolved layout for one apply call."""
+    kind: str                              # "stacked"|"unrolled"|"bucketed"
+    sizes: Optional[Tuple[int, ...]]       # bucket sizes (bucketed only)
+    params_kind: str
+    cache_kind: str
+
+
+def _check_lead(tree: Any, n: int, what: str) -> None:
+    """Every array leaf of a stacked pattern tree must lead with n."""
+    for leaf in jax.tree.leaves(tree):
+        shape = getattr(leaf, "shape", None)
+        if shape is None or len(shape) == 0:
+            continue
+        if shape[0] != n:
+            raise ValueError(
+                f"{what}: stacked leaf leads with {shape[0]} "
+                f"(shape {tuple(shape)}), expected {n} layers")
+        return  # one representative leaf suffices: stacks are built jointly
+    # trees of only None/scalars (empty caches) carry no layout evidence
+
+
+def _check_buckets(lb: LayerBuckets, n: int, what: str) -> None:
+    if lb.n_layers != n:
+        raise ValueError(f"{what}: bucket sizes {lb.sizes} sum to "
+                         f"{lb.n_layers}, expected {n} layers")
+    for i, (b, m) in enumerate(zip(lb.buckets, lb.sizes)):
+        _check_lead(b, m, f"{what} bucket {i}")
+
+
+def resolve_pattern(params_pat: Any, cache_pat: Any,
+                    n_repeats: int) -> PatternLayout:
+    """Single validated layout decision for ``transformer.apply``.
+
+    Compatibility matrix (rows = params, cols = cache):
+
+      =========  ========  =========  ==========  =========
+      params \\   missing   stacked    bucketed    unrolled
+      stacked    stacked   stacked    bucketed    unrolled*
+      bucketed   bucketed  bucketed   bucketed†   ERROR
+      unrolled   unrolled  ERROR      ERROR       unrolled
+      =========  ========  =========  ==========  =========
+
+    \\* legacy fake-quant serving: weight bits are traced, so stacked
+    params slice cleanly against a per-layer cache list.  † requires
+    equal bucket sizes.  Bucketed params never pair with list caches
+    (the engine derives cache layout from params — a list there means
+    two different partitioners disagreed) and unrolled params never pair
+    with stacked/bucketed caches.  Every length/size mismatch raises.
+    """
+    pk = kind_of(params_pat)
+    ck = kind_of(cache_pat)
+    if pk == "missing":
+        raise ValueError("resolve_pattern: params['pat'] is missing")
+
+    if pk == "unrolled" and len(params_pat) != n_repeats:
+        raise ValueError(f"params['pat'] list has {len(params_pat)} "
+                         f"entries, expected n_repeats={n_repeats}")
+    if pk == "stacked":
+        _check_lead(params_pat, n_repeats, "params['pat']")
+    if pk == "bucketed":
+        _check_buckets(params_pat, n_repeats, "params['pat']")
+
+    if ck == "unrolled" and len(cache_pat) != n_repeats:
+        raise ValueError(f"caches['pat'] list has {len(cache_pat)} "
+                         f"entries, expected n_repeats={n_repeats}")
+    if ck == "stacked":
+        _check_lead(cache_pat, n_repeats, "caches['pat']")
+    if ck == "bucketed":
+        _check_buckets(cache_pat, n_repeats, "caches['pat']")
+
+    if pk == "bucketed" and ck == "unrolled":
+        raise ValueError(
+            "layout disagreement: bucketed params['pat'] with a per-layer "
+            "LIST cache — build the cache with the same bucket plan "
+            "(init_caches(plan=params['pat'].sizes))")
+    if pk == "unrolled" and ck in ("stacked", "bucketed"):
+        raise ValueError(
+            f"layout disagreement: unrolled (list) params['pat'] with a "
+            f"{ck} cache — unroll the cache too "
+            "(init_caches(plan='unrolled'))")
+    if pk == "bucketed" and ck == "bucketed" and \
+            params_pat.sizes != cache_pat.sizes:
+        raise ValueError(
+            f"layout disagreement: params buckets {params_pat.sizes} vs "
+            f"cache buckets {cache_pat.sizes} — weight and cache plans "
+            "must share boundaries (pack_params(..., cache_bits=...))")
+
+    if pk == "unrolled" or ck == "unrolled":
+        return PatternLayout("unrolled", None, pk, ck)
+    if pk == "bucketed" or ck == "bucketed":
+        sizes = (params_pat.sizes if pk == "bucketed" else cache_pat.sizes)
+        return PatternLayout("bucketed", sizes, pk, ck)
+    return PatternLayout("stacked", None, pk, ck)

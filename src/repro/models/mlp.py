@@ -152,7 +152,11 @@ def _moe_local(x_flat, top_ids, top_w, gate_w, up_w, down_w, sa_gate,
         # python loop unrolls over the (small) local expert count; each
         # expert's matmuls route through kops.packed_matmul (or the
         # per-dispatch dequant view {'wpre','sa'} on the CPU decode path —
-        # serve/packing.decode_weight_view).
+        # serve/packing.decode_weight_view).  Under the BUCKETED pattern
+        # layout the per-expert bits row is part of the layer signature
+        # (core/policy.bucket_plan), so a bucket's expert banks stack on
+        # the layer axis and the pattern scan slices them back to exactly
+        # this per-layer list — no per-expert special-casing here.
         sa_g = sa_gate.astype(jnp.float32)
         sa_d = sa_down.astype(jnp.float32)
         outs = []

@@ -6,7 +6,11 @@ what makes the 61-layer/671B dry-run tractable and is also the right answer
 for 1000-node compile times.
 
 Quantization policy bits ride through the scan as stacked (n_repeats,)
-arrays next to the stacked params; caches likewise.  Modes:
+arrays next to the stacked params; caches likewise.  MIXED per-layer
+serving precision (packed weights / quantized caches) keeps the scan via
+the BUCKETED layout (models/layout.py): maximal contiguous
+same-signature runs, each stacked and scanned, python-stepped across
+boundaries — O(#buckets) program size instead of O(depth).  Modes:
 
   train   — full sequence, loss-ready logits, per-block remat
   prefill — full sequence + returns per-layer caches/states
@@ -25,8 +29,9 @@ from repro.core.policy import (CACHE_FULL_BITS, PIN_MIN_IN_FEATURES,
                                PIN_EDGE_BITS, PIN_NARROW_BITS, CacheUnit,
                                PrecisionPolicy, QuantUnit)
 from repro.models import attention as attn
-from repro.models import common, mlp, ssm
+from repro.models import common, layout, mlp, ssm
 from repro.models.common import BlockDef
+from repro.models.layout import LayerBuckets
 
 
 # ==================================================================== blocks
@@ -221,7 +226,7 @@ def _cache_bits_for(cache_bits, group: str, layer: int):
 
 
 def init_caches(cfg, batch: int, max_seq: int, cache_dtype=None,
-                cache_bits=None, page_geom=None) -> dict:
+                cache_bits=None, page_geom=None, plan=None) -> dict:
     """Preallocated per-layer decode caches (attention: (B, S_max, ...)).
 
     Cache contract (serve/kv_cache.py builds on this):
@@ -240,10 +245,15 @@ def init_caches(cfg, batch: int, max_seq: int, cache_dtype=None,
       - ``cache_bits`` (8/4/16, scalar or {group: per-layer array}) selects
         the QUANTIZED cache layout per layer.  Uniform bits across a
         pattern slot keep the stacked scan layout; MIXED per-layer bits
-        give per-layer shapes/dtypes, so ``caches['pat']`` becomes a
-        per-layer LIST and models/transformer.apply runs the pattern
-        python-unrolled (the same trade mixed-precision packed weights
-        already make).
+        give per-layer shapes/dtypes, so ``caches['pat']`` becomes
+        BUCKETED — a LayerBuckets of stacked runs with uniform bits each
+        (models/layout.py; apply scans within each run).
+      - ``plan`` overrides the pattern-cache layout: a bucket-sizes tuple
+        (or core/policy.BucketPlan) forces that exact partition — the
+        engine passes the JOINT weight+cache plan here so packed params
+        and cache buckets share boundaries; ``'unrolled'`` forces the
+        legacy per-layer list (the differential oracle).  Cache bits must
+        be uniform within every requested bucket.
       - ``page_geom`` = (n_pages, page_size) swaps the per-slot buffers
         for physical page POOLS (serve/paging.py — GQA only); the block
         table addressing them lives in the engine's PagedServeCache and
@@ -260,23 +270,59 @@ def init_caches(cfg, batch: int, max_seq: int, cache_dtype=None,
                      for r in range(cfg.n_repeats)]
         mixed = any(len({bits_grid[r][j] for r in range(cfg.n_repeats)}) > 1
                     for j, _ in enumerate(cfg.pattern))
-        if mixed:
+        sizes = None
+        if plan is not None and not (isinstance(plan, str)
+                                     and plan == "unrolled"):
+            sizes = tuple(int(s) for s in getattr(plan, "sizes", plan))
+            if sum(sizes) != cfg.n_repeats:
+                raise ValueError(f"cache plan sizes {sizes} sum to "
+                                 f"{sum(sizes)}, expected {cfg.n_repeats}")
+        elif plan is None and mixed:
+            # Auto plan: maximal contiguous runs of identical per-slot
+            # cache bits (the cache-only bucket signature).
+            sizes = []
+            for r in range(cfg.n_repeats):
+                if sizes and bits_grid[r] == bits_grid[r - 1]:
+                    sizes[-1] += 1
+                else:
+                    sizes.append(1)
+            sizes = tuple(sizes)
+
+        def stack(c, n):
+            return jax.tree.map(
+                lambda l: jnp.broadcast_to(l, (n,) + l.shape), c)
+
+        if isinstance(plan, str) and plan == "unrolled":
             caches["pat"] = [
                 {f"p{j}": init_block_cache(cfg, bd, batch, max_seq,
                                            cache_dtype, bits_grid[r][j],
                                            page_geom)
                  for j, bd in enumerate(cfg.pattern)}
                 for r in range(cfg.n_repeats)]
-        else:
-            def stack(c):
-                return jax.tree.map(
-                    lambda l: jnp.broadcast_to(l, (cfg.n_repeats,) + l.shape),
-                    c)
+        elif sizes is None:
             caches["pat"] = {
                 f"p{j}": stack(init_block_cache(cfg, bd, batch, max_seq,
                                                 cache_dtype, bits_grid[0][j],
-                                                page_geom))
+                                                page_geom), cfg.n_repeats)
                 for j, bd in enumerate(cfg.pattern)}
+        else:
+            buckets, start = [], 0
+            for m in sizes:
+                for r in range(start, start + m):
+                    if bits_grid[r] != bits_grid[start]:
+                        raise ValueError(
+                            f"cache plan bucket [{start}:{start + m}) mixes "
+                            f"cache bits {bits_grid[start]} vs "
+                            f"{bits_grid[r]} at layer {r} — bucket "
+                            "boundaries must refine the cache-bit runs")
+                buckets.append({
+                    f"p{j}": stack(init_block_cache(cfg, bd, batch, max_seq,
+                                                    cache_dtype,
+                                                    bits_grid[start][j],
+                                                    page_geom), m)
+                    for j, bd in enumerate(cfg.pattern)})
+                start += m
+            caches["pat"] = LayerBuckets(tuple(buckets), sizes)
     return caches
 
 
@@ -406,69 +452,104 @@ def apply(params, policy_arrays, batch: Dict, cfg, ctx, mode: str = "train",
         new_caches[f"prefix{i}"] = nc
         aux_total = aux_total + aux
 
-    # ---- repeats: scanned (stacked layout) or unrolled (per-layer) ----
-    pat_is_list = cfg.n_repeats and isinstance(params["pat"], (list, tuple))
-    cache_is_list = isinstance((caches or {}).get("pat"), (list, tuple))
-    if cfg.n_repeats and (pat_is_list or cache_is_list):
-        # Python-unrolled pattern (O(n_layers) compile, the standard
-        # serving trade; training keeps the O(1)-compile scan below).
-        # Forced by either per-layer structure: packed-weight params
-        # (serve/packing.py — bit-width-dependent buffer shapes cannot
-        # share one scan operand) or MIXED per-layer cache bits
-        # (init_caches — per-layer cache shapes/dtypes).  Stacked operands
-        # on the other side are sliced per layer; a list cache comes back
-        # as a list so the decode scan carry keeps a stable structure.
+    # ---- repeats: stacked scan | bucketed scans | python-unrolled ----
+    # The layout is a single VALIDATED property resolved from params and
+    # cache jointly (models/layout.resolve_pattern): a stacked-vs-list (or
+    # mismatched-bucket) disagreement raises instead of silently zipping
+    # wrong.  All three drivers share ``pattern_step`` — the exact same
+    # per-layer op order — which is the bit-exactness oracle between them.
+    if cfg.n_repeats:
         pat_caches = (caches or {}).get("pat")
-        per_layer_caches = []
-        for layer in range(cfg.n_repeats):
-            layer_params = (params["pat"][layer] if pat_is_list else
-                            jax.tree.map(lambda a, i=layer: a[i],
-                                         params["pat"]))
-            if pat_caches is None:
-                layer_cache = None
-            elif cache_is_list:
-                layer_cache = pat_caches[layer]
-            else:
-                layer_cache = jax.tree.map(lambda l, i=layer: l[i],
-                                           pat_caches)
+        lay = layout.resolve_pattern(params["pat"], pat_caches,
+                                     cfg.n_repeats)
+
+        def pattern_step(layer_params, layer_bits, layer_cache, xx, aux_c):
+            """One repeat of the pattern (layer_bits: list indexed by slot)."""
             out_cache = {}
             for j, bdef in enumerate(cfg.pattern):
-                bits = {k: v[layer]
-                        for k, v in policy_arrays[f"pat{j}"].items()}
                 cache_j = (None if layer_cache is None
                            else layer_cache[f"p{j}"])
-                x, nc, aux = block_apply(layer_params[f"p{j}"], x, bits, cfg,
-                                         ctx, bdef, mode, cache_j, positions,
-                                         mrope_positions, tp_axis)
-                out_cache[f"p{j}"] = nc if nc is not None else 0
-                aux_total = aux_total + aux
-            per_layer_caches.append(out_cache)
-        if cache_is_list:
-            new_caches["pat"] = per_layer_caches
-        else:
-            new_caches["pat"] = jax.tree.map(
-                lambda *ls: jnp.stack([jnp.asarray(l) for l in ls]),
-                *per_layer_caches)
-    elif cfg.n_repeats:
-        pat_bits = _pattern_bits(policy_arrays, cfg)
-        pat_caches = (caches or {}).get("pat")
-
-        def body(carry, xs):
-            xx, aux_c = carry
-            layer_params, layer_bits, layer_cache = xs
-            out_cache = {}
-            for j, bdef in enumerate(cfg.pattern):
-                cache_j = None if layer_cache is None else layer_cache[f"p{j}"]
                 xx, nc, aux = block_apply(
                     layer_params[f"p{j}"], xx, layer_bits[j], cfg, ctx, bdef,
                     mode, cache_j, positions, mrope_positions, tp_axis)
                 out_cache[f"p{j}"] = nc if nc is not None else 0
-            return (xx, aux_c + aux), out_cache
+                aux_c = aux_c + aux
+            return xx, out_cache, aux_c
 
-        body_fn = jax.checkpoint(body) if mode == "train" else body
-        xs = (params["pat"], pat_bits, pat_caches)
-        (x, aux_total), cache_stack = jax.lax.scan(body_fn, (x, aux_total), xs)
-        new_caches["pat"] = cache_stack
+        if lay.kind == "unrolled":
+            # Python-unrolled pattern (O(n_layers) compile) — the escape
+            # hatch for per-layer structure no bucket plan stacks, and the
+            # differential oracle (pack_params(layout='unrolled') /
+            # init_caches(plan='unrolled')).  Stacked operands on the other
+            # side are sliced per layer; a list cache comes back as a list
+            # so the decode scan carry keeps a stable structure.
+            pat_is_list = lay.params_kind == "unrolled"
+            cache_is_list = lay.cache_kind == "unrolled"
+            per_layer_caches = []
+            for layer in range(cfg.n_repeats):
+                layer_params = (params["pat"][layer] if pat_is_list else
+                                jax.tree.map(lambda a, i=layer: a[i],
+                                             params["pat"]))
+                if pat_caches is None:
+                    layer_cache = None
+                elif cache_is_list:
+                    layer_cache = pat_caches[layer]
+                else:
+                    layer_cache = jax.tree.map(lambda l, i=layer: l[i],
+                                               pat_caches)
+                bits = [{k: v[layer]
+                         for k, v in policy_arrays[f"pat{j}"].items()}
+                        for j in range(len(cfg.pattern))]
+                x, out_cache, aux_total = pattern_step(
+                    layer_params, bits, layer_cache, x, aux_total)
+                per_layer_caches.append(out_cache)
+            if cache_is_list:
+                new_caches["pat"] = per_layer_caches
+            else:
+                new_caches["pat"] = jax.tree.map(
+                    lambda *ls: jnp.stack([jnp.asarray(l) for l in ls]),
+                    *per_layer_caches)
+        else:
+            pat_bits = _pattern_bits(policy_arrays, cfg)
+
+            def body(carry, xs):
+                xx, aux_c = carry
+                layer_params, layer_bits, layer_cache = xs
+                xx, out_cache, aux_c = pattern_step(
+                    layer_params, layer_bits, layer_cache, xx, aux_c)
+                return (xx, aux_c), out_cache
+
+            body_fn = jax.checkpoint(body) if mode == "train" else body
+            if lay.kind == "stacked":
+                xs = (params["pat"], pat_bits, pat_caches)
+                (x, aux_total), cache_stack = jax.lax.scan(
+                    body_fn, (x, aux_total), xs)
+                new_caches["pat"] = cache_stack
+            else:
+                # Bucketed (DESIGN.md §3): python-step only across
+                # signature boundaries, lax.scan within each contiguous
+                # run — program size is O(#buckets) at any depth, with
+                # the unrolled path's per-layer op order preserved.
+                out_buckets, start = [], 0
+                for bi, m in enumerate(lay.sizes):
+                    def _slice(t, s=start, mm=m):
+                        return jax.tree.map(lambda a: a[s:s + mm], t)
+                    bp = (params["pat"].buckets[bi]
+                          if lay.params_kind == "bucketed"
+                          else _slice(params["pat"]))
+                    bb = [_slice(sb) for sb in pat_bits]
+                    if pat_caches is None:
+                        bc = None
+                    elif lay.cache_kind == "bucketed":
+                        bc = pat_caches.buckets[bi]
+                    else:
+                        bc = _slice(pat_caches)
+                    (x, aux_total), cs = jax.lax.scan(
+                        body_fn, (x, aux_total), (bp, bb, bc))
+                    out_buckets.append(cs)
+                    start += m
+                new_caches["pat"] = LayerBuckets(tuple(out_buckets),
+                                                 lay.sizes)
 
     x = common.apply_norm(cfg.norm, x, params["final_norm"])
     logits = _head(params, cfg, x)

@@ -9,7 +9,13 @@ Embedding/LM-head codes are int8 (pinned 8-bit).
 
 ``serve.packing.pack_params`` — the **packed** layout: K-major uint8 codes
 (2 int4 / 4 int2 per byte) + per-output-channel scales, routed through
-kernels/quant_matmul.py (Pallas on TPU; exact ref path on CPU).  Pick with
+kernels/quant_matmul.py (Pallas on TPU; exact ref path on CPU).  Packed
+params default to the BUCKETED layout (models/layout.py): contiguous
+same-signature layer runs stacked and scanned, so mixed-precision depth
+compiles O(#buckets) — the engine derives the cache layout from the
+params layout and validates at construction that packed weight buckets
+and quantized cache-bit runs share boundaries (re-pack with
+``pack_params(..., cache_bits=...)`` if not).  Pick with
 ``ServeEngine(weights="packed")``; both layouts are greedy-argmax parity
 with each other (tests/test_serve.py).  On the CPU/ref path the packed
 codes are dequantized ONCE per decode dispatch (before the token scan —
@@ -89,9 +95,11 @@ import numpy as np
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro.core import policy as policy_mod
 from repro.core import quant
 from repro.kernels import ops as kops
 from repro.models import transformer as tf
+from repro.models.layout import LayerBuckets
 from repro.parallel import compat, sharding
 from repro.parallel.context import local_context
 from repro.serve import kv_cache, packing, paging, residency, sampling
@@ -254,6 +262,7 @@ class ServeEngine:
         # broke greedy parity with the full-context reference).
         self._cfg = self.cfg.replace(cache_dtype=self.cache_dtype)
         self.has_recurrent_state = has_recurrent_state(self.cfg)
+        self._cache_plan = self._resolve_cache_plan()
         if self.mesh is not None:
             self._init_sharded()
         else:
@@ -264,6 +273,41 @@ class ServeEngine:
             # n_steps is the scan length -> static (one compile per distinct
             # chunk size; generate uses at most two: decode_chunk + a tail)
             self._decode = jax.jit(self._decode_impl, static_argnums=(9,))
+
+    def _resolve_cache_plan(self):
+        """Derive the pattern-cache layout from the PARAMS layout
+        (models/layout.py — DESIGN.md §3 bucketing contract).
+
+          * bucketed params (pack_params default) -> bucketed cache with
+            the SAME bucket sizes, always — even a full-dtype cache
+            buckets, so the decode scan's carry structure matches the
+            params-driven apply output.  Validated against the engine's
+            own joint (weight, cache) plan: if the packed buckets do not
+            refine the mixed cache-bit runs, the engine raises at
+            construction with re-pack guidance instead of failing deep
+            inside a jit.
+          * unrolled (list) params -> per-layer list cache.
+          * stacked (fake_quant) params -> the cache-bit runs alone pick
+            stacked vs bucketed (init_caches plan=None auto rule).
+        """
+        if not self.cfg.n_repeats or not isinstance(self.params, dict):
+            return None
+        pat = self.params.get("pat")
+        if isinstance(pat, (list, tuple)):
+            return "unrolled"
+        if isinstance(pat, LayerBuckets):
+            bits = self.cache_bits if self.cache == "quantized" else None
+            plan = policy_mod.bucket_plan(
+                self.policy_arrays, bits, n_layers=self.cfg.n_repeats)
+            if plan.sizes != pat.sizes:
+                raise ValueError(
+                    f"packed params carry bucket sizes {pat.sizes} but the "
+                    f"engine's joint (weight, cache) plan is {plan.sizes} — "
+                    "re-pack with serve.packing.pack_params(..., "
+                    "cache_bits=<engine cache_bits>) so weight and cache "
+                    "buckets share boundaries")
+            return pat.sizes
+        return None
 
     # ------------------------------------------------------- sharded setup
     def _init_sharded(self):
@@ -301,11 +345,17 @@ class ServeEngine:
         cache_template = jax.eval_shape(
             lambda: kv_cache.init_cache(self._cfg, 1, self.max_seq,
                                         dtype=self.cache_dtype,
-                                        cache_bits=bits).layers)
+                                        cache_bits=bits,
+                                        plan=self._cache_plan).layers)
         self._cache_specs = sharding.serve_cache_specs(cache_template)
+        # prefill emits FULL-dtype caches in the params-derived layout
+        # (bucketed params -> bucketed prefill output)
+        pre_plan = (self._cache_plan
+                    if isinstance(self._cache_plan, tuple) else None)
         pre_template = jax.eval_shape(
             lambda: tf.init_caches(self._cfg, 1, 1,
-                                   cache_dtype=self.cache_dtype))
+                                   cache_dtype=self.cache_dtype,
+                                   plan=pre_plan))
         self._pre_specs = sharding.serve_cache_specs(pre_template)
         self._prefill = jax.jit(compat.shard_map(
             self._prefill_impl, mesh=self.mesh,
@@ -419,9 +469,11 @@ class ServeEngine:
                        else batch * self.max_pages)
             return paging.init_paged_cache(
                 self._cfg, batch, self.max_seq, int(n_pages), self.page_size,
-                dtype=self.cache_dtype, cache_bits=bits)
+                dtype=self.cache_dtype, cache_bits=bits,
+                plan=self._cache_plan)
         c = kv_cache.init_cache(self._cfg, batch, self.max_seq,
-                                dtype=self.cache_dtype, cache_bits=bits)
+                                dtype=self.cache_dtype, cache_bits=bits,
+                                plan=self._cache_plan)
         if self.mesh is None:
             return c
         return ServeCache(
@@ -444,7 +496,7 @@ class ServeEngine:
             self._cfg, self.max_seq,
             init_fn=lambda b: kv_cache.init_cache(
                 self._cfg, b, self.max_seq, dtype=self.cache_dtype,
-                cache_bits=bits).layers)
+                cache_bits=bits, plan=self._cache_plan).layers)
 
     def residency(self, cache: Optional[ServeCache] = None) -> dict:
         """Measured resident/roofline bytes (serve/residency.py — the one

@@ -56,7 +56,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import kv_quant as kvq
+from repro.models import layout as layout_mod
 from repro.models import transformer as tf
+from repro.models.layout import LayerBuckets
 
 
 @jax.tree_util.register_dataclass
@@ -77,14 +79,15 @@ QuantizedServeCache = ServeCache
 
 
 def init_cache(cfg, batch: int, max_seq: int, dtype=None,
-               cache_bits=None) -> ServeCache:
+               cache_bits=None, plan=None) -> ServeCache:
     """Fresh preallocated cache; every request starts empty.
 
     ``cache_bits`` (8/4/16, scalar or {group: per-layer array}) selects
-    the quantized layout per layer (transformer.init_caches)."""
+    the quantized layout per layer; ``plan`` pins the pattern-cache
+    layout — bucket sizes or 'unrolled' (transformer.init_caches)."""
     return ServeCache(
         layers=tf.init_caches(cfg, batch, max_seq, cache_dtype=dtype,
-                              cache_bits=cache_bits),
+                              cache_bits=cache_bits, plan=plan),
         lengths=jnp.zeros((batch,), jnp.int32))
 
 
@@ -99,14 +102,32 @@ def quantize_like(template: Any, got: Any, lengths: jax.Array) -> Any:
 
     Where the template holds a quantized leaf dict, the matching {'k','v'}
     prefill leaves are quantized at the template's bit-width (derived from
-    the code container); everything else passes through.  A per-layer LIST
-    template (mixed cache bits) consumes the stacked prefill tree one
-    leading-axis slice at a time.
+    the code container); everything else passes through.  A BUCKETED
+    template (mixed cache bits, models/layout.LayerBuckets) recurses per
+    bucket — pairwise when the prefill tree is bucketed too (packed
+    weights emit bucketed prefill caches), else consuming the stacked
+    prefill tree one leading-axis run at a time.  A per-layer LIST
+    template likewise consumes it one slice at a time.
     """
     if template is None or isinstance(template, int):
         return got
     if is_quant_leaf(template):
         return kvq.quantize_prefill(got, lengths, kvq.cache_bits(template))
+    if isinstance(template, LayerBuckets):
+        if isinstance(got, LayerBuckets):
+            if got.sizes != template.sizes:
+                raise ValueError(
+                    f"quantize_like: prefill buckets {got.sizes} vs cache "
+                    f"buckets {template.sizes} — weight and cache plans "
+                    "must share boundaries")
+            parts = [quantize_like(t, g, lengths)
+                     for t, g in zip(template.buckets, got.buckets)]
+        else:
+            parts = [quantize_like(t, layout_mod.slice_stacked(got, s, m),
+                                   lengths)
+                     for t, s, m in zip(template.buckets, template.starts,
+                                        template.sizes)]
+        return LayerBuckets(tuple(parts), template.sizes)
     if isinstance(template, dict):
         return {k: quantize_like(template[k], got[k], lengths)
                 for k in template}

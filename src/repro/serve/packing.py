@@ -15,12 +15,17 @@ fake-quant path, so a packed model is greedy-argmax bit-parity with the
 fake-quant serving layout on the CPU ref path (kernels/ref.dequant_matmul);
 on TPU the packed buffers feed kernels/quant_matmul.py directly.
 
-Because mixed-precision packed buffers have bit-width-dependent shapes,
-the repeat pattern cannot stay one stacked scan operand: ``pack_params``
-unrolls it into a per-layer list — models/transformer.apply runs such
-params python-unrolled (O(n_layers) compile, the standard serving trade).
-MoE expert banks likewise unroll into per-expert ``PackedLinear`` lists
-(per-expert bit selection => per-expert packed shapes).
+Mixed-precision packed buffers have bit-width-dependent shapes, so the
+repeat pattern cannot stay ONE stacked scan operand — but a knapsack
+policy only emits a handful of bit-levels, so by default ``pack_params``
+emits the BUCKETED layout (models/layout.LayerBuckets): maximal
+contiguous runs of layers with identical joint (weight-bits, cache-bits)
+signatures (core/policy.bucket_plan), each run's ``PackedLinear`` leaves
+stacked on a leading axis and driven by one ``lax.scan`` — O(#buckets)
+compile instead of O(depth).  ``layout='unrolled'`` keeps the legacy
+per-layer list (the differential oracle).  MoE expert banks stay
+per-expert ``PackedLinear`` lists inside each bucket (per-expert bits
+enter the bucket signature, so a bucket's expert banks stack cleanly).
 
 ``resident_weight_bytes`` measures the bytes a params tree actually keeps
 resident — summed over real buffers, not a bits×params formula — which is
@@ -36,8 +41,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.core import policy as policy_mod
 from repro.core import quant
 from repro.core.quant import PackedLinear
+from repro.models.layout import LayerBuckets
 from repro.serve import residency
 
 
@@ -105,15 +112,44 @@ def _walk(node, path, layer, slot_of, policy_arrays):
     return node
 
 
+def _stack_layer_trees(trees):
+    """Stack per-layer packed trees onto a leading bucket axis.
+
+    Within a bucket every layer shares the joint bit signature, so the
+    PackedLinear leaves (and MoE per-expert lists) have identical
+    treedefs/static metadata and stack leaf-wise.
+    """
+    try:
+        return jax.tree.map(
+            lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]), *trees)
+    except ValueError as e:
+        raise ValueError(
+            "pack_params: layers inside one bucket do not share a packed "
+            "structure — the bucket plan does not match the policy arrays "
+            f"({e})") from e
+
+
 def pack_params(params: dict, policy_arrays: Dict[str, Dict[str, Any]],
-                cfg) -> dict:
+                cfg, cache_bits=None, layout: str = "bucketed") -> dict:
     """Convert a raw QAT checkpoint into the packed serving layout.
 
     params: the trained param pytree ({'w','sw','sa'} quant-units).
     policy_arrays: the knapsack outcome, ``PrecisionPolicy.as_arrays()``
     (HOST-side numpy — bit-widths become compile-time constants of the
     packed layout).
+
+    ``layout='bucketed'`` (default) partitions the repeat pattern with
+    ``core.policy.bucket_plan`` and stacks each run's packed leaves
+    (models/layout.LayerBuckets) so transformer.apply scans within runs.
+    Pass ``cache_bits`` (the engine's cache_bits value) when serving a
+    QUANTIZED mixed-bits cache: the weight buckets must refine the joint
+    weight+cache signature so params and cache share boundaries — the
+    engine validates this at construction.  ``layout='unrolled'`` emits
+    the legacy per-layer list (python-unrolled apply).
     """
+    if layout not in ("bucketed", "unrolled"):
+        raise ValueError(f"pack_params layout must be 'bucketed' or "
+                         f"'unrolled', got {layout!r}")
     from repro.models import transformer as tf
     slot_of = tf._slot_index(cfg)
 
@@ -123,14 +159,21 @@ def pack_params(params: dict, policy_arrays: Dict[str, Dict[str, Any]],
                 and "w" in node:
             out[key] = quantize_edge(node)
         elif key == "pat":
-            # Unroll the stacked repeat pattern: per-layer bit-widths give
-            # per-layer packed shapes, which cannot share one scan operand.
-            layers = []
-            for lyr in range(cfg.n_repeats):
+            def pack_layer(lyr):
                 sub = jax.tree.map(lambda a, i=lyr: a[i], node)
-                layers.append(_walk(sub, ("pat",), lyr, slot_of,
-                                    policy_arrays))
-            out[key] = layers
+                return _walk(sub, ("pat",), lyr, slot_of, policy_arrays)
+
+            if layout == "unrolled":
+                out[key] = [pack_layer(lyr) for lyr in range(cfg.n_repeats)]
+            else:
+                plan = policy_mod.bucket_plan(policy_arrays, cache_bits,
+                                              n_layers=cfg.n_repeats)
+                buckets, start = [], 0
+                for m in plan.sizes:
+                    buckets.append(_stack_layer_trees(
+                        [pack_layer(start + i) for i in range(m)]))
+                    start += m
+                out[key] = LayerBuckets(tuple(buckets), plan.sizes)
         else:
             out[key] = _walk(node, (key,), 0, slot_of, policy_arrays)
     return out
@@ -194,19 +237,44 @@ def _shard_row_packed(p: PackedLinear, n_shards: int) -> PackedLinear:
     if p.bits == 8:                     # 1 byte/code: slices already align
         return PackedLinear(wp=p.wp, scale=p.scale, sa=p.sa, bits=8,
                             k_dim=k_local)
+
+    def repack(codes2d):
+        slabs = [quant.pack_codes_kmajor(
+            codes2d[i * k_local:(i + 1) * k_local], p.bits)
+            for i in range(n_shards)]
+        return jnp.concatenate(slabs, axis=0)
+
     codes = np.asarray(quant.unpack_codes_kmajor(p.wp, p.bits,
-                                                 jnp.int8))[:p.k_dim]
-    slabs = [quant.pack_codes_kmajor(codes[i * k_local:(i + 1) * k_local],
-                                     p.bits)
-             for i in range(n_shards)]
-    return PackedLinear(wp=jnp.concatenate(slabs, axis=0), scale=p.scale,
+                                                 jnp.int8))[..., :p.k_dim, :]
+    if codes.ndim == 2:
+        wp = repack(codes)
+    else:                               # bucketed (m, Kp, N) layer stack
+        wp = jnp.stack([repack(codes[lyr]) for lyr in range(codes.shape[0])])
+    return PackedLinear(wp=wp, scale=p.scale,
                         sa=p.sa, bits=p.bits, k_dim=k_local)
 
 
-def _pl_spec(wp_spec: P, scale_spec: P, p: PackedLinear) -> PackedLinear:
-    """Spec tree node mirroring a PackedLinear (data fields hold specs)."""
-    return PackedLinear(wp=wp_spec, scale=scale_spec, sa=P(), bits=p.bits,
-                        k_dim=p.k_dim)
+def _pl_spec(kind: str, axis: str, p: PackedLinear) -> PackedLinear:
+    """Spec tree node mirroring a PackedLinear (data fields hold specs).
+
+    Specs count from the TRAILING axes so bucketed (leading layer-stack)
+    leaves get the same sharding with a leading None prepended.
+    """
+    def lead(arr, *tail):
+        nd = getattr(arr, "ndim", 0)
+        return P(*(((None,) * (nd - len(tail))) + tail)) if tail else \
+            P(*((None,) * nd))
+
+    if kind == "col":       # wp (..., Kp, N) shards N; scales shard with it
+        return PackedLinear(wp=lead(p.wp, None, axis),
+                            scale=lead(p.scale, axis), sa=lead(p.sa),
+                            bits=p.bits, k_dim=p.k_dim)
+    if kind == "row":       # wp (..., Kp, N) shards the packed K slabs
+        return PackedLinear(wp=lead(p.wp, axis, None),
+                            scale=lead(p.scale), sa=lead(p.sa),
+                            bits=p.bits, k_dim=p.k_dim)
+    return PackedLinear(wp=lead(p.wp), scale=lead(p.scale), sa=lead(p.sa),
+                        bits=p.bits, k_dim=p.k_dim)
 
 
 def shard_packed_params(pparams: dict, cfg, n_shards: int,
@@ -226,11 +294,15 @@ def shard_packed_params(pparams: dict, cfg, n_shards: int,
     def walk(node, name):
         if isinstance(node, PackedLinear):
             if name in _COLUMN_PARALLEL:
-                return node, _pl_spec(P(None, axis), P(axis), node)
+                return node, _pl_spec("col", axis, node)
             if name in _ROW_PARALLEL:
                 local = _shard_row_packed(node, n_shards)
-                return local, _pl_spec(P(axis, None), P(None), local)
-            return node, _pl_spec(P(None, None), P(None), node)  # router etc.
+                return local, _pl_spec("row", axis, local)
+            return node, _pl_spec("repl", axis, node)      # router etc.
+        if isinstance(node, LayerBuckets):
+            pairs = [walk(b, name) for b in node.buckets]
+            return (LayerBuckets(tuple(v[0] for v in pairs), node.sizes),
+                    LayerBuckets(tuple(v[1] for v in pairs), node.sizes))
         if isinstance(node, dict):
             pairs = {k: walk(v, k) for k, v in node.items()}
             return ({k: v[0] for k, v in pairs.items()},

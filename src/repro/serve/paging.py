@@ -56,7 +56,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import kv_quant as kvq
+from repro.models import layout as layout_mod
 from repro.models import transformer as tf
+from repro.models.layout import LayerBuckets
 
 
 @jax.tree_util.register_dataclass
@@ -80,12 +82,13 @@ def is_paged_leaf(node) -> bool:
 
 def init_paged_cache(cfg, batch: int, max_seq: int, n_pages: int,
                      page_size: int, dtype=None,
-                     cache_bits=None) -> PagedServeCache:
+                     cache_bits=None, plan=None) -> PagedServeCache:
     """Fresh pools + an all-zeros block table (slot 0's convention is
-    harmless: unmapped entries are never read)."""
+    harmless: unmapped entries are never read).  ``plan`` pins the
+    pattern layout (bucket sizes / 'unrolled' — transformer.init_caches)."""
     layers = tf.init_caches(cfg, batch, max_seq, cache_dtype=dtype,
                             cache_bits=cache_bits,
-                            page_geom=(n_pages, page_size))
+                            page_geom=(n_pages, page_size), plan=plan)
     max_pages = kvq.page_count(max_seq, page_size)
     # -1 everywhere: a never-admitted slot must hold only the unmapped
     # sentinel — its inactive-decode writes are pinned to pos == max_seq,
@@ -100,10 +103,17 @@ def init_paged_cache(cfg, batch: int, max_seq: int, n_pages: int,
 
 # ----------------------------------------------------- table injection
 def _walk(node, fn):
-    """Apply ``fn(leaf_dict, stacked)`` to every paged cache leaf dict."""
+    """Apply ``fn(leaf_dict, stacked)`` to every paged cache leaf dict.
+
+    A bucketed cache (models/layout.LayerBuckets) recurses per bucket —
+    each bucket is an ordinary stacked subtree (pools lead with the run
+    length, so the ndim==5 stacked test holds per bucket)."""
     if is_paged_leaf(node):
         pool = node.get("pk", node.get("pkq"))
         return fn(node, pool.ndim == 5)
+    if isinstance(node, LayerBuckets):
+        return LayerBuckets(tuple(_walk(b, fn) for b in node.buckets),
+                            node.sizes)
     if isinstance(node, dict):
         return {k: _walk(v, fn) for k, v in node.items()}
     if isinstance(node, (list, tuple)):
@@ -391,6 +401,22 @@ def _walk_with(node, got, fn):
     if is_paged_leaf(node):
         pool = node.get("pk", node.get("pkq"))
         return fn(node, got, pool.ndim == 5)
+    if isinstance(node, LayerBuckets):
+        if isinstance(got, LayerBuckets):
+            if got.sizes != node.sizes:
+                raise ValueError(
+                    f"paged _walk_with: prefill buckets {got.sizes} vs "
+                    f"cache buckets {node.sizes} — plans must share "
+                    "boundaries")
+            parts = [_walk_with(t, g, fn)
+                     for t, g in zip(node.buckets, got.buckets)]
+        else:
+            # bucketed pools consume a stacked prefill tree one
+            # leading-axis run at a time (same rule as quantize_like)
+            parts = [_walk_with(t, layout_mod.slice_stacked(got, s, m), fn)
+                     for t, s, m in zip(node.buckets, node.starts,
+                                        node.sizes)]
+        return LayerBuckets(tuple(parts), node.sizes)
     if isinstance(node, dict):
         return {k: _walk_with(v, got[k], fn) for k, v in node.items()}
     if isinstance(node, (list, tuple)):
@@ -405,6 +431,11 @@ def _walk_paths(node, path, fn):
     if is_paged_leaf(node):
         pool = node.get("pk", node.get("pkq"))
         return fn(path, node, pool.ndim == 5)
+    if isinstance(node, LayerBuckets):
+        return LayerBuckets(
+            tuple(_walk_paths(b, path + (("bucket", i),), fn)
+                  for i, b in enumerate(node.buckets)),
+            node.sizes)
     if isinstance(node, dict):
         return {k: _walk_paths(v, path + (k,), fn) for k, v in node.items()}
     if isinstance(node, (list, tuple)):

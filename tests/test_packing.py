@@ -13,6 +13,7 @@ import pytest
 from repro import configs
 from repro.core import knapsack, quant
 from repro.core.quant import PackedLinear
+from repro.models.layout import LayerBuckets
 from repro.kernels import ops
 from repro.models import transformer as tf
 from repro.serve import (bf16_resident_weight_bytes, pack_params,
@@ -124,15 +125,24 @@ def _packed_leaves(tree):
 def test_pack_params_layout(packed_smoke):
     cfg, params, policy, pparams = packed_smoke
     assert params_are_packed(pparams)
-    assert isinstance(pparams["pat"], list) and \
-        len(pparams["pat"]) == cfg.n_repeats
+    # default layout is BUCKETED: LayerBuckets whose sizes cover the stack
+    assert isinstance(pparams["pat"], LayerBuckets)
+    assert sum(pparams["pat"].sizes) == cfg.n_repeats
+    # legacy opt-out still emits the per-layer python list
+    unrolled = pack_params(params, policy.apply_selection(
+        knapsack.select_for_budget(
+            policy, knapsack.synthetic_gains(policy),
+            budget_frac=0.7).take).as_arrays(), cfg, layout="unrolled")
+    assert isinstance(unrolled["pat"], list) and \
+        len(unrolled["pat"]) == cfg.n_repeats
     assert pparams["embed"]["wq"].dtype == jnp.int8   # pinned 8-bit edge
     leaves = _packed_leaves(pparams)
     assert {p.bits for p in leaves} <= {2, 4, 8}
     assert {p.bits for p in leaves} >= {2, 4}         # genuinely mixed
     for p in leaves:
         assert p.wp.dtype == (jnp.int8 if p.bits == 8 else jnp.uint8)
-        assert p.scale.shape == (p.n_dim,)            # per-output-channel
+        assert p.scale.shape[-1] == p.n_dim           # per-output-channel
+        assert p.scale.ndim in (1, 2)   # (n,) unrolled / (m, n) bucketed
 
 
 @pytest.mark.parametrize("bits", [4, 2])
@@ -141,6 +151,9 @@ def test_ref_vs_pallas_on_packed_buffers(rng, packed_smoke, bits):
     on the buffers pack_params actually emits — not synthetic codes."""
     cfg, params, policy, pparams = packed_smoke
     p = next(pl for pl in _packed_leaves(pparams) if pl.bits == bits)
+    if p.wp.ndim == 3:          # bucketed layer stack: take one layer
+        p = PackedLinear(wp=p.wp[0], scale=p.scale[0], sa=p.sa[0],
+                         bits=p.bits, k_dim=p.k_dim)
     x = jnp.asarray(rng.normal(size=(128, p.k_dim)), jnp.bfloat16)
     got = np.asarray(ops.packed_matmul(x, p, impl="interpret"), np.float32)
     want = np.asarray(ops.packed_matmul(x, p, impl="ref"), np.float32)
@@ -202,8 +215,9 @@ def test_shard_packed_params_specs(packed_smoke):
     cfg, params, policy, pparams = packed_smoke
     n = 2
     assert tp_shardable(cfg, n) is None
-    tree, specs = shard_packed_params(
-        pack_params(params, policy.uniform(4.0).as_arrays(), cfg), cfg, n)
+    p4 = pack_params(params, policy.uniform(4.0).as_arrays(), cfg,
+                     layout="unrolled")
+    tree, specs = shard_packed_params(p4, cfg, n)
     assert jax.tree.structure(tree) == jax.tree.structure(specs)
     blk = tree["pat"][0]["p0"]
     sblk = specs["pat"][0]["p0"]
@@ -212,12 +226,27 @@ def test_shard_packed_params_specs(packed_smoke):
     assert sblk["attn"]["wo"].wp == P("model", None)
     assert sblk["attn"]["wo"].scale == P(None)
     assert blk["attn"]["wo"].k_dim == \
-        pparams["pat"][0]["p0"]["attn"]["wo"].k_dim // n   # local K
+        p4["pat"][0]["p0"]["attn"]["wo"].k_dim // n   # local K
     assert sblk["mlp"]["up"].wp == P(None, "model")
     assert sblk["mlp"]["down"].wp == P("model", None)
     assert specs["embed"]["wq"] == P(None, None)     # edges replicate
     with pytest.raises(ValueError, match="shardable"):
         shard_packed_params(tree, cfg, 3)            # 4 heads % 3 != 0
+
+    # BUCKETED layout: same specs with a leading layer-stack None, spec
+    # tree still mirrors the params treedef (LayerBuckets of spec trees).
+    btree, bspecs = shard_packed_params(
+        pack_params(params, policy.uniform(4.0).as_arrays(), cfg), cfg, n)
+    assert jax.tree.structure(btree) == jax.tree.structure(bspecs)
+    assert isinstance(btree["pat"], LayerBuckets)
+    bb = btree["pat"].buckets[0]["p0"]
+    sb = bspecs["pat"].buckets[0]["p0"]
+    assert sb["attn"]["wq"].wp == P(None, None, "model")
+    assert sb["attn"]["wq"].scale == P(None, "model")
+    assert sb["attn"]["wo"].wp == P(None, "model", None)
+    assert sb["attn"]["wo"].scale == P(None, None)
+    assert bb["attn"]["wo"].k_dim == \
+        p4["pat"][0]["p0"]["attn"]["wo"].k_dim // n   # local K
 
 
 def test_decode_weight_view_bit_exact(packed_smoke):
@@ -236,6 +265,9 @@ def test_decode_weight_view_bit_exact(packed_smoke):
         elif isinstance(node, dict):
             for k in sorted(node):
                 collect(node[k])
+        elif isinstance(node, LayerBuckets):
+            for b in node.buckets:
+                collect(b)
         elif isinstance(node, (list, tuple)):
             for v in node:
                 collect(v)

@@ -8,6 +8,7 @@ import pytest
 from repro import configs
 from repro.core import knapsack
 from repro.models import transformer as tf
+from repro.models.layout import LayerBuckets
 from repro.parallel.context import local_context
 from repro.serve import (ContinuousBatchingScheduler, Request, SamplerConfig,
                          ServeEngine, kv_cache, pack_params,
@@ -176,7 +177,7 @@ def test_packed_engine_parity_uniform_int4(setup):
 
 def test_packed_engine_parity_mixed_knapsack(setup):
     """Packed parity under a REAL mixed 4/2-bit knapsack policy (per-layer
-    packed shapes force the unrolled serving path)."""
+    packed shapes split the stack into multiple buckets)."""
     cfg, ctx, params, policy, pa, qparams = setup
     mixed = policy.apply_selection(knapsack.select_for_budget(
         policy, knapsack.synthetic_gains(policy), budget_frac=0.7).take)
@@ -415,17 +416,18 @@ def test_quantized_cache_byte_reduction(setup, qcache_engines):
 
 def test_quantized_cache_mixed_per_layer_bits(setup):
     """Per-layer cache bits (policy cache_bits_arrays shape): layer 0 int8,
-    layer 1 packed-int4 -> per-layer LIST caches, python-unrolled decode;
-    generation works, matches ITS OWN stepwise oracle, and the bytes land
-    between the uniform layouts."""
+    layer 1 packed-int4 -> BUCKETED caches (one bucket per cache-bit run),
+    scan-per-bucket decode; generation works, matches ITS OWN stepwise
+    oracle, and the bytes land between the uniform layouts."""
     cfg, ctx, params, policy, pa, qparams = setup
     e_mix = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx,
                         max_seq=64, cache="quantized",
                         cache_bits={"pat0": [8.0, 4.0]})
     c = e_mix.new_cache(2)
-    assert isinstance(c.layers["pat"], list)
-    assert c.layers["pat"][0]["p0"]["kq"].dtype == jnp.int8
-    assert c.layers["pat"][1]["p0"]["kq"].dtype == jnp.uint8
+    assert isinstance(c.layers["pat"], LayerBuckets)
+    assert c.layers["pat"].sizes == (1, 1)
+    assert c.layers["pat"].buckets[0]["p0"]["kq"].dtype == jnp.int8
+    assert c.layers["pat"].buckets[1]["p0"]["kq"].dtype == jnp.uint8
     rng = np.random.default_rng(23)
     prompt = rng.integers(0, cfg.vocab, (1, 10)).astype(np.int32)
     got = np.asarray(e_mix.generate(jnp.asarray(prompt), n_new=8))
@@ -447,9 +449,9 @@ def test_quantized_cache_16_passthrough_layer(setup):
                     max_seq=64, cache="quantized",
                     cache_bits={"pat0": [16.0, 8.0]})
     c = e.new_cache(1)
-    assert sorted(c.layers["pat"][0]["p0"]) == ["k", "v"]
-    assert sorted(c.layers["pat"][1]["p0"]) == ["k_scale", "kq",
-                                                "v_scale", "vq"]
+    assert sorted(c.layers["pat"].buckets[0]["p0"]) == ["k", "v"]
+    assert sorted(c.layers["pat"].buckets[1]["p0"]) == ["k_scale", "kq",
+                                                        "v_scale", "vq"]
     rng = np.random.default_rng(24)
     prompt = rng.integers(0, cfg.vocab, (1, 8)).astype(np.int32)
     got = np.asarray(e.generate(jnp.asarray(prompt), n_new=6))
@@ -980,3 +982,164 @@ def test_scheduler_admissions_draw_distinct_first_tokens(setup):
     res = serve_all(engine, reqs, n_slots=2)
     firsts = {res[f"s{i}"].tokens[0] for i in range(6)}
     assert len(firsts) > 1, firsts
+
+
+# ------------------------------------- bucketed vs unrolled parity ladder
+# Differential ladder for the BUCKETED layout (models/layout.LayerBuckets,
+# the pack_params default): every rung pins token-for-token equality
+# between the scan-per-bucket drivers and the python-unrolled reference
+# layout over the SAME quantized buffers.  The unrolled side slices one
+# layer at a time in plain python, so it is the semantics oracle; any
+# stacking/slicing mistake in the bucketed drivers breaks greedy argmax
+# within a few tokens.
+
+def _bucket_pair(setup, arr, cache_layout, cache_bits=None):
+    """(bucketed engine, unrolled engine) over identical packed weights."""
+    cfg, ctx, params, _policy, _pa, _q = setup
+    pa = jax.tree.map(jnp.asarray, arr)
+    kw = dict(cfg=cfg, policy_arrays=pa, ctx=ctx, max_seq=64,
+              weights="packed", cache_layout=cache_layout)
+    if cache_bits is not None:
+        kw.update(cache="quantized", cache_bits=cache_bits)
+    eb = ServeEngine(params=pack_params(params, arr, cfg,
+                                        cache_bits=cache_bits), **kw)
+    eu = ServeEngine(params=pack_params(params, arr, cfg,
+                                        layout="unrolled"), **kw)
+    assert isinstance(eb.params["pat"], LayerBuckets)
+    assert isinstance(eu.params["pat"], list)
+    return eb, eu
+
+
+@pytest.mark.parametrize("cache_layout", ["contiguous", "paged"])
+def test_bucketed_vs_unrolled_uniform_int4(setup, cache_layout):
+    """Uniform policy -> ONE bucket spanning the stack (the old stacked
+    fast path, now expressed as a single scan)."""
+    cfg, ctx, params, policy, pa, _ = setup
+    eb, eu = _bucket_pair(setup, policy.as_arrays(), cache_layout)
+    assert eb.params["pat"].sizes == (cfg.n_repeats,)
+    rng = np.random.default_rng(41)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab, (2, 12)), jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(eb.generate(prompt, n_new=16)),
+        np.asarray(eu.generate(prompt, n_new=16)))
+
+
+@pytest.mark.parametrize("cache_layout", ["contiguous", "paged"])
+def test_bucketed_vs_unrolled_mixed_knapsack(setup, cache_layout):
+    """REAL knapsack-mixed 4/2-bit weights: per-layer packed shapes differ,
+    so the plan has >1 bucket and the boundary crossing must be exact."""
+    cfg, ctx, params, policy, pa, _ = setup
+    mixed = policy.apply_selection(knapsack.select_for_budget(
+        policy, knapsack.synthetic_gains(policy), budget_frac=0.7).take)
+    bits = [mixed.bits_of(u.name) for u in policy.selectable_units()]
+    assert 2.0 in bits and 4.0 in bits
+    eb, eu = _bucket_pair(setup, mixed.as_arrays(), cache_layout)
+    assert len(eb.params["pat"].sizes) > 1
+    rng = np.random.default_rng(42)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab, (2, 12)), jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(eb.generate(prompt, n_new=16)),
+        np.asarray(eu.generate(prompt, n_new=16)))
+
+
+@pytest.mark.parametrize("cache_layout", ["contiguous", "paged"])
+def test_bucketed_vs_unrolled_mixed_cache_bits(setup, cache_layout):
+    """Mixed int8/int4 KV cache rides the same buckets as the weights:
+    pack_params(cache_bits=...) computes the JOINT plan, and the engine's
+    construction-time validation accepts it."""
+    cfg, ctx, params, policy, pa, _ = setup
+    mixed = policy.apply_selection(knapsack.select_for_budget(
+        policy, knapsack.synthetic_gains(policy), budget_frac=0.7).take)
+    cb = {"pat0": [8.0, 4.0]}
+    eb, eu = _bucket_pair(setup, mixed.as_arrays(), cache_layout,
+                          cache_bits=cb)
+    c = eb.new_cache(1)
+    assert isinstance(c.layers["pat"], LayerBuckets)
+    rng = np.random.default_rng(43)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab, (2, 12)), jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(eb.generate(prompt, n_new=16)),
+        np.asarray(eu.generate(prompt, n_new=16)))
+
+
+def test_bucketed_vs_unrolled_moe_per_expert_bits():
+    """MoE per-expert mixed bits: the expert-bank bit ROW is part of the
+    bucket signature, so banks stack only across layers with identical
+    per-expert assignments."""
+    cfg = configs.get_config("dbrx-132b").smoke()
+    ctx = local_context()
+    params = tf.init_params(cfg, jax.random.PRNGKey(1))
+    policy = tf.build_policy(cfg)
+    mixed = policy.apply_selection(knapsack.select_for_budget(
+        policy, knapsack.synthetic_gains(policy), budget_frac=0.6).take)
+    arr = mixed.as_arrays()
+    pa = jax.tree.map(jnp.asarray, arr)
+    eb = ServeEngine(cfg=cfg, params=pack_params(params, arr, cfg),
+                     policy_arrays=pa, ctx=ctx, max_seq=40,
+                     weights="packed")
+    eu = ServeEngine(cfg=cfg,
+                     params=pack_params(params, arr, cfg,
+                                        layout="unrolled"),
+                     policy_arrays=pa, ctx=ctx, max_seq=40,
+                     weights="packed")
+    rng = np.random.default_rng(44)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab, (1, 10)), jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(eb.generate(prompt, n_new=8)),
+        np.asarray(eu.generate(prompt, n_new=8)))
+
+
+def test_bucketed_scheduler_admit_evict_readmit(setup):
+    """Continuous batching over the bucketed engine (mixed weights AND
+    mixed cache bits): eviction frees the slot, the next request
+    re-admits into it, and every request matches a solo run of the
+    UNROLLED engine."""
+    cfg, ctx, params, policy, pa, _ = setup
+    mixed = policy.apply_selection(knapsack.select_for_budget(
+        policy, knapsack.synthetic_gains(policy), budget_frac=0.7).take)
+    eb, eu = _bucket_pair(setup, mixed.as_arrays(), "contiguous",
+                          cache_bits={"pat0": [8.0, 4.0]})
+    rng = np.random.default_rng(45)
+    long_p = rng.integers(0, cfg.vocab, 15).tolist()
+    short_p = rng.integers(0, cfg.vocab, 7).tolist()
+    reqs = [Request(uid="a", prompt=long_p, max_new_tokens=6),
+            Request(uid="b", prompt=short_p, max_new_tokens=8)]
+    res = serve_all(eb, reqs, n_slots=1)
+    for uid, p, n in (("a", long_p, 6), ("b", short_p, 8)):
+        solo = np.asarray(eu.generate(jnp.asarray([p], jnp.int32), n_new=n))
+        assert res[uid].tokens == solo[0].tolist(), uid
+
+
+@pytest.mark.parametrize("cache_layout", ["contiguous", "paged"])
+def test_bucketed_deep_multibucket_parity(cache_layout):
+    """Depth 6 with hand-mixed weight bits 4/4/4/2/2/2 and cache bits
+    8/8/4/4/4/4: joint plan (2, 1, 3) — a weight-only boundary, a
+    cache-only boundary, and scans of length > 1 on both sides."""
+    import dataclasses
+    cfg = dataclasses.replace(configs.get_config("olmo-1b").smoke(),
+                              n_repeats=6)
+    ctx = local_context()
+    params = tf.init_params(cfg, jax.random.PRNGKey(2))
+    policy = tf.build_policy(cfg)
+    arr = policy.as_arrays()
+    for g, slots in arr.items():
+        if g.startswith("pat"):
+            for s, v in slots.items():
+                v = np.asarray(v, np.float32).copy()
+                v[:3], v[3:] = 4.0, 2.0
+                slots[s] = v
+    cb = {"pat0": [8.0, 8.0, 4.0, 4.0, 4.0, 4.0]}
+    pa = jax.tree.map(jnp.asarray, arr)
+    kw = dict(cfg=cfg, policy_arrays=pa, ctx=ctx, max_seq=64,
+              weights="packed", cache="quantized", cache_bits=cb,
+              cache_layout=cache_layout)
+    eb = ServeEngine(params=pack_params(params, arr, cfg, cache_bits=cb),
+                     **kw)
+    eu = ServeEngine(params=pack_params(params, arr, cfg,
+                                        layout="unrolled"), **kw)
+    assert eb.params["pat"].sizes == (2, 1, 3)
+    rng = np.random.default_rng(46)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab, (2, 11)), jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(eb.generate(prompt, n_new=12)),
+        np.asarray(eu.generate(prompt, n_new=12)))

@@ -1,0 +1,216 @@
+"""Pattern layout resolution + bucket planning (models/layout.py,
+core/policy.bucket_plan, transformer.apply drivers).
+
+The regression this file pins: transformer.apply used to infer the
+repeat-pattern layout from two INDEPENDENT isinstance checks (params
+list? caches list?).  A mismatched pair — e.g. per-layer list params
+with a stacked cache — silently zipped layer 0's weights against every
+layer's cache rows instead of raising.  ``layout.resolve_pattern`` is
+now the single validated source of truth; every cell of its
+params x cache matrix is pinned here, the incompatible cells as LOUD
+ValueErrors.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import policy as policy_mod
+from repro.models import layout, transformer as tf
+from repro.models.layout import LayerBuckets
+from repro.parallel.context import local_context
+from repro.serve import pack_params
+
+N = 4  # pattern depth for the synthetic matrix cases
+
+
+def _stacked(n=N):
+    return {"p0": {"w": jnp.zeros((n, 3))}}
+
+
+def _unrolled(n=N):
+    return [{"p0": {"w": jnp.zeros((3,))}} for _ in range(n)]
+
+
+def _bucketed(sizes=(1, 3)):
+    return LayerBuckets(tuple({"p0": {"w": jnp.zeros((m, 3))}}
+                              for m in sizes), tuple(sizes))
+
+
+# ------------------------------------------------- resolve_pattern matrix
+@pytest.mark.parametrize("params,cache,kind,sizes", [
+    (_stacked(), None, "stacked", None),
+    (_stacked(), _stacked(), "stacked", None),
+    (_stacked(), _bucketed(), "bucketed", (1, 3)),     # fake-quant + mixed KV
+    (_stacked(), _unrolled(), "unrolled", None),       # legacy oracle
+    (_bucketed(), None, "bucketed", (1, 3)),
+    (_bucketed(), _stacked(), "bucketed", (1, 3)),
+    (_bucketed(), _bucketed(), "bucketed", (1, 3)),
+    (_unrolled(), None, "unrolled", None),
+    (_unrolled(), _unrolled(), "unrolled", None),
+])
+def test_resolve_pattern_compatible_cells(params, cache, kind, sizes):
+    lay = layout.resolve_pattern(params, cache, N)
+    assert lay.kind == kind
+    if sizes is not None:
+        assert lay.sizes == sizes
+
+
+@pytest.mark.parametrize("params,cache,match", [
+    (_bucketed(), _unrolled(), "LIST"),            # bucketed x list
+    (_bucketed(), _bucketed((2, 2)), "bucket"),    # mismatched boundaries
+    (_unrolled(), _stacked(), "layout"),           # THE old silent footgun
+    (_unrolled(), _bucketed(), "layout"),
+    (None, None, "params"),
+    (_unrolled(N - 1), None, "4"),                 # wrong list length
+    (_stacked(N - 1), None, "4"),                  # wrong leading axis
+    (_bucketed((1, 2)), None, "sum"),              # bucket sizes sum != N
+])
+def test_resolve_pattern_incompatible_cells_raise(params, cache, match):
+    with pytest.raises(ValueError, match=match):
+        layout.resolve_pattern(params, cache, N)
+
+
+def test_layout_footgun_loud_through_apply():
+    """End-to-end regression for the silent-zip footgun: per-layer list
+    params + a stacked cache must raise, not decode layer 0's weights
+    against every cache row."""
+    cfg = configs.get_config("olmo-1b").smoke()
+    ctx = local_context()
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    policy = tf.build_policy(cfg)
+    pa = jax.tree.map(jnp.asarray, policy.as_arrays())
+    punrolled = pack_params(params, policy.as_arrays(), cfg,
+                            layout="unrolled")
+    stacked_cache = tf.init_caches(cfg, 1, 16)["pat"]
+    tok = jnp.zeros((1, 1), jnp.int32)
+    with pytest.raises(ValueError, match="layout"):
+        tf.apply(punrolled, pa, {"tokens": tok}, cfg, ctx, mode="decode",
+                 caches={"pat": stacked_cache},
+                 positions=jnp.zeros((1, 1), jnp.int32))
+
+
+def test_layer_buckets_validation():
+    with pytest.raises(ValueError):
+        LayerBuckets((_stacked(2),), (2, 3))   # len(buckets) != len(sizes)
+    lb = _bucketed((2, 2))
+    assert lb.n_layers == 4 and lb.starts == (0, 2)
+    # registered pytree: structural map keeps sizes as static metadata
+    doubled = jax.tree.map(lambda a: a * 2, lb)
+    assert isinstance(doubled, LayerBuckets) and doubled.sizes == (2, 2)
+
+
+def test_slice_stacked_and_from_stacked_roundtrip():
+    tree = _stacked(6)
+    lb = layout.from_stacked(tree, (2, 1, 3))
+    assert [b["p0"]["w"].shape[0] for b in lb.buckets] == [2, 1, 3]
+    back = jnp.concatenate([b["p0"]["w"] for b in lb.buckets])
+    np.testing.assert_array_equal(np.asarray(back),
+                                  np.asarray(tree["p0"]["w"]))
+
+
+# ------------------------------------------------------- bucket_plan units
+def test_bucket_plan_maximal_contiguous_runs():
+    arr = {"pat0": {"w": np.array([4, 4, 2, 2, 4], np.float32)}}
+    plan = policy_mod.bucket_plan(arr)
+    # same signature recurring NON-contiguously starts a new bucket
+    assert plan.sizes == (2, 2, 1)
+    assert plan.signatures[0] == plan.signatures[2]
+    assert plan.n_layers == 5 and plan.starts == (0, 2, 4)
+
+
+def test_bucket_plan_joint_weight_cache_boundaries():
+    arr = {"pat0": {"w": np.array([4, 4, 4, 2, 2, 2], np.float32)}}
+    cb = {"pat0": np.array([8, 8, 4, 4, 4, 4], np.float32)}
+    assert policy_mod.bucket_plan(arr).sizes == (3, 3)
+    assert policy_mod.bucket_plan(None, cb).sizes == (2, 4)
+    assert policy_mod.bucket_plan(arr, cb).sizes == (2, 1, 3)  # union
+    # scalar cache bits contribute no boundaries
+    assert policy_mod.bucket_plan(arr, 8).sizes == (3, 3)
+
+
+def test_bucket_plan_per_expert_rows_enter_signature():
+    arr = {"pat0": {"moe": np.array([[4, 2], [4, 2], [2, 4]], np.float32)}}
+    plan = policy_mod.bucket_plan(arr)
+    # layers 0-1 share the (4,2) expert-bank row; layer 2 permutes it
+    assert plan.sizes == (2, 1)
+
+
+def test_bucket_plan_depth_only_and_errors():
+    assert policy_mod.bucket_plan(n_layers=7).sizes == (7,)
+    with pytest.raises(ValueError, match="n_layers"):
+        policy_mod.bucket_plan()
+    with pytest.raises(ValueError, match="expected"):
+        policy_mod.bucket_plan(
+            {"pat0": {"a": np.zeros(3), "b": np.zeros(4)}})
+    with pytest.raises(ValueError, match="expected"):
+        policy_mod.bucket_plan({"pat0": {"a": np.zeros(3)}},
+                               {"pat0": np.zeros(4)})
+
+
+def test_policy_bucket_plan_and_describe():
+    cfg = configs.get_config("olmo-1b").smoke()
+    policy = tf.build_policy(cfg)
+    plan = policy.bucket_plan()
+    assert plan.sizes == (cfg.n_repeats,)      # uniform -> one bucket
+    text = plan.describe()
+    assert f"x{cfg.n_repeats}" in text and "layers" in text
+
+
+# ------------------------------------- apply-level differential parity
+def test_apply_prefill_logits_bucketed_vs_unrolled():
+    """Same packed buffers, two layouts, identical prefill logits."""
+    cfg = dataclasses.replace(configs.get_config("olmo-1b").smoke(),
+                              n_repeats=6)
+    ctx = local_context()
+    params = tf.init_params(cfg, jax.random.PRNGKey(3))
+    policy = tf.build_policy(cfg)
+    arr = policy.as_arrays()
+    for g, slots in arr.items():        # force a 3-bucket mixed policy
+        if g.startswith("pat"):
+            for s, v in slots.items():
+                v = np.asarray(v, np.float32).copy()
+                v[:2], v[2:] = 4.0, 2.0
+                slots[s] = v
+    pa = jax.tree.map(jnp.asarray, arr)
+    pb = pack_params(params, arr, cfg)
+    pu = pack_params(params, arr, cfg, layout="unrolled")
+    toks = jnp.asarray(
+        np.random.default_rng(5).integers(0, cfg.vocab, (2, 9)), jnp.int32)
+    lb, cb_, _ = tf.apply(pb, pa, {"tokens": toks}, cfg, ctx,
+                          mode="prefill")
+    lu, cu, _ = tf.apply(pu, pa, {"tokens": toks}, cfg, ctx,
+                         mode="prefill")
+    np.testing.assert_array_equal(np.asarray(lb), np.asarray(lu))
+    # the bucketed prefill cache mirrors the params' bucket structure;
+    # the unrolled driver keeps emitting a stacked prefill tree (full
+    # dtype, uniform shapes) that splice/quantize_like consume per layer
+    assert isinstance(cb_["pat"], LayerBuckets)
+    assert isinstance(cu["pat"], dict)
+
+
+def test_init_caches_plan_contract():
+    cfg = dataclasses.replace(configs.get_config("olmo-1b").smoke(),
+                              n_repeats=4)
+    # uniform bits, no plan -> stacked dict (unchanged fast path)
+    c = tf.init_caches(cfg, 1, 8, cache_bits=8)
+    assert isinstance(c["pat"], dict)
+    # mixed bits, no plan -> auto-bucketed by cache-bit runs
+    cb = {"pat0": [8.0, 8.0, 4.0, 4.0]}
+    c = tf.init_caches(cfg, 1, 8, cache_bits=cb)
+    assert isinstance(c["pat"], LayerBuckets) and c["pat"].sizes == (2, 2)
+    # an explicit plan refining the runs is accepted
+    c = tf.init_caches(cfg, 1, 8, cache_bits=cb, plan=(1, 1, 2))
+    assert c["pat"].sizes == (1, 1, 2)
+    # a plan whose bucket would mix cache bits is rejected
+    with pytest.raises(ValueError, match="refine"):
+        tf.init_caches(cfg, 1, 8, cache_bits=cb, plan=(3, 1))
+    # plan sizes must cover the stack
+    with pytest.raises(ValueError, match="sum"):
+        tf.init_caches(cfg, 1, 8, cache_bits=cb, plan=(2, 3))
+    # legacy escape hatch
+    c = tf.init_caches(cfg, 1, 8, cache_bits=cb, plan="unrolled")
+    assert isinstance(c["pat"], list) and len(c["pat"]) == 4
