@@ -23,8 +23,9 @@ from repro.data.synthetic import make_batch
 from repro.models import transformer as tf
 from repro.optim.adamw import AdamW
 from repro.parallel.context import local_context
-from repro.serve import (Request, ServeEngine, bf16_resident_weight_bytes,
-                         pack_params, resident_weight_bytes, serve_all)
+from repro.serve import (EngineSpec, Request, ServeEngine,
+                         bf16_resident_weight_bytes, pack_params,
+                         resident_weight_bytes, serve_all)
 from repro.train.step import init_train_state, make_train_step
 
 cfg = configs.get_config("internlm2-1.8b").smoke()
@@ -66,13 +67,15 @@ print(f"packed serving layout: {n_params/1e6:.1f}M params -> "
 
 # serve with the QUANTIZED KV cache too: int8 codes + per-channel-K /
 # per-token-V scales (policy cache bits; the knapsack can trade these
-# against weight bits under one byte budget — knapsack.select_weights_and_cache)
+# against weight bits under one byte budget — knapsack.select_weights_and_cache).
+# EngineSpec is the typed serving surface: every knob in one frozen,
+# validated spec (flat ServeEngine kwargs still work, but deprecated).
 engine = ServeEngine(cfg=cfg, params=pparams,
                      policy_arrays=jax.tree.map(jnp.asarray,
                                                 mixed.as_arrays()),
-                     ctx=ctx, max_seq=128, weights="packed",
-                     cache="quantized",
-                     cache_bits=mixed.cache_bits_arrays())
+                     ctx=ctx, max_seq=128,
+                     spec=EngineSpec(weights="packed", cache="quantized",
+                                     cache_bits=mixed.cache_bits_arrays()))
 rep = engine.residency(engine.new_cache(2))
 print(f"quantized KV cache (2 slots x 128): "
       f"{rep['resident_kv_bytes']/1e3:.0f} kB resident; decode roofline "

@@ -35,6 +35,12 @@ baseline numbers:
     slots on the mixed short-request workload, with its byte and
     hit-rate columns gated tightly (they are deterministic functions of
     the workload geometry);
+  * the speculative-decoding survey (_meta.spec) stays present: the
+    n-gram-draft config keeps its spec-vs-plain decode ratio >=
+    ``min_spec_speedup`` (1.0x — a same-run wall-clock RATIO like the
+    packed/fake-quant gate), and BOTH configs keep acceptance_rate > 0
+    (the policy-draft int2 -> mixed ratio is reported unfloored: on CPU
+    ref-path hosts a draft step costs a full model step);
   * once the baseline carries ``_meta.sharded`` (tensor-parallel serving:
     sharded tok/s + per-device resident bytes), those columns are
     REQUIRED too.
@@ -75,6 +81,19 @@ DEFAULT_GATE = {
     # purely geometric (page demand never depends on token values), so a
     # hard floor is safe on any host.
     "min_paged_reduction": 2.0,
+    # speculative decoding (_meta.spec): spec-vs-plain decode tok/s is a
+    # SAME-host SAME-run ratio (like the packed/fake-quant gate), so the
+    # n-gram config's >= 1.0 floor is safe where absolute tok/s is not —
+    # speculation that loses wall-clock on its own best workload has no
+    # reason to exist.  The policy-draft (int2 -> mixed) ratio is
+    # reported UNFLOORED: on CPU ref-path hosts a draft model step costs
+    # the same as a target step, so only acceptance > 0 is enforced
+    # (both configs — a draft that never agrees is a broken draft, not a
+    # slow one).  Acceptance columns are deterministic functions of the
+    # greedy trajectories; spec_rtol absorbs jax-version churn flipping
+    # the odd argmax.
+    "min_spec_speedup": 1.0,
+    "spec_rtol": 0.25,
 }
 
 # _meta.paging columns every bench run MUST report once the baseline has
@@ -84,6 +103,16 @@ REQUIRED_PAGING_KEYS = (
     "resident_kv_bytes_contiguous",
     "paged_residency_reduction",
     "prefix_hit_rate",
+)
+
+# _meta.spec columns every bench run MUST report (top level AND the
+# nested policy_draft config) once the baseline has the section
+REQUIRED_SPEC_KEYS = (
+    "tok_s_spec",
+    "tok_s_plain",
+    "spec_speedup",
+    "acceptance_rate",
+    "committed_per_dispatch",
 )
 
 # per-policy columns every bench run MUST report for the quantized cache —
@@ -165,6 +194,65 @@ def check(bench: dict, baseline: dict) -> list:
                          f"{base_val} (rtol {gate['bytes_rtol']})")
                 else:
                     ok(f"_meta.paging.{key} = {cur}")
+
+    # speculative-decoding survey (_meta.spec): setting columns must match
+    # exactly, acceptance columns drift within spec_rtol (deterministic
+    # greedy trajectories), tok/s gets the loose host floor; the ratio
+    # floors are hard invariants below, independent of the baseline
+    base_sp = base_meta.get("spec")
+    cur_sp = cur_meta.get("spec")
+
+    def _spec_cols(base_cfg, cur_cfg, where):
+        for key in REQUIRED_SPEC_KEYS:
+            if key not in cur_cfg:
+                fail(f"{where}.{key}: speculative column missing from "
+                     f"bench output")
+        for key, base_val in base_cfg.items():
+            if key == "policy_draft":
+                continue          # nested config, checked separately
+            cur = cur_cfg.get(key)
+            if key in ("prompt_len", "horizon", "k", "draft", "target"):
+                (ok if cur == base_val else fail)(
+                    f"{where}.{key} = {cur} vs baseline {base_val}")
+            elif key in ("acceptance_rate", "committed_per_dispatch",
+                         "rounds"):
+                if cur is None:
+                    fail(f"{where}.{key}: missing")
+                elif not _close(cur, base_val, gate["spec_rtol"]):
+                    fail(f"{where}.{key} = {cur} vs baseline {base_val} "
+                         f"(rtol {gate['spec_rtol']})")
+                else:
+                    ok(f"{where}.{key} = {cur}")
+            elif key.startswith("tok_s"):
+                floor = gate["speed_min_ratio"] * base_val
+                if (cur or 0.0) < floor:
+                    fail(f"{where}.{key} = {cur} < floor {floor:.1f} "
+                         f"({gate['speed_min_ratio']}x of baseline "
+                         f"{base_val:.1f})")
+                else:
+                    ok(f"{where}.{key} = {cur:.1f} tok/s "
+                       f"(floor {floor:.1f})")
+            elif key == "spec_speedup":
+                pass              # same-run ratio — hard-gated below,
+                                  # never compared across hosts
+            else:
+                fail(f"{where}.{key}: unrecognized baseline column — "
+                     f"extend check_bench or drop it")
+
+    if base_sp:
+        if cur_sp is None:
+            fail("_meta.spec: speculative-decoding columns missing from "
+                 "bench output")
+        else:
+            _spec_cols(base_sp, cur_sp, "_meta.spec")
+            base_pd = base_sp.get("policy_draft")
+            if base_pd:
+                cur_pd = cur_sp.get("policy_draft")
+                if cur_pd is None:
+                    fail("_meta.spec.policy_draft: missing from bench "
+                         "output")
+                else:
+                    _spec_cols(base_pd, cur_pd, "_meta.spec.policy_draft")
 
     for policy, base_row in baseline.items():
         if policy.startswith("_"):
@@ -303,6 +391,32 @@ def check(bench: dict, baseline: dict) -> list:
     else:
         ok(f"_meta.paging.paged_residency_reduction = {red:.2f}x "
            f">= {gate['min_paged_reduction']}x")
+    # hard speculative invariants, baseline or not: the n-gram config
+    # must WIN wall-clock on its own workload (same-run ratio — stable on
+    # any host), and both drafts must actually agree with the target
+    sp = cur_meta.get("spec") or {}
+    spd = sp.get("spec_speedup", 0.0)
+    if spd < gate["min_spec_speedup"]:
+        fail(f"_meta.spec.spec_speedup = {spd:.2f}x < "
+             f"{gate['min_spec_speedup']}x (n-gram speculation is losing "
+             f"wall-clock on its own best workload)")
+    else:
+        ok(f"_meta.spec.spec_speedup = {spd:.2f}x "
+           f">= {gate['min_spec_speedup']}x")
+    for where, d in (("_meta.spec", sp),
+                     ("_meta.spec.policy_draft",
+                      sp.get("policy_draft") or {})):
+        acc = d.get("acceptance_rate", 0.0)
+        if acc <= 0.0:
+            fail(f"{where}.acceptance_rate = {acc} — the draft never "
+                 f"agrees with the target (broken draft, not a slow one)")
+        else:
+            ok(f"{where}.acceptance_rate = {acc:.3f} > 0")
+    pd_ratio = (sp.get("policy_draft") or {}).get("spec_speedup")
+    if pd_ratio is not None:
+        ok(f"_meta.spec.policy_draft.spec_speedup = {pd_ratio:.2f}x "
+           f"(unfloored: CPU ref-path hosts pay a full model step per "
+           f"draft step)")
     return failures
 
 

@@ -175,13 +175,17 @@ def gather_pages(pool: jnp.ndarray, tbl: jnp.ndarray) -> jnp.ndarray:
 
 def paged_write_row(pool: jnp.ndarray, new: jnp.ndarray,
                     positions: jnp.ndarray, tbl: jnp.ndarray) -> jnp.ndarray:
-    """Write one decode-step row per slot through the block table.
+    """Write decode rows per slot through the block table.
 
-    pool: (P, page, ...); new: (B, 1, ...) — the step's row per slot;
-    positions: (B, 1) absolute LOGICAL positions; tbl: (B, n) int32.
+    pool: (P, page, ...); new: (B, S, ...) — S consecutive rows per slot
+    (S == 1 for plain decode, S == k+1 for a speculative verify dispatch);
+    positions: (B, S) absolute LOGICAL positions; tbl: (B, n) int32.
     The paged counterpart of models/attention.cache_write: logical
     position ``pos`` lands in page ``tbl[b, pos // page]`` at row
-    ``pos % page``.
+    ``pos % page``.  Distinct logical positions of live slots never
+    collide physically (each slot owns its writable pages), so the S-row
+    scatter is order-independent and bit-identical to S sequential
+    single-row writes.
 
     Writes through UNMAPPED table entries are dropped, never redirected:
     entries < 0 (the ``set_table_rows`` sentinel beyond a slot's mapped
@@ -191,17 +195,23 @@ def paged_write_row(pool: jnp.ndarray, new: jnp.ndarray,
     budget ends mid-chunk keeps scanning (and "writing") to advancing
     positions, and in the contiguous layout those overrun writes land in
     its own (B, S_max) rows; here they would land wherever a stale table
-    entry points, i.e. in ANOTHER request's page.
+    entry points, i.e. in ANOTHER request's page.  The same sentinel
+    drop guards speculative verify rows that overrun a slot's claimed
+    pages (admission claims worst-case pages, so in-budget rows always
+    have a home; rows past the budget drop exactly like decode overrun).
     """
     b, n = tbl.shape
     page = pool.shape[1]
-    pos = positions[:, 0]
+    s = positions.shape[1]
+    pos = positions.reshape(b * s)
+    rows = jnp.repeat(jnp.arange(b), s)
     page_idx = jnp.clip(pos // page, 0, n - 1)
-    phys_raw = tbl[jnp.arange(b), page_idx]
+    phys_raw = tbl[rows, page_idx]
     valid = (pos < n * page) & (phys_raw >= 0)
     phys = jnp.clip(phys_raw, 0, pool.shape[0] - 1)
     off = jnp.where(valid, pos % page, page)     # page -> dropped
-    return pool.at[phys, off].set(new[:, 0].astype(pool.dtype), mode="drop")
+    flat = new.reshape((b * s,) + new.shape[2:])
+    return pool.at[phys, off].set(flat.astype(pool.dtype), mode="drop")
 
 
 # -------------------------------------------------------- prefill handoff

@@ -72,19 +72,22 @@ def chunked_attention(q: jax.Array,
 
 def cache_write(cache_arr: jax.Array, new: jax.Array,
                 positions: jax.Array) -> jax.Array:
-    """Write one decode-step entry per request into a (B, S_max, ...) cache.
+    """Write decode-step entries per request into a (B, S_max, ...) cache.
 
-    new: (B, 1, ...) — the step's K/V row; positions: (B, 1) absolute write
-    positions, PER REQUEST (continuous batching slots requests with unequal
-    prompt lengths into one batch, so there is no shared scalar position).
-    Implemented as a batched row scatter (O(B·H·D) traffic, in-place
-    inside a scan carry) rather than a one-hot select over the whole
-    buffer; ``mode='drop'`` makes out-of-range positions (>= S_max, e.g.
-    an evicted slot that ran past its window) write nothing.
+    new: (B, S, ...) — S consecutive K/V rows per request (S == 1 for the
+    scanned decode step, S == k+1 for a speculative verify dispatch);
+    positions: (B, S) absolute write positions, PER REQUEST (continuous
+    batching slots requests with unequal prompt lengths into one batch, so
+    there is no shared scalar position).  Implemented as a batched row
+    scatter (O(B·S·H·D) traffic, in-place inside a scan carry) rather
+    than a one-hot select over the whole buffer; ``mode='drop'`` makes
+    out-of-range positions (>= S_max, e.g. an evicted slot that ran past
+    its window) write nothing.  Positions within a request are distinct,
+    so the multi-row scatter is bit-identical to S sequential writes.
     """
     b = cache_arr.shape[0]
-    return cache_arr.at[jnp.arange(b), positions[:, 0]].set(
-        new[:, 0].astype(cache_arr.dtype), mode="drop")
+    return cache_arr.at[jnp.arange(b)[:, None], positions].set(
+        new.astype(cache_arr.dtype), mode="drop")
 
 
 def _repeat_kv(x: jax.Array, group: int) -> jax.Array:
@@ -144,9 +147,26 @@ def gqa_apply(p, x, bits, cfg, mode: str, cache, positions,
         ck = kvq.paged_write_row(cache["pkq"], kq_new, positions, tbl)
         cv = kvq.paged_write_row(cache["pvq"], vq_new, positions, tbl)
         cvs = kvq.paged_write_row(cache["pv_scale"], vs_new, positions, tbl)
-        out = kops.paged_kv_cache_attention(q[:, 0], ck, cache["k_scale"],
-                                            cv, cvs, tbl, positions[:, 0],
-                                            cbits)
+        if s == 1:
+            out = kops.paged_kv_cache_attention(
+                q[:, 0], ck, cache["k_scale"], cv, cvs, tbl,
+                positions[:, 0], cbits)[:, None]
+        else:
+            # Speculative verify: S = k+1 rows per slot enter the cache in
+            # one dispatch, then each query position runs the SAME
+            # single-query kernel (vmapped over the query axis) with its
+            # own position mask — so per-position outputs are bit-exact
+            # with the sequential decode that would have produced them.
+            # The K rows quantize against the FIXED prefill-calibrated
+            # per-channel grid and V scales are per-row, so the batched
+            # write produces byte-identical codes to sequential writes.
+            # impl='ref' — a dedicated multi-query Pallas kernel is future
+            # work; off-TPU 'auto' resolves to ref anyway.
+            def _att(qi, pi):
+                return kops.paged_kv_cache_attention(
+                    qi, ck, cache["k_scale"], cv, cvs, tbl, pi, cbits,
+                    impl="ref")
+            out = jax.vmap(_att, in_axes=(1, 1), out_axes=1)(q, positions)
         out = out.astype(x.dtype).reshape(b, s, h * dh)
         y = qproj(out, p["wo"], bits["attn_wo"])
         return y, {"pkq": ck, "k_scale": cache["k_scale"],
@@ -168,13 +188,20 @@ def gqa_apply(p, x, bits, cfg, mode: str, cache, positions,
         logits = jnp.einsum("bqhd,bshd->bhqs", q.astype(jnp.float32),
                             kk.astype(jnp.float32)) * (dh ** -0.5)
         s_pos = jnp.arange(s_virt)
-        mask = s_pos[None, None, None, :] <= positions[:, None, None, :]
+        # per-query causal mask: query at positions[:, i] reads rows
+        # <= positions[:, i] — for S == 1 this is the plain decode mask,
+        # for a speculative verify dispatch (S = k+1) each draft position
+        # sees exactly the prefix a sequential decode would have seen.
+        mask = s_pos[None, None, None, :] <= positions[:, None, :, None]
         logits = jnp.where(mask, logits, -1e30)
         pr = jax.nn.softmax(logits, axis=-1)
         # zero masked V rows: their weight is exactly 0, but a poisoned
-        # free page's NaN would still smear through 0 * NaN.
+        # free page's NaN would still smear through 0 * NaN.  Zero past
+        # the LAST query position — the in-flight rows before it were
+        # just written (finite), and earlier queries give them exactly-0
+        # softmax weight, so keeping them is bit-neutral.
         vv = jnp.where(s_pos[None, :, None, None]
-                       <= positions[:, :1, None, None],
+                       <= positions[:, -1:, None, None],
                        vv.astype(jnp.float32), 0.0)
         out = jnp.einsum("bhqs,bshd->bqhd", pr, vv)
         out = out.astype(x.dtype).reshape(b, s, h * dh)
@@ -195,17 +222,34 @@ def gqa_apply(p, x, bits, cfg, mode: str, cache, positions,
         ck = cache_write(cache["kq"], kq_new, positions)
         cv = cache_write(cache["vq"], vq_new, positions)
         cvs = cache_write(cache["v_scale"], vs_new, positions)
-        out = kops.kv_cache_attention(q[:, 0], ck, cache["k_scale"],
-                                      cv, cvs, positions[:, 0], cbits)
+        if s == 1:
+            out = kops.kv_cache_attention(q[:, 0], ck, cache["k_scale"],
+                                          cv, cvs, positions[:, 0],
+                                          cbits)[:, None]
+        else:
+            # Speculative verify (S = k+1): batched writes are
+            # byte-identical to sequential writes (K quantizes against
+            # the FIXED prefill grid, V scales are per-row), and each
+            # query position vmaps the SAME single-query kernel with its
+            # own mask — bit-exact per position vs sequential decode.
+            # impl='ref': no multi-query Pallas kernel yet (future work).
+            def _att(qi, pi):
+                return kops.kv_cache_attention(qi, ck, cache["k_scale"],
+                                               cv, cvs, pi, cbits,
+                                               impl="ref")
+            out = jax.vmap(_att, in_axes=(1, 1), out_axes=1)(q, positions)
         out = out.astype(x.dtype).reshape(b, s, h * dh)
         y = qproj(out, p["wo"], bits["attn_wo"])
         return y, {"kq": ck, "k_scale": cache["k_scale"],
                    "vq": cv, "v_scale": cvs}
 
     if mode == "decode":
-        # cache: {'k','v'} (B, S_max, Hkv, dh); positions: (B, 1) abs pos,
+        # cache: {'k','v'} (B, S_max, Hkv, dh); positions: (B, S) abs pos,
         # per request (slots in a continuous batch decode at different
-        # positions).
+        # positions).  S == 1 for the scanned decode step; S == k+1 for a
+        # speculative verify dispatch, where the per-query mask below
+        # gives each draft position exactly the prefix a sequential
+        # decode would have seen.
         ck = cache_write(cache["k"], k, positions)
         cv = cache_write(cache["v"], v, positions)
         kk = _repeat_kv(ck, group)
@@ -213,7 +257,7 @@ def gqa_apply(p, x, bits, cfg, mode: str, cache, positions,
         logits = jnp.einsum("bqhd,bshd->bhqs", q.astype(jnp.float32),
                             kk.astype(jnp.float32)) * (dh ** -0.5)
         s_pos = jnp.arange(cache["k"].shape[1])
-        mask = s_pos[None, None, None, :] <= positions[:, None, None, :]
+        mask = s_pos[None, None, None, :] <= positions[:, None, :, None]
         logits = jnp.where(mask, logits, -1e30)
         pr = jax.nn.softmax(logits, axis=-1)
         out = jnp.einsum("bhqs,bshd->bqhd", pr, vv.astype(jnp.float32))
@@ -349,7 +393,8 @@ def mla_apply(p, x, bits, cfg, mode: str, cache, positions,
                   jnp.einsum("bqhr,bsr->bhqs", q_rope.astype(jnp.float32),
                              ckr.astype(jnp.float32))) * scale
         s_pos = jnp.arange(ckv.shape[1])
-        mask = s_pos[None, None, None, :] <= positions[:, None, None, :]
+        # per-query mask (S > 1 = speculative verify, same as GQA decode)
+        mask = s_pos[None, None, None, :] <= positions[:, None, :, None]
         logits = jnp.where(mask, logits, -1e30)
         pr = jax.nn.softmax(logits, axis=-1)
         o_c = jnp.einsum("bhqs,bsc->bqhc", pr, ckv.astype(jnp.float32))

@@ -18,9 +18,23 @@
   sampling.py   greedy / temperature / top-k; keys fold (admission nonce,
                 per-request token index) — scheduler-invariant
   scheduler.py  continuous batching: slot admission, per-request stop/evict
+  config.py     EngineSpec / DraftSpec: the typed, validated serving spec
+                (``ServeEngine(..., spec=EngineSpec(...))`` is the
+                primary constructor; flat kwargs are deprecated)
+  spec.py       self-speculative decoding: knapsack-frontier (or n-gram)
+                draft proposes k tokens, the target verifies them in one
+                multi-token dispatch — greedy spec == non-spec
+                token-for-token (lossless)
+
+The public serving surface is what this module exports: ``ServeEngine``,
+``EngineSpec``/``DraftSpec``, ``Request``/``Completion``/``serve_all``,
+and ``pack_params`` — examples and benches import from here, not from
+submodule paths.
 """
 from repro.serve import paging, residency
+from repro.serve.config import DraftSpec, EngineSpec
 from repro.serve.engine import ServeEngine, quantize_for_serving
+from repro.serve.spec import SpecDecoder
 from repro.serve.kv_cache import (QuantizedServeCache, ServeCache,
                                   init_cache, splice_prefill)
 from repro.serve.paging import (PageAllocator, PagedServeCache,
@@ -32,7 +46,8 @@ from repro.serve.scheduler import (Completion, ContinuousBatchingScheduler,
                                    Request, serve_all)
 
 __all__ = [
-    "ServeEngine", "quantize_for_serving",
+    "ServeEngine", "EngineSpec", "DraftSpec", "SpecDecoder",
+    "quantize_for_serving",
     "pack_params", "params_are_packed", "resident_weight_bytes",
     "bf16_resident_weight_bytes", "residency",
     "ServeCache", "QuantizedServeCache", "init_cache", "splice_prefill",

@@ -1,0 +1,192 @@
+"""EngineSpec: the one typed, validated description of a serving engine.
+
+Six PRs grew ``ServeEngine`` a flat kwarg per feature (weight layout,
+cache quantization, cache layout, paging geometry, sampling, sharding…)
+and speculative decoding adds a second engine ROLE (the draft) that would
+have doubled the sprawl.  ``EngineSpec`` consolidates every serving knob
+into a frozen dataclass with one ``validate()`` holding all cross-field
+rules, so an invalid combination fails at construction with a message —
+not deep inside a jit or as a silent admission deadlock.
+
+    engine = ServeEngine(cfg=cfg, params=params, policy_arrays=pa,
+                         ctx=ctx, max_seq=256,
+                         spec=EngineSpec(weights="packed",
+                                         cache="quantized", cache_bits=4,
+                                         draft=DraftSpec(kind="ngram", k=8)))
+
+The old flat kwargs (``ServeEngine(..., weights="packed")``) keep working
+for one release through a ``DeprecationWarning`` shim that builds the
+spec internally; passing BOTH a spec and flat kwargs is an error.
+
+``DraftSpec`` names the speculative draft role (serve/spec.py):
+
+  * ``kind="policy"`` — a second, cheaper quantized policy over the SAME
+    checkpoint (the knapsack frontier is the draft zoo: e.g. int2 packed
+    drafts for an int4/mixed target).  Carries its own serve-layout
+    ``params``/``policy_arrays``; the draft engine always runs a
+    contiguous full-dtype cache internally (it is scratch state, rolled
+    back to the committed prefix every round).
+  * ``kind="ngram"`` — model-free suffix-matching draft over each
+    request's own prompt + emitted history (no second forward at all);
+    profitable exactly on the repetitive continuations low-bit policies
+    produce.
+
+Speculation is greedy-only by construction: greedy acceptance (longest
+agreeing argmax prefix) is what makes spec == non-spec token-for-token
+(DESIGN.md §3); a stochastic sampler would need rejection-sampling
+acceptance, which is future work, so ``draft`` + a non-greedy sampler
+refuses at validation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+from repro.serve import sampling
+
+RECURRENT_MIXERS = ("mamba", "mlstm", "slstm")
+
+
+def has_recurrent_state(cfg) -> bool:
+    """True if any block carries per-token recurrent state (no sequence
+    axis, no position masking) — right-padded prompts would integrate the
+    pad tokens into that state, so such configs must prefill at the exact
+    prompt length."""
+    blocks = tuple(cfg.prefix) + tuple(cfg.pattern)
+    return any(b.mixer in RECURRENT_MIXERS for b in blocks)
+
+
+@dataclasses.dataclass(frozen=True)
+class DraftSpec:
+    """Speculative draft role (see module docstring; serve/spec.py runs it).
+
+    ``k``: draft tokens proposed per round — the verify dispatch scores
+    k+1 positions (the k proposals plus one bonus position), so one round
+    commits between 1 and k+1 tokens.
+    """
+    kind: str = "ngram"             # "policy" | "ngram"
+    k: int = 4                      # draft tokens per round
+    params: Any = None              # policy draft: serve-layout params
+    policy_arrays: Any = None       # policy draft: its policy arrays
+    weights: str = "fake_quant"     # policy draft: params layout
+    max_ngram: int = 8              # ngram draft: longest suffix matched
+
+    def validate(self) -> None:
+        if self.kind not in ("policy", "ngram"):
+            raise ValueError(f"DraftSpec.kind must be 'policy' or 'ngram', "
+                             f"got {self.kind!r}")
+        if self.k < 1:
+            raise ValueError(f"DraftSpec.k must be >= 1, got {self.k}")
+        if self.kind == "policy":
+            if self.params is None or self.policy_arrays is None:
+                raise ValueError(
+                    "DraftSpec(kind='policy') needs the draft policy's own "
+                    "serve-layout params and policy_arrays (e.g. an int2 "
+                    "point on the knapsack frontier)")
+            if self.weights not in ("fake_quant", "packed"):
+                raise ValueError(f"DraftSpec.weights must be 'fake_quant' "
+                                 f"or 'packed', got {self.weights!r}")
+        else:
+            if self.params is not None or self.policy_arrays is not None:
+                raise ValueError("DraftSpec(kind='ngram') is model-free — "
+                                 "params/policy_arrays must be None")
+            if self.max_ngram < 1:
+                raise ValueError(f"DraftSpec.max_ngram must be >= 1, "
+                                 f"got {self.max_ngram}")
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineSpec:
+    """Every ``ServeEngine`` serving knob, in one frozen validated spec.
+
+    Field semantics are unchanged from the historical flat kwargs (see
+    ServeEngine's docstring); ``draft`` is new (speculative decoding).
+    """
+    weights: str = "fake_quant"     # "fake_quant" | "packed"
+    cache: str = "full"             # "full" | "quantized"
+    cache_bits: Any = 8             # int 8/4, or {group: per-layer bits}
+    cache_layout: str = "contiguous"  # "contiguous" | "paged"
+    page_size: int = 16             # tokens per physical page (paged)
+    n_pages: Any = None             # physical pool size; None -> capacity
+                                    # parity with contiguous (B*max_pages)
+    decode_chunk: int = 16          # scanned decode steps per dispatch
+    sampler: sampling.SamplerConfig = sampling.GREEDY
+    cache_dtype: Any = None         # None -> cfg.compute_dtype
+    mesh: Any = None                # jax Mesh with a "model" axis -> TP
+    draft: Optional[DraftSpec] = None   # speculative draft role
+
+    def validate(self, cfg=None, params=None) -> None:
+        """All cross-field rules, loudly.  ``cfg``/``params`` extend the
+        check set when available (the engine passes both); knob-only
+        validation runs with neither."""
+        if self.weights not in ("fake_quant", "packed"):
+            raise ValueError(f"weights must be 'fake_quant' or 'packed', "
+                             f"got {self.weights!r}")
+        if self.cache not in ("full", "quantized"):
+            raise ValueError(f"cache must be 'full' or 'quantized', "
+                             f"got {self.cache!r}")
+        if self.cache_layout not in ("contiguous", "paged"):
+            raise ValueError(f"cache_layout must be 'contiguous' or "
+                             f"'paged', got {self.cache_layout!r}")
+        if self.decode_chunk < 1:
+            # a zero/negative scan length used to fail deep inside jit
+            raise ValueError(f"decode_chunk must be >= 1, "
+                             f"got {self.decode_chunk}")
+        if self.cache_layout == "paged":
+            if self.mesh is not None:
+                raise ValueError(
+                    "cache_layout='paged' is single-device this release; "
+                    "the page pools already carry KV-head-axis shard specs "
+                    "(parallel/sharding.serve_cache_specs) but the sharded "
+                    "decode wrapper pins the contiguous layout")
+            if self.page_size < 1:
+                raise ValueError(f"page_size must be >= 1, "
+                                 f"got {self.page_size}")
+            if self.n_pages is not None and int(self.n_pages) < 1:
+                raise ValueError(f"n_pages must be >= 1 when given, "
+                                 f"got {self.n_pages}")
+        if self.draft is not None:
+            if not isinstance(self.draft, DraftSpec):
+                raise ValueError(f"draft must be a DraftSpec, "
+                                 f"got {type(self.draft).__name__}")
+            self.draft.validate()
+            if self.sampler.kind != "greedy":
+                raise ValueError(
+                    "speculative decoding (draft=) is greedy-only: greedy "
+                    "longest-agreeing-prefix acceptance is what makes spec "
+                    "== non-spec token-for-token; rejection-sampling "
+                    "acceptance for stochastic samplers is future work")
+            if self.mesh is not None:
+                raise ValueError(
+                    "speculative decoding (draft=) does not compose with "
+                    "mesh= yet: the verify dispatch needs a sharded "
+                    "multi-token decode wrapper — run spec decode "
+                    "single-device or drop the draft")
+        if cfg is not None:
+            if self.cache_layout == "paged":
+                blocks = tuple(cfg.prefix) + tuple(cfg.pattern)
+                bad = sorted({b.mixer for b in blocks if b.mixer != "gqa"})
+                if bad or not cfg.causal:
+                    raise ValueError(
+                        f"cache_layout='paged' serves causal GQA caches "
+                        f"only (got mixers {bad or ['bidir']}): MLA's "
+                        f"latent and recurrent state have no per-token "
+                        f"page structure — serve such configs with "
+                        f"cache_layout='contiguous'")
+            if self.draft is not None and has_recurrent_state(cfg):
+                raise ValueError(
+                    "speculative decoding needs rollback-able attention "
+                    "caches; recurrent (mamba/xlstm) block state cannot "
+                    "un-integrate rejected tokens")
+        if params is not None:
+            # imported here: packing pulls in the kernel stack, which the
+            # pure-knob validation path should not need
+            from repro.serve import packing
+            is_packed = packing.params_are_packed(params)
+            if is_packed != (self.weights == "packed"):
+                have = "packed" if is_packed else "fake_quant"
+                raise ValueError(
+                    f"EngineSpec(weights={self.weights!r}) but params are "
+                    f"in the {have!r} layout — build packed params with "
+                    f"serve.packing.pack_params(checkpoint, policy_arrays, "
+                    f"cfg)")

@@ -87,6 +87,7 @@ TPU and measured by benchmarks/serve_bench.py.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -103,8 +104,13 @@ from repro.models.layout import LayerBuckets
 from repro.parallel import compat, sharding
 from repro.parallel.context import local_context
 from repro.serve import kv_cache, packing, paging, residency, sampling
+from repro.serve.config import (RECURRENT_MIXERS, DraftSpec, EngineSpec,
+                                has_recurrent_state)
 from repro.serve.kv_cache import ServeCache
 from repro.serve.paging import PagedServeCache
+
+__all__ = ["ServeEngine", "EngineSpec", "DraftSpec", "quantize_for_serving",
+           "has_recurrent_state", "RECURRENT_MIXERS"]
 
 
 def _quantize_qdense(p: dict, bits) -> dict:
@@ -167,16 +173,22 @@ def _bits_for(policy_arrays, slot_of, path) -> Any:
     return policy_arrays[group][slot]
 
 
-RECURRENT_MIXERS = ("mamba", "mlstm", "slstm")
+# RECURRENT_MIXERS / has_recurrent_state moved to serve/config.py (the
+# EngineSpec validation needs them without importing the engine); both
+# stay re-exported here for existing callers.
+
+class _Unset:
+    """Sentinel for 'flat kwarg not passed' (None is a meaningful value
+    for several knobs, so it cannot mark absence)."""
+    def __repr__(self):
+        return "<unset>"
 
 
-def has_recurrent_state(cfg) -> bool:
-    """True if any block carries per-token recurrent state (no sequence
-    axis, no position masking) — right-padded prompts would integrate the
-    pad tokens into that state, so such configs must prefill at the exact
-    prompt length."""
-    blocks = tuple(cfg.prefix) + tuple(cfg.pattern)
-    return any(b.mixer in RECURRENT_MIXERS for b in blocks)
+_UNSET = _Unset()
+# engine knobs consolidated into EngineSpec, in field order
+_SPEC_FIELDS = ("decode_chunk", "sampler", "cache_dtype", "weights",
+                "cache", "cache_bits", "mesh", "cache_layout", "page_size",
+                "n_pages")
 
 
 @dataclasses.dataclass
@@ -205,54 +217,52 @@ class ServeEngine:
     policy_arrays: Any
     ctx: Any
     max_seq: int
-    decode_chunk: int = 16
-    sampler: sampling.SamplerConfig = sampling.GREEDY
-    cache_dtype: Any = None         # None -> cfg.compute_dtype (exact parity)
-    weights: str = "fake_quant"     # "fake_quant" | "packed" (DESIGN.md §3)
-    cache: str = "full"             # "full" | "quantized" (DESIGN.md §3)
-    cache_bits: Any = 8             # int 8/4, or {group: per-layer bits}
-                                    # (PrecisionPolicy.cache_bits_arrays())
-    mesh: Any = None                # jax Mesh with a "model" axis -> TP
-    cache_layout: str = "contiguous"  # "contiguous" | "paged" (serve/paging)
-    page_size: int = 16             # tokens per physical page (paged layout)
-    n_pages: Any = None             # physical pool size; None -> capacity
-                                    # parity with contiguous (B*max_pages)
+    # serving knobs — the typed surface is ``spec=EngineSpec(...)``
+    # (serve/config.py).  The flat kwargs below are the historical
+    # surface, kept alive one release behind a DeprecationWarning shim
+    # that builds the spec; the _UNSET sentinels are how the shim tells
+    # "explicitly passed" from "defaulted" (None is meaningful for
+    # several knobs).  After __post_init__ every knob is a plain
+    # attribute again (engine.decode_chunk etc.), resolved from the spec.
+    decode_chunk: Any = _UNSET      # int, default 16
+    sampler: Any = _UNSET           # sampling.SamplerConfig, default GREEDY
+    cache_dtype: Any = _UNSET       # None -> cfg.compute_dtype (parity)
+    weights: Any = _UNSET           # "fake_quant" | "packed" (DESIGN.md §3)
+    cache: Any = _UNSET             # "full" | "quantized" (DESIGN.md §3)
+    cache_bits: Any = _UNSET        # int 8/4, or {group: per-layer bits}
+    mesh: Any = _UNSET              # jax Mesh with a "model" axis -> TP
+    cache_layout: Any = _UNSET      # "contiguous" | "paged" (serve/paging)
+    page_size: Any = _UNSET         # tokens per physical page (paged)
+    n_pages: Any = _UNSET           # pool size; None -> capacity parity
+    spec: Optional[EngineSpec] = None
 
     def __post_init__(self):
-        if self.weights not in ("fake_quant", "packed"):
-            raise ValueError(f"weights must be 'fake_quant' or 'packed', "
-                             f"got {self.weights!r}")
-        if self.cache not in ("full", "quantized"):
-            raise ValueError(f"cache must be 'full' or 'quantized', "
-                             f"got {self.cache!r}")
-        if self.cache_layout not in ("contiguous", "paged"):
-            raise ValueError(f"cache_layout must be 'contiguous' or "
-                             f"'paged', got {self.cache_layout!r}")
-        if self.cache_layout == "paged":
-            blocks = tuple(self.cfg.prefix) + tuple(self.cfg.pattern)
-            bad = sorted({b.mixer for b in blocks if b.mixer != "gqa"})
-            if bad or not self.cfg.causal:
+        flat = {name: getattr(self, name) for name in _SPEC_FIELDS}
+        given = {k: v for k, v in flat.items() if v is not _UNSET}
+        if self.spec is not None:
+            if given:
                 raise ValueError(
-                    f"cache_layout='paged' serves causal GQA caches only "
-                    f"(got mixers {bad or ['bidir']}): MLA's latent and "
-                    f"recurrent state have no per-token page structure — "
-                    f"serve such configs with cache_layout='contiguous'")
-            if self.mesh is not None:
-                raise ValueError(
-                    "cache_layout='paged' is single-device this release; "
-                    "the page pools already carry KV-head-axis shard specs "
-                    "(parallel/sharding.serve_cache_specs) but the sharded "
-                    "decode wrapper pins the contiguous layout")
-            if self.page_size < 1:
-                raise ValueError(f"page_size must be >= 1, "
-                                 f"got {self.page_size}")
-        is_packed = packing.params_are_packed(self.params)
-        if is_packed != (self.weights == "packed"):
-            have = "packed" if is_packed else "fake_quant"
-            raise ValueError(
-                f"ServeEngine(weights={self.weights!r}) but params are in "
-                f"the {have!r} layout — build packed params with "
-                f"serve.packing.pack_params(checkpoint, policy_arrays, cfg)")
+                    f"ServeEngine got both spec=EngineSpec(...) and flat "
+                    f"kwarg(s) {sorted(given)} — put every serving knob on "
+                    f"the spec")
+            if not isinstance(self.spec, EngineSpec):
+                raise ValueError(f"spec must be an EngineSpec, "
+                                 f"got {type(self.spec).__name__}")
+        else:
+            if given:
+                warnings.warn(
+                    "flat ServeEngine serving kwargs are deprecated — "
+                    "pass ServeEngine(..., spec=EngineSpec(" +
+                    ", ".join(f"{k}=..." for k in sorted(given)) + "))",
+                    DeprecationWarning, stacklevel=3)
+            self.spec = EngineSpec(**given)
+        for name in _SPEC_FIELDS:
+            setattr(self, name, getattr(self.spec, name))
+        self.draft = self.spec.draft
+        # every cross-field rule lives in EngineSpec.validate — including
+        # the checks that need cfg (paged mixer support) and params
+        # (packed-layout agreement)
+        self.spec.validate(self.cfg, self.params)
         if self.cache_dtype is None:
             self.cache_dtype = self.cfg.compute_dtype
         # The model's prefill/decode paths emit cache entries in
@@ -273,6 +283,9 @@ class ServeEngine:
             # n_steps is the scan length -> static (one compile per distinct
             # chunk size; generate uses at most two: decode_chunk + a tail)
             self._decode = jax.jit(self._decode_impl, static_argnums=(9,))
+            # speculative verify: S_v = k+1 is a SHAPE, so jit re-traces
+            # per distinct draft length (one in practice)
+            self._verify = jax.jit(self._verify_impl)
 
     def _resolve_cache_plan(self):
         """Derive the pattern-cache layout from the PARAMS layout
@@ -467,6 +480,15 @@ class ServeEngine:
         if self.cache_layout == "paged":
             n_pages = (self.n_pages if self.n_pages is not None
                        else batch * self.max_pages)
+            if int(n_pages) < batch:
+                # every slot needs at least one writable page or admission
+                # can never place it — this used to surface as a silent
+                # scheduler deadlock (submit() retries forever)
+                raise ValueError(
+                    f"n_pages={int(n_pages)} cannot back a {batch}-slot "
+                    f"batch: every slot needs >= 1 page (worst case "
+                    f"{self.max_pages}/slot at max_seq={self.max_seq}, "
+                    f"page_size={self.page_size})")
             return paging.init_paged_cache(
                 self._cfg, batch, self.max_seq, int(n_pages), self.page_size,
                 dtype=self.cache_dtype, cache_bits=bits,
@@ -605,6 +627,70 @@ class ServeEngine:
             cache = kv_cache.advance(cache, layers, steps=n_steps,
                                      active=active)
         return cache, tok, toks
+
+    # -------------------------------------------- speculative verify
+    def _verify_impl(self, params, pa, layers, lengths, tokens, active):
+        """Score S_v = k+1 positions per slot in ONE decode-mode forward.
+
+        tokens: (B, S_v) = [feed token, draft_0 .. draft_{k-1}]; row rows
+        enter the cache at positions lengths .. lengths+k (inactive slots
+        pin out of range, exactly like the decode scan), and the
+        per-query causal mask in models/attention gives position i the
+        prefix a sequential decode would have seen — so the returned
+        greedy tokens (B, S_v) are bit-exact with k+1 scanned decode
+        steps fed the same tokens (the verify parity bar, DESIGN.md §3).
+        Returns (written cache layers, greedy argmax tokens, logits).
+        """
+        if self.weights == "packed" and not kops.on_tpu():
+            params = packing.decode_weight_view(params)
+        b, s_v = tokens.shape
+        pos = lengths[:, None] + jnp.arange(s_v, dtype=jnp.int32)[None, :]
+        pos = jnp.where(active[:, None], pos, jnp.int32(self.max_seq))
+        batch = {"tokens": tokens, **self._positions_batch(pos)}
+        logits, layers, _ = tf.apply(
+            params, pa, batch, self._cfg, self.ctx,
+            mode="decode", caches=layers, positions=pos)
+        return layers, jnp.argmax(logits, axis=-1).astype(jnp.int32), logits
+
+    def verify_step(self, cache, tokens: jax.Array,
+                    active: Optional[jax.Array] = None):
+        """Speculative verify dispatch (serve/spec.py drives this).
+
+        ``tokens``: (B, k+1) — each slot's next feed token followed by
+        its k draft tokens.  All k+1 rows are WRITTEN to the cache, but
+        the cache is NOT advanced: the caller computes the accepted
+        prefix length j per slot (1 <= j <= k+1 for greedy acceptance)
+        and commits via ``commit_verified``.  Rows past the committed
+        length are stale-by-construction: contiguous reads mask on the
+        valid length, paged rows sit on the slot's own already-claimed
+        pages (admission claims worst-case pages) and overruns drop
+        through the block table's -1 sentinel — so rejection is a pure
+        length-watermark rollback, no data movement (DESIGN.md §3).
+
+        Returns (scored layers, greedy tokens (B, k+1), logits).
+        """
+        if self.mesh is not None:
+            raise ValueError("verify_step is single-device (EngineSpec "
+                             "refuses draft= + mesh=)")
+        b = cache.lengths.shape[0]
+        if active is None:
+            active = jnp.ones((b,), bool)
+        paged = isinstance(cache, PagedServeCache)
+        layers_in = (paging.with_tables(cache.layers, cache.block_tbl)
+                     if paged else cache.layers)
+        return self._verify(self.params, self.policy_arrays, layers_in,
+                            cache.lengths, tokens, active)
+
+    def commit_verified(self, cache, layers, steps,
+                        active: Optional[jax.Array] = None):
+        """Adopt a verify dispatch's cache writes: advance each slot's
+        valid length by its accepted count ``steps`` ((B,) int array; 0
+        for inactive slots).  The k+1-j rejected rows stay physically
+        written but sit past the watermark — provably unread (same
+        argument as re-admission over stale slot rows, DESIGN.md §3)."""
+        if isinstance(cache, PagedServeCache):
+            return paging.advance(cache, layers, steps=steps, active=active)
+        return kv_cache.advance(cache, layers, steps=steps, active=active)
 
     # ------------------------------------------------------------ generate
     def generate(self, tokens: jax.Array, n_new: int,

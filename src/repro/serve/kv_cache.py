@@ -169,6 +169,23 @@ def advance(cache: ServeCache, new_layers: Any, steps: int = 1,
     return ServeCache(layers=new_layers, lengths=cache.lengths + delta)
 
 
+def retract(cache: ServeCache, steps, active=None) -> ServeCache:
+    """Speculative rollback: un-validate the last ``steps`` rows per slot.
+
+    ``steps``: int or (B,) int — how many trailing rows to reject (a
+    draft engine retracts k+1-j after a verify round commits j).  Pure
+    length-watermark bookkeeping: the rejected rows stay physically
+    written but every reader masks on the valid length, so they are
+    provably unread and the next decode/verify writes simply overwrite
+    them — the same stale-rows argument that makes slot re-admission
+    exact (DESIGN.md §3).
+    """
+    delta = jnp.int32(steps)
+    if active is not None:
+        delta = jnp.where(active, delta, 0).astype(jnp.int32)
+    return ServeCache(layers=cache.layers, lengths=cache.lengths - delta)
+
+
 def _splice(full, got):
     """Write a prefill-sized cache leaf into its preallocated buffer.
 

@@ -153,6 +153,26 @@ def advance(cache: PagedServeCache, new_layers: Any, steps: int = 1,
                            lengths=cache.lengths + delta)
 
 
+def retract(cache: PagedServeCache, steps, active=None) -> PagedServeCache:
+    """Speculative rollback (the paged kv_cache.retract).
+
+    Rejected speculative rows live on pages the slot ALREADY owns —
+    admission claims worst-case pages up front (plan_admission), so a
+    verify dispatch never allocates and rollback never frees: adoption
+    vs rejection of the written rows is decided purely by how far the
+    length watermark advances, and the block table is untouched.  Rows
+    past the watermark are garbage-until-overwritten exactly like
+    decode-overrun writes (which the -1 table sentinel drops); the
+    allocator's free/mapped invariants hold across any number of
+    speculative rounds because speculation never touches the allocator.
+    """
+    delta = jnp.int32(steps)
+    if active is not None:
+        delta = jnp.where(active, delta, 0).astype(jnp.int32)
+    return PagedServeCache(layers=cache.layers, block_tbl=cache.block_tbl,
+                           lengths=cache.lengths - delta)
+
+
 # ------------------------------------------------------- device writes
 def set_table_rows(cache: PagedServeCache, slot: int,
                    pages) -> PagedServeCache:

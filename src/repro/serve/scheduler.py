@@ -38,6 +38,7 @@ import numpy as np
 
 from repro.kernels import kv_quant as kvq
 from repro.serve import kv_cache, paging, sampling
+from repro.serve import spec as spec_mod
 from repro.serve.engine import ServeEngine
 
 
@@ -100,6 +101,14 @@ class ContinuousBatchingScheduler:
         self._admit_idx = 0            # next admission nonce (sampling keys
                                        # fold (nonce, per-request token idx))
         self.completed: Dict[str, Completion] = {}
+        # speculative decoding (serve/spec.py): when the engine's spec
+        # names a draft, decode rounds go draft-propose -> one verify
+        # dispatch -> accept/commit instead of scanned chunks.  Per-slot
+        # draft state (scratch cache / history) turns over with the
+        # slots, interleaved with admission and eviction.
+        self.spec = (spec_mod.SpecDecoder(engine, n_slots,
+                                          prompt_bucket=prompt_bucket)
+                     if engine.draft is not None else None)
 
     # ------------------------------------------------------------ frontend
     def submit(self, req: Request) -> None:
@@ -127,7 +136,10 @@ class ContinuousBatchingScheduler:
         while self.queue or any(s is not None for s in self.slots):
             self._admit()
             if any(s is not None for s in self.slots):
-                self._decode_harvest()
+                if self.spec is not None:
+                    self._spec_round()
+                else:
+                    self._decode_harvest()
         return self.completed
 
     # ------------------------------------------------------------ internals
@@ -163,6 +175,8 @@ class ContinuousBatchingScheduler:
                 continue
             self.slots[j] = slot
             self._tok[j, 0] = first
+            if self.spec is not None:
+                self.spec.admit(j, req.prompt, first)
 
     def _bucket_pad(self, n: int, cap: int) -> int:
         """Bucket a prompt/suffix length so jit caches stay warm, never
@@ -318,6 +332,48 @@ class ContinuousBatchingScheduler:
             else:
                 self._tok[j, 0] = slot.emitted[-1]
 
+    def _spec_round(self) -> None:
+        """One speculative round for every live slot (serve/spec.py):
+        draft k proposals, verify all of them in ONE multi-token target
+        dispatch, commit the longest agreeing prefix + 1 bonus token.
+
+        Token-for-token identical to ``_decode_harvest``: every
+        committed token is the target's own greedy argmax given the
+        committed history (the draft only gates how many commit per
+        round), and greedy sampling ignores its key — EngineSpec refuses
+        draft= with a stochastic sampler, so skipping the per-token
+        ``sampling.request_key`` fold here cannot change output (the
+        admission token 0 still draws through its keyed path).  Harvest
+        truncates at EOS/budget exactly like the chunk path; both
+        truncations evict the slot, so a surviving slot always took its
+        full committed count and its host emitted-length stays in sync
+        with the device length watermark.
+        """
+        active = np.array([s is not None for s in self.slots])
+        d = self.spec.propose(self._tok, active)              # (B, k)
+        x = np.concatenate([self._tok, d], axis=1)            # (B, k+1)
+        layers, g, _ = self.engine.verify_step(
+            self.cache, jnp.asarray(x), active=jnp.asarray(active))
+        g_np = np.asarray(g)
+        accepted = self.spec.accept(d, g_np, active)          # (B,) j
+        self.cache = self.engine.commit_verified(
+            self.cache, layers, jnp.asarray(accepted),
+            active=jnp.asarray(active))
+        self.spec.commit(accepted, g_np, active)
+        for j, slot in enumerate(self.slots):
+            if slot is None:
+                continue
+            done = False
+            for t in g_np[j, :int(accepted[j])]:
+                slot.emitted.append(int(t))
+                if self._finish_reason(slot) is not None:
+                    done = True
+                    break
+            if done:
+                self._evict(slot, j)
+            else:
+                self._tok[j, 0] = slot.emitted[-1]
+
     def _finish_reason(self, slot: _Slot) -> Optional[str]:
         if slot.req.eos_id is not None \
                 and slot.emitted[-1] == slot.req.eos_id:
@@ -332,6 +388,8 @@ class ContinuousBatchingScheduler:
             uid=slot.req.uid, prompt_len=len(slot.req.prompt),
             tokens=list(slot.emitted), finish_reason=reason)
         self.slots[j] = None
+        if self.spec is not None:
+            self.spec.evict(j)
         if self._paged and self._slot_pages[j] is not None:
             # drop this slot's mappings; pages return to the free list
             # only at refcount 0 (a prefix the registry or another slot

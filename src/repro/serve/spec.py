@@ -1,0 +1,234 @@
+"""Self-speculative decoding: draft k tokens cheap, verify in one dispatch.
+
+Decode is HBM-bound — each scanned step streams the whole weight set to
+produce ONE token per slot.  A verify forward over S = k+1 positions
+streams those bytes once for up to k+1 tokens, so if a cheap draft can
+guess the greedy continuation even occasionally, wall-clock per token
+drops.  This repo's twist (the paper's frontier, ROADMAP): the draft IS
+a lower-bit point of the same checkpoint's knapsack frontier (e.g. int2
+packed drafting for an int4/mixed target), or — cheaper still — a
+model-free n-gram suffix matcher, which is surprisingly effective on the
+repetitive continuations low-bit policies emit.  No second model is ever
+trained or stored.
+
+Round protocol (greedy, LOSSLESS — DESIGN.md §3):
+
+  1. draft proposes d_0..d_{k-1} continuing the current feed token.
+  2. the target scores x = [feed, d_0..d_{k-1}] in ONE decode-mode
+     forward (engine.verify_step): position i yields the greedy token
+     g_i the target would emit after [history, feed, d_0..d_{i-1}].
+  3. accept m = longest prefix with d_i == g_i; COMMIT j = m+1 tokens
+     g_0..g_m (g_m is the "bonus": position m's output is correct even
+     though d_m was wrong — or, at m == k, a free extra token).
+  4. cache rollback = length watermark only: the target advances j
+     (engine.commit_verified), the policy draft retracts to the same
+     committed point (kv_cache.retract).  Rejected rows stay written
+     but sit past the watermark — provably unread.
+
+Every committed token equals the token a plain greedy decode would have
+produced (g_0 needs no draft agreement at all), so speculative decode is
+token-for-token identical to non-speculative decode; the draft only
+controls SPEED (acceptance rate), never output.  That is the parity bar
+tests/test_serve.py enforces, and why EngineSpec refuses draft= with a
+stochastic sampler (rejection-sampling acceptance is future work).
+
+``SpecDecoder`` owns the per-slot draft state the scheduler interleaves
+with admission/eviction: a policy draft keeps its own contiguous
+full-dtype ServeCache (scratch — always rolled back to the committed
+prefix), an n-gram draft keeps host-side token histories.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve import kv_cache
+from repro.serve.config import DraftSpec, EngineSpec
+
+
+def ngram_propose(hist: List[int], k: int, max_n: int) -> List[int]:
+    """Draft k tokens by suffix matching the request's own history.
+
+    Finds the LONGEST suffix of ``hist`` (up to ``max_n`` tokens) that
+    re-occurs earlier, preferring the LATEST earlier occurrence, and
+    proposes the tokens that followed it; repeat-last fills the rest
+    (degenerate low-bit continuations are long runs, so repeating the
+    last token is the right prior).  Pure host-side — no model call.
+    """
+    t = len(hist)
+    for n in range(min(max_n, t - 1), 0, -1):
+        pat = hist[t - n:]
+        for p in range(t - n - 1, -1, -1):
+            if hist[p:p + n] == pat:
+                cont = hist[p + n:p + n + k]
+                if cont:
+                    return (cont + [hist[-1]] * (k - len(cont)))[:k]
+    return [hist[-1]] * k
+
+
+class SpecDecoder:
+    """Per-slot draft state + accept/commit bookkeeping for one scheduler.
+
+    The scheduler calls, per round: ``propose`` -> engine.verify_step ->
+    ``accept`` -> engine.commit_verified -> ``commit``, and ``admit`` /
+    ``evict`` as slots turn over.  ``stats()`` reports acceptance.
+    """
+
+    def __init__(self, engine, n_slots: int, prompt_bucket: int = 16):
+        if engine.draft is None:
+            raise ValueError("engine has no draft= in its EngineSpec")
+        self.engine = engine
+        self.draft: DraftSpec = engine.draft
+        self.k = self.draft.k
+        self.n_slots = n_slots
+        self.prompt_bucket = prompt_bucket
+        self._rounds = 0
+        self._proposed = 0
+        self._accepted = 0
+        self._committed = 0
+        if self.draft.kind == "policy":
+            # the draft engine is internal scratch: contiguous full-dtype
+            # cache regardless of the target's layout (it is rolled back
+            # to the committed prefix every round, never paged/shared),
+            # and decode_chunk = k+1 so one propose is one dispatch
+            self.draft_engine = _build_draft_engine(engine, self.draft)
+            self.draft_cache = self.draft_engine.new_cache(n_slots)
+            self._axes = self.draft_engine.cache_batch_axes()
+            self._hist: Optional[List[Optional[List[int]]]] = None
+        else:
+            self.draft_engine = None
+            self.draft_cache = None
+            self._hist = [None] * n_slots
+        # greedy is enforced (EngineSpec.validate), so draft sampling
+        # keys never influence output; a fixed key keeps the surface tidy
+        self._key = jax.random.PRNGKey(0)
+
+    # ---------------------------------------------------------- slot churn
+    def admit(self, slot: int, prompt, first_token: int) -> None:
+        """Seed slot ``slot``'s draft state at admission: the committed
+        sequence is prompt + [first_token] (the admission-sampled token,
+        which is also the first verify feed)."""
+        if self._hist is not None:
+            self._hist[slot] = list(prompt) + [int(first_token)]
+            return
+        n_prompt = len(prompt)
+        pad = min(-(-n_prompt // self.prompt_bucket) * self.prompt_bucket,
+                  self.draft_engine.max_seq)
+        toks = np.zeros((1, pad), np.int32)
+        toks[0, :n_prompt] = np.asarray(prompt, np.int32)
+        _, pre = self.draft_engine.prefill(
+            jnp.asarray(toks), jnp.asarray([n_prompt], jnp.int32))
+        self.draft_cache = kv_cache.write_slot(self.draft_cache, pre, slot,
+                                               n_prompt, self._axes)
+
+    def evict(self, slot: int) -> None:
+        """Drop slot ``slot``'s draft state (the policy draft's cache rows
+        go stale-until-readmission, same as the target's)."""
+        if self._hist is not None:
+            self._hist[slot] = None
+
+    # ------------------------------------------------------------- rounds
+    def propose(self, feed: np.ndarray, active: np.ndarray) -> np.ndarray:
+        """Draft k tokens per slot continuing ``feed`` ((B, 1) int32).
+
+        Policy draft: ONE scanned draft dispatch of k+1 steps — the k
+        proposals plus one extra so the draft cache also holds the row
+        for d_{k-1} (its lengths run j..k+1 ahead of the committed point
+        until ``commit`` retracts them).  N-gram draft: host-side suffix
+        match per live slot.  Returns (B, k) int32 (garbage rows for
+        inactive slots — callers mask on ``active``).
+        """
+        if self._hist is not None:
+            d = np.zeros((self.n_slots, self.k), np.int32)
+            for s in range(self.n_slots):
+                if active[s] and self._hist[s]:
+                    d[s] = ngram_propose(self._hist[s], self.k,
+                                         self.draft.max_ngram)
+            return d
+        self.draft_cache, _, toks = self.draft_engine.decode_chunk_step(
+            self.draft_cache, jnp.asarray(feed), self._key,
+            step0=0, active=jnp.asarray(active), n_steps=self.k + 1)
+        return np.asarray(toks[:, :self.k])
+
+    def accept(self, d: np.ndarray, g: np.ndarray,
+               active: np.ndarray) -> np.ndarray:
+        """Greedy acceptance: per slot, m = longest prefix of the k
+        proposals agreeing with the target's greedy tokens; j = m+1
+        tokens commit (g_0..g_m — the last is the bonus/correction).
+        Returns (B,) committed counts, 0 for inactive slots."""
+        agree = np.cumprod(d == g[:, :self.k], axis=1)
+        m = agree.sum(axis=1)
+        return np.where(active, m + 1, 0).astype(np.int32)
+
+    def commit(self, accepted: np.ndarray, g: np.ndarray,
+               active: np.ndarray) -> None:
+        """Adopt a round's outcome into the draft state + stats.
+
+        Policy draft: retract each slot's scratch lengths from the k+1
+        speculated rows back to the committed point (k+1-j rows — always
+        >= 0; the retained rows [feed, d_0..d_{j-2}] equal the committed
+        tokens by the acceptance rule, so the draft cache is exactly the
+        cache a from-scratch draft decode of the committed sequence
+        would hold).  N-gram draft: extend each live history by its
+        committed tokens.
+        """
+        n_active = int(np.sum(active))
+        self._rounds += 1
+        self._proposed += self.k * n_active
+        self._accepted += int(np.sum(np.where(active, accepted - 1, 0)))
+        self._committed += int(np.sum(accepted))
+        if self._hist is not None:
+            for s in range(self.n_slots):
+                if active[s] and self._hist[s] is not None:
+                    self._hist[s].extend(
+                        int(t) for t in g[s, :int(accepted[s])])
+            return
+        steps = (self.k + 1) - accepted
+        self.draft_cache = kv_cache.retract(
+            self.draft_cache, jnp.asarray(steps, jnp.int32),
+            active=jnp.asarray(active))
+
+    # -------------------------------------------------------------- stats
+    def stats(self) -> dict:
+        """Round telemetry: ``acceptance_rate`` = accepted draft tokens /
+        proposed draft tokens (bonus tokens excluded — a rate of 0 still
+        commits 1 token/round); ``committed_per_dispatch`` = tokens
+        committed per verify dispatch (the speedup driver: a plain chunk
+        step commits exactly 1 token per model step)."""
+        return {
+            "rounds": self._rounds,
+            "proposed": self._proposed,
+            "accepted": self._accepted,
+            "committed": self._committed,
+            "acceptance_rate": (self._accepted / self._proposed
+                                if self._proposed else 0.0),
+            "committed_per_dispatch": (self._committed / self._rounds
+                                       if self._rounds else 0.0),
+        }
+
+
+def _build_draft_engine(engine, draft: DraftSpec):
+    """The policy draft's internal ServeEngine: same cfg/ctx/max_seq as
+    the target, the DRAFT's params + policy, contiguous full-dtype cache
+    (scratch), decode_chunk pinned to k+1 (one propose = one dispatch).
+
+    Memoized on the target engine: a ServeEngine owns its jitted
+    dispatches, so rebuilding one per SpecDecoder (= per scheduler)
+    would retrace the draft's decode/prefill on every scheduler
+    construction — per-SpecDecoder state is only the scratch CACHE,
+    which each decoder allocates fresh for itself.
+    """
+    cached = getattr(engine, "_draft_engine", None)
+    if cached is not None:
+        return cached
+    from repro.serve.engine import ServeEngine
+    de = ServeEngine(
+        cfg=engine.cfg, params=draft.params,
+        policy_arrays=draft.policy_arrays, ctx=engine.ctx,
+        max_seq=engine.max_seq,
+        spec=EngineSpec(weights=draft.weights, decode_chunk=draft.k + 1))
+    engine._draft_engine = de
+    return de

@@ -248,3 +248,101 @@ def test_allocator_invariants_random_interleavings():
         _run_trace(n_pages, ops, share)
 
     prop()
+
+
+# --------------------------------------------- speculative-rollback rules
+def test_paged_write_row_multirow_matches_sequential_and_drops_overrun():
+    """The (B, S) generalization of paged_write_row: S rows scatter
+    bit-identically to S sequential single-row writes, and rows that
+    cross into an UNMAPPED table entry (-1 sentinel) or past the table
+    window drop — they must never be redirected into another page."""
+    import jax.numpy as jnp
+    from repro.serve import kv_cache  # noqa: F401  (jax warm import)
+    rng = np.random.default_rng(7)
+    pool0 = jnp.asarray(rng.normal(size=(3, PAGE, 2, 2)), jnp.float32)
+    tbl = jnp.asarray([[2, -1]], jnp.int32)     # page 1 of the window: unmapped
+    new = jnp.asarray(rng.normal(size=(1, 4, 2, 2)), jnp.float32)
+    positions = jnp.asarray([[2, 3, 4, 5]], jnp.int32)
+    got = kvq.paged_write_row(pool0, new, positions, tbl)
+    # sequential oracle: one row at a time
+    want = pool0
+    for i in range(4):
+        want = kvq.paged_write_row(want, new[:, i:i + 1],
+                                   positions[:, i:i + 1], tbl)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # rows 2,3 land in physical page 2; rows 4,5 hit the -1 sentinel
+    np.testing.assert_array_equal(np.asarray(got[2, 2:4]),
+                                  np.asarray(new[0, :2]))
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(pool0[0]))
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(pool0[1]))
+    # past the table window entirely (pos >= n*page): dropped too
+    tbl1 = jnp.asarray([[0]], jnp.int32)
+    got2 = kvq.paged_write_row(pool0, new[:, :1],
+                               jnp.asarray([[PAGE]], jnp.int32), tbl1)
+    np.testing.assert_array_equal(np.asarray(got2), np.asarray(pool0))
+
+
+def test_paged_retract_touches_only_the_length_watermark():
+    """Speculative rollback on the paged cache is a pure per-slot length
+    decrement: same pools, same block table, no allocator traffic —
+    rejected rows become ordinary stale-rows-past-the-watermark."""
+    import jax.numpy as jnp
+    from repro import configs
+    cfg = configs.get_config("olmo-1b").smoke()
+    c = paging.init_paged_cache(cfg, batch=2, max_seq=16, n_pages=4,
+                                page_size=PAGE)
+    c = paging.set_table_rows(c, 0, [1, 3])
+    c = paging.set_length(c, 0, 9)
+    c = paging.set_length(c, 1, 5)
+    c2 = paging.retract(c, jnp.asarray([3, 3], jnp.int32),
+                        active=jnp.asarray([True, False]))
+    np.testing.assert_array_equal(np.asarray(c2.lengths), [6, 5])
+    np.testing.assert_array_equal(np.asarray(c2.block_tbl),
+                                  np.asarray(c.block_tbl))
+    assert c2.layers is c.layers        # pools not even copied
+
+
+def test_spec_rounds_preserve_allocator_invariants():
+    """Drive the REAL paged scheduler in speculative mode through
+    admission, partial-accept rollback rounds, eviction, and
+    re-admission onto recycled pages — the allocator's free/mapped
+    invariants and the independent refcount model must hold after every
+    round (speculation never touches the allocator)."""
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp  # noqa: F401
+    from repro import configs
+    from repro.models import transformer as tf
+    from repro.parallel.context import local_context
+    from repro.serve import (ContinuousBatchingScheduler, DraftSpec,
+                             EngineSpec, Request, ServeEngine,
+                             quantize_for_serving)
+    cfg = configs.get_config("olmo-1b").smoke()
+    ctx = local_context()
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    policy = tf.build_policy(cfg)
+    pa = jax.tree.map(jnp.asarray, policy.as_arrays())
+    qparams = quantize_for_serving(params, policy.as_arrays(), cfg)
+    engine = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa,
+                         ctx=ctx, max_seq=64,
+                         spec=EngineSpec(cache_layout="paged", page_size=16,
+                                         draft=DraftSpec(kind="ngram", k=4)))
+    rng = np.random.default_rng(11)
+    reqs = [Request(uid=f"r{i}", prompt=rng.integers(0, cfg.vocab,
+                                                     n).tolist(),
+                    max_new_tokens=8)
+            for i, n in enumerate((12, 7, 18, 9))]
+    sched = ContinuousBatchingScheduler(engine, n_slots=2)
+    for r in reqs:
+        sched.submit(r)
+    rounds = 0
+    while sched.queue or any(s is not None for s in sched.slots):
+        sched._admit()
+        if any(s is not None for s in sched.slots):
+            sched._spec_round()
+            rounds += 1
+        _check_model(sched.allocator,
+                     {j: p for j, p in enumerate(sched._slot_pages) if p},
+                     sched.registry)
+    assert rounds > 0 and len(sched.completed) == len(reqs)
+    assert sched.spec.stats()["committed"] >= sum(
+        r.max_new_tokens - 1 for r in reqs)

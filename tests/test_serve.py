@@ -10,9 +10,10 @@ from repro.core import knapsack
 from repro.models import transformer as tf
 from repro.models.layout import LayerBuckets
 from repro.parallel.context import local_context
-from repro.serve import (ContinuousBatchingScheduler, Request, SamplerConfig,
-                         ServeEngine, kv_cache, pack_params,
-                         quantize_for_serving, residency, sample, serve_all)
+from repro.serve import (ContinuousBatchingScheduler, DraftSpec, EngineSpec,
+                         Request, SamplerConfig, ServeEngine, kv_cache,
+                         pack_params, quantize_for_serving, residency, sample,
+                         serve_all)
 
 
 @pytest.fixture(scope="module")
@@ -1143,3 +1144,182 @@ def test_bucketed_deep_multibucket_parity(cache_layout):
     np.testing.assert_array_equal(
         np.asarray(eb.generate(prompt, n_new=12)),
         np.asarray(eu.generate(prompt, n_new=12)))
+
+
+# ------------------------------------------------- speculative decoding
+@pytest.fixture(scope="module")
+def spec_setup(setup):
+    """int2 draft materials (the knapsack frontier's cheapest point), in
+    BOTH serve layouts — drafting must work from either."""
+    cfg, ctx, params, policy, pa, qparams = setup
+    pol2 = policy.uniform(2.0)
+    arr2 = pol2.as_arrays()
+    pa2 = jax.tree.map(jnp.asarray, arr2)
+    return (pa2, quantize_for_serving(params, arr2, cfg),
+            pack_params(params, arr2, cfg))
+
+
+def _spec_vs_plain(setup, draft, cache_layout, cache="full", bits=8,
+                   n_slots=2, n_new=10, **enkw):
+    """Run the SAME request mix through a speculative scheduler and a
+    plain one (identical target engine config minus draft=); assert
+    token-for-token parity per request and return the spec stats.
+
+    Four requests through two slots forces eviction + re-admission —
+    on the paged layout the re-admitted requests map RECYCLED pages
+    whose contents are a previous occupant's stale (and, after a
+    mid-round rejection, rolled-back) rows.
+    """
+    cfg, ctx, params, policy, pa, qparams = setup
+    base = dict(cache=cache, cache_bits=bits, cache_layout=cache_layout,
+                **enkw)
+    e_s = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx,
+                      max_seq=64, spec=EngineSpec(draft=draft, **base))
+    e_p = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx,
+                      max_seq=64, spec=EngineSpec(**base))
+    rng = np.random.default_rng(51)
+    prompts = [rng.integers(0, cfg.vocab, n).tolist()
+               for n in (12, 7, 18, 9)]
+    sched = ContinuousBatchingScheduler(e_s, n_slots=n_slots)
+    for i, pr in enumerate(prompts):
+        sched.submit(Request(uid=f"s{i}", prompt=pr, max_new_tokens=n_new))
+    res_s = sched.run()
+    res_p = serve_all(e_p, [Request(uid=f"s{i}", prompt=pr,
+                                    max_new_tokens=n_new)
+                            for i, pr in enumerate(prompts)],
+                      n_slots=n_slots)
+    for i in range(len(prompts)):
+        assert res_s[f"s{i}"].tokens == res_p[f"s{i}"].tokens, f"s{i}"
+    return sched.spec.stats()
+
+
+@pytest.mark.parametrize("cache_layout", ["contiguous", "paged"])
+def test_spec_ngram_scheduler_parity(setup, cache_layout):
+    """Greedy n-gram speculation == plain greedy decode, token for token,
+    through eviction + re-admission; random prompts mean most proposals
+    REJECT — parity must survive rounds that commit only the bonus."""
+    st = _spec_vs_plain(setup, DraftSpec(kind="ngram", k=4), cache_layout)
+    assert st["rounds"] > 0 and st["committed"] >= 4 * 9
+    # every round commits at least the bonus token for each live slot
+    assert st["committed"] >= st["rounds"]
+
+
+@pytest.mark.parametrize("cache_layout,cache,bits,dw", [
+    ("contiguous", "full", 8, "fake_quant"),
+    ("contiguous", "quantized", 8, "packed"),
+    ("paged", "full", 8, "packed"),
+    ("paged", "quantized", 8, "fake_quant"),
+])
+def test_spec_policy_draft_parity_with_rejections(setup, spec_setup,
+                                                  cache_layout, cache,
+                                                  bits, dw):
+    """int2 policy draft vs the int4 target: bit-width disagreement
+    FORCES mid-round rejections (asserted), and the committed stream
+    still equals plain greedy decode for every target cache/layout and
+    both draft serve layouts.  The draft's scratch cache is rolled back
+    (kv_cache.retract) on every partial accept; the paged target's
+    rollback is a pure length decrement on pre-claimed pages."""
+    pa2, qp2_fake, qp2_packed = spec_setup
+    draft = DraftSpec(kind="policy", k=4,
+                      params=qp2_fake if dw == "fake_quant" else qp2_packed,
+                      policy_arrays=pa2, weights=dw)
+    st = _spec_vs_plain(setup, draft, cache_layout, cache=cache, bits=bits)
+    assert st["proposed"] > 0
+    assert st["accepted"] < st["proposed"], \
+        "int2-vs-int4 drafting never rejected — acceptance bookkeeping?"
+    assert 0.0 <= st["acceptance_rate"] < 1.0
+
+
+def test_spec_mid_round_eos_truncates_like_plain(setup):
+    """EOS inside an accepted run: harvest stops at the EOS token even
+    when the verify round committed past it, matching the plain path."""
+    cfg, ctx, params, policy, pa, qparams = setup
+    base = dict(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx,
+                max_seq=64)
+    e_s = ServeEngine(spec=EngineSpec(draft=DraftSpec(kind="ngram", k=4)),
+                      **base)
+    e_p = ServeEngine(spec=EngineSpec(), **base)
+    rng = np.random.default_rng(53)
+    prompt = rng.integers(0, cfg.vocab, 9).tolist()
+    # pick the token the plain engine actually emits mid-stream as EOS
+    free = serve_all(e_p, [Request(uid="probe", prompt=prompt,
+                                   max_new_tokens=8)], n_slots=1)
+    eos = free["probe"].tokens[4]
+    reqs = [Request(uid="x", prompt=prompt, max_new_tokens=8, eos_id=eos)]
+    res_s = serve_all(e_s, list(reqs), n_slots=1)
+    res_p = serve_all(e_p, [Request(uid="x", prompt=prompt,
+                                    max_new_tokens=8, eos_id=eos)],
+                      n_slots=1)
+    assert res_s["x"].tokens == res_p["x"].tokens
+    assert res_s["x"].finish_reason == "eos"
+
+
+def test_spec_requires_greedy(setup):
+    cfg, ctx, params, policy, pa, qparams = setup
+    with pytest.raises(ValueError, match="greedy"):
+        ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx,
+                    max_seq=64,
+                    spec=EngineSpec(
+                        sampler=SamplerConfig(kind="temperature",
+                                              temperature=1.0),
+                        draft=DraftSpec(kind="ngram", k=4)))
+
+
+def test_draft_spec_validation():
+    with pytest.raises(ValueError, match="kind"):
+        DraftSpec(kind="oracle").validate()
+    with pytest.raises(ValueError, match="k must be"):
+        DraftSpec(kind="ngram", k=0).validate()
+    with pytest.raises(ValueError, match="params"):
+        DraftSpec(kind="policy").validate()
+    with pytest.raises(ValueError, match="model-free"):
+        DraftSpec(kind="ngram", params={}).validate()
+
+
+# ------------------------------------------------------------ EngineSpec
+def test_engine_spec_flat_kwargs_shim_equivalent(setup):
+    """Old flat kwargs still construct (with a DeprecationWarning), build
+    the SAME spec, and decode the same tokens as the EngineSpec path."""
+    cfg, ctx, params, policy, pa, qparams = setup
+    kw = dict(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx,
+              max_seq=64)
+    with pytest.deprecated_call():
+        e_flat = ServeEngine(cache="quantized", cache_bits=8,
+                             decode_chunk=4, **kw)
+    e_spec = ServeEngine(spec=EngineSpec(cache="quantized", cache_bits=8,
+                                         decode_chunk=4), **kw)
+    assert e_flat.spec == e_spec.spec
+    rng = np.random.default_rng(54)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab, (1, 10)), jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(e_flat.generate(prompt, n_new=8)),
+        np.asarray(e_spec.generate(prompt, n_new=8)))
+
+
+def test_engine_spec_conflicts_and_validation(setup):
+    cfg, ctx, params, policy, pa, qparams = setup
+    kw = dict(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx,
+              max_seq=64)
+    # spec= and flat kwargs together: ambiguous, refuse loudly
+    with pytest.raises(ValueError, match="spec"):
+        ServeEngine(cache="quantized", spec=EngineSpec(), **kw)
+    with pytest.raises(ValueError, match="decode_chunk"):
+        ServeEngine(spec=EngineSpec(decode_chunk=0), **kw)
+    with pytest.raises(ValueError, match="weights"):
+        EngineSpec(weights="int3").validate()
+    with pytest.raises(ValueError, match="cache_layout"):
+        EngineSpec(cache_layout="ragged").validate()
+    # packed/fake-quant layout disagreement is caught at construction
+    with pytest.raises(ValueError, match="layout"):
+        ServeEngine(spec=EngineSpec(weights="packed"), **kw)
+
+
+def test_engine_spec_paged_pool_floor(setup):
+    """n_pages < batch can never serve (every slot needs >= 1 page):
+    refuse at allocation with a message, not as a scheduler deadlock."""
+    cfg, ctx, params, policy, pa, qparams = setup
+    eng = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx,
+                      max_seq=64,
+                      spec=EngineSpec(cache_layout="paged", n_pages=3))
+    with pytest.raises(ValueError, match="page"):
+        eng.new_cache(4)
