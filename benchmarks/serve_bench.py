@@ -33,6 +33,15 @@ int2 packed target (``spec_speedup`` — gated >= 1.0 by check_bench) and
 for the knapsack-frontier pairing int2 -> mixed_4_2@0.70 (acceptance
 gated > 0; ratio reported unfloored on CPU ref-path hosts).
 
+``_meta.latency`` reports the chunked-prefill tail-latency survey: p50/
+p95/p99 TTFT and inter-token stall on a mixed long/short workload, whole-
+prompt vs chunked prefill, in SIM-CLOCK model-step units (scheduler
+.latency_report()).  Every column is a deterministic function of the
+workload GEOMETRY — prompt lengths, budgets, slot count, chunk size —
+never of sampled token values, so scripts/check_bench.py gates them
+tightly and enforces the hard >=2x p99 inter-token stall improvement
+under long-prompt injection (``min_latency_stall_improvement``).
+
 ``_meta.sharded`` reports the tensor-parallel serving survey (packed int4 +
 int8 quantized cache over the largest feasible "model" mesh): sharded
 decode tokens/sec plus MEASURED per-device resident weight/KV bytes —
@@ -206,6 +215,56 @@ def _paging_meta(cfg, qparams, pa, max_seq: int) -> dict:
     }
 
 
+def _latency_meta(cfg, qparams, pa, max_seq: int) -> dict:
+    """Chunked-prefill tail-latency survey (_meta.latency) — the PR-8
+    tentpole's gate.  A mixed long/short workload (a 48-token prompt
+    admitted while shorter requests are mid-decode) runs through the SAME
+    scheduler twice: whole-prompt prefill vs prefill_chunk=8 fused
+    prefill/decode dispatches.  Latency is the scheduler's deterministic
+    sim clock (model-step units — a prefill costs its padded length, a
+    fused dispatch its token width), so the stall columns are pure
+    geometry and the >=2x p99 improvement is a hard check_bench gate,
+    not a wall-clock hope."""
+    ctx = local_context()
+    chunk, n_slots = 8, 3
+    shapes = [(5, 8), (23, 6), (11, 10), (48, 5), (9, 7)]
+    rng = np.random.default_rng(7)
+    reqs = [Request(uid=f"l{i}",
+                    prompt=rng.integers(0, cfg.vocab, n).tolist(),
+                    max_new_tokens=m)
+            for i, (n, m) in enumerate(shapes)]
+
+    def drive(prefill_chunk):
+        engine = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa,
+                             ctx=ctx, max_seq=max_seq,
+                             spec=EngineSpec(prefill_chunk=prefill_chunk))
+        sched = ContinuousBatchingScheduler(engine, n_slots=n_slots)
+        for r in reqs:
+            sched.submit(Request(uid=r.uid, prompt=r.prompt,
+                                 max_new_tokens=r.max_new_tokens))
+        out = sched.run()
+        return sched.latency_report(), {u: c.tokens for u, c in out.items()}
+
+    whole, toks_w = drive(None)
+    chunked, toks_c = drive(chunk)
+    assert toks_w == toks_c, "chunked prefill changed emitted tokens"
+
+    def ratio(a, b):
+        return a / max(b, 1e-9)
+
+    return {
+        "unit": "model_steps", "prefill_chunk": chunk, "n_slots": n_slots,
+        "workload": [[n, m] for n, m in shapes],
+        "whole": whole, "chunked": chunked,
+        "stall_improvement_p99": ratio(whole["inter_token"]["p99"],
+                                       chunked["inter_token"]["p99"]),
+        "stall_improvement_max": ratio(whole["inter_token"]["max"],
+                                       chunked["inter_token"]["max"]),
+        "ttft_improvement_p95": ratio(whole["ttft"]["p95"],
+                                      chunked["ttft"]["p95"]),
+    }
+
+
 def _spec_timed_run(engine, prompt, horizon: int):
     """One 1-slot scheduler drain; returns (wall seconds, tokens, sched)."""
     sched = ContinuousBatchingScheduler(engine, n_slots=1)
@@ -248,6 +307,10 @@ def _spec_pair(spec_engine, plain_engine, prompt, horizon: int,
         "acceptance_rate": stats["acceptance_rate"],
         "committed_per_dispatch": stats["committed_per_dispatch"],
         "rounds": stats["rounds"],
+        # per-request draft-k telemetry (SpecDecoder.stats): the tuning
+        # signal for draft-k — REQUIRED by check_bench, informational in
+        # the baseline (the aggregate columns above are the gated ones)
+        "per_request": stats["per_request"],
     }
 
 
@@ -340,14 +403,16 @@ def run(quick: bool = False, batch: int = 4, prompt_len: int = 16,
     kv_meta = _kv_meta(cfg, batch, max_seq)
 
     pol4 = policy.uniform(4.0)
-    paging_meta = _paging_meta(
-        cfg, quantize_for_serving(params, pol4.as_arrays(), cfg),
-        jax.tree.map(jnp.asarray, pol4.as_arrays()), max_seq)
+    qp4 = quantize_for_serving(params, pol4.as_arrays(), cfg)
+    pa4 = jax.tree.map(jnp.asarray, pol4.as_arrays())
+    paging_meta = _paging_meta(cfg, qp4, pa4, max_seq)
+    latency_meta = _latency_meta(cfg, qp4, pa4, max_seq)
     rows = _policies(policy)
     out = {"_meta": {"arch": arch, "batch": batch, "n_chunks": n_chunks,
                      "prompt_len": prompt_len,
                      "bf16_resident_weight_bytes": bf16_bytes,
-                     "kv": kv_meta, "paging": paging_meta}}
+                     "kv": kv_meta, "paging": paging_meta,
+                     "latency": latency_meta}}
     sharded = _sharded_meta(cfg, params, policy, tokens, prompt_len,
                             max_seq, n_chunks)
     if sharded is not None:
@@ -419,6 +484,16 @@ if __name__ == "__main__":
           f"contiguous {pg['resident_kv_bytes_contiguous']/1e3:.0f} kB "
           f"({pg['paged_residency_reduction']:.2f}x), prefix-hit rate "
           f"{pg['prefix_hit_rate']:.2f}")
+    lat = meta["latency"]
+    w, c = lat["whole"]["inter_token"], lat["chunked"]["inter_token"]
+    print(f"tail latency (mixed long/short, chunk={lat['prefill_chunk']}, "
+          f"model-step units): inter-token p99 {w['p99']:.0f} -> "
+          f"{c['p99']:.0f} steps ({lat['stall_improvement_p99']:.1f}x), "
+          f"max {w['max']:.0f} -> {c['max']:.0f} "
+          f"({lat['stall_improvement_max']:.1f}x), TTFT p95 "
+          f"{lat['whole']['ttft']['p95']:.0f} -> "
+          f"{lat['chunked']['ttft']['p95']:.0f} "
+          f"({lat['ttft_improvement_p95']:.1f}x)")
     sp = meta["spec"]
     print(f"speculative ({sp['draft']} -> {sp['target']}, k={sp['k']}, "
           f"{sp['horizon']} toks): {sp['spec_speedup']:.2f}x "

@@ -35,6 +35,13 @@ baseline numbers:
     slots on the mixed short-request workload, with its byte and
     hit-rate columns gated tightly (they are deterministic functions of
     the workload geometry);
+  * the chunked-prefill tail-latency survey (_meta.latency) stays present
+    with its REQUIRED columns, its sim-clock step counts gated tightly
+    (they are deterministic functions of the workload geometry — prompt
+    lengths, budgets, slots, chunk size — never of token values), and
+    the hard ``min_latency_stall_improvement`` (2x) invariant holds: p99
+    inter-token stall under long-prompt injection must improve >= 2x
+    with chunked prefill vs whole-prompt prefill, baseline or not;
   * the speculative-decoding survey (_meta.spec) stays present: the
     n-gram-draft config keeps its spec-vs-plain decode ratio >=
     ``min_spec_speedup`` (1.0x — a same-run wall-clock RATIO like the
@@ -94,6 +101,12 @@ DEFAULT_GATE = {
     # the odd argmax.
     "min_spec_speedup": 1.0,
     "spec_rtol": 0.25,
+    # chunked-prefill tail latency (_meta.latency): the p99 inter-token
+    # stall a long-prompt admission inflicts on its batchmates must drop
+    # >= 2x when prefill chunks fuse with decode steps.  The columns are
+    # sim-clock model-step counts — pure workload geometry, deterministic
+    # on any host — so a hard floor is safe, like the paging gate.
+    "min_latency_stall_improvement": 2.0,
 }
 
 # _meta.paging columns every bench run MUST report once the baseline has
@@ -113,6 +126,16 @@ REQUIRED_SPEC_KEYS = (
     "spec_speedup",
     "acceptance_rate",
     "committed_per_dispatch",
+    "per_request",
+)
+
+# _meta.latency columns every bench run MUST report once the baseline has
+# the section — the chunked-prefill tail-latency gate's inputs
+REQUIRED_LATENCY_KEYS = (
+    "whole",
+    "chunked",
+    "stall_improvement_p99",
+    "stall_improvement_max",
 )
 
 # per-policy columns every bench run MUST report for the quantized cache —
@@ -195,6 +218,42 @@ def check(bench: dict, baseline: dict) -> list:
                 else:
                     ok(f"_meta.paging.{key} = {cur}")
 
+    # chunked-prefill tail-latency survey (_meta.latency): sim-clock step
+    # counts are deterministic functions of the workload geometry ->
+    # tight rtol on every numeric leaf; setting columns match exactly
+    base_lat = base_meta.get("latency")
+    cur_lat = cur_meta.get("latency")
+
+    def _lat_nested(base_d, cur_d, where):
+        for k, bv in sorted(base_d.items()):
+            cv = cur_d.get(k)
+            if isinstance(bv, dict):
+                if not isinstance(cv, dict):
+                    fail(f"{where}.{k}: missing")
+                else:
+                    _lat_nested(bv, cv, f"{where}.{k}")
+            elif isinstance(bv, (str, list)):
+                (ok if cv == bv else fail)(
+                    f"{where}.{k} = {cv} vs baseline {bv}")
+            elif cv is None:
+                fail(f"{where}.{k}: missing")
+            elif not _close(cv, bv, gate["bytes_rtol"]):
+                fail(f"{where}.{k} = {cv} vs baseline {bv} "
+                     f"(rtol {gate['bytes_rtol']})")
+            else:
+                ok(f"{where}.{k} = {cv}")
+
+    if base_lat:
+        if cur_lat is None:
+            fail("_meta.latency: tail-latency columns missing from bench "
+                 "output")
+        else:
+            for key in REQUIRED_LATENCY_KEYS:
+                if key not in cur_lat:
+                    fail(f"_meta.latency.{key}: tail-latency column "
+                         f"missing from bench output")
+            _lat_nested(base_lat, cur_lat, "_meta.latency")
+
     # speculative-decoding survey (_meta.spec): setting columns must match
     # exactly, acceptance columns drift within spec_rtol (deterministic
     # greedy trajectories), tok/s gets the loose host floor; the ratio
@@ -235,6 +294,9 @@ def check(bench: dict, baseline: dict) -> list:
             elif key == "spec_speedup":
                 pass              # same-run ratio — hard-gated below,
                                   # never compared across hosts
+            elif key == "per_request":
+                pass              # per-uid draft-k telemetry — REQUIRED
+                                  # above, gated via the aggregate columns
             else:
                 fail(f"{where}.{key}: unrecognized baseline column — "
                      f"extend check_bench or drop it")
@@ -391,6 +453,19 @@ def check(bench: dict, baseline: dict) -> list:
     else:
         ok(f"_meta.paging.paged_residency_reduction = {red:.2f}x "
            f">= {gate['min_paged_reduction']}x")
+    # hard tail-latency invariant, baseline or not: fusing prefill chunks
+    # with decode steps must cut the p99 inter-token stall a long-prompt
+    # admission inflicts on running slots >= 2x vs whole-prompt prefill
+    # (sim-clock model-step units — deterministic on any host)
+    imp = (cur_lat or {}).get("stall_improvement_p99", 0.0)
+    if imp < gate["min_latency_stall_improvement"]:
+        fail(f"_meta.latency.stall_improvement_p99 = {imp:.2f}x < "
+             f"{gate['min_latency_stall_improvement']}x (chunked prefill "
+             f"is not protecting inter-token latency from long-prompt "
+             f"injection)")
+    else:
+        ok(f"_meta.latency.stall_improvement_p99 = {imp:.2f}x "
+           f">= {gate['min_latency_stall_improvement']}x")
     # hard speculative invariants, baseline or not: the n-gram config
     # must WIN wall-clock on its own workload (same-run ratio — stable on
     # any host), and both drafts must actually agree with the target

@@ -100,7 +100,10 @@ if [ "$SKIP_BENCH" -eq 0 ]; then
     # (weights AND the _meta.kv resident-KV survey), the hard >=1.8x
     # int8 / >=3x int4 cache-reduction invariants, and REQUIRED
     # quantized-cache columns — a bench that silently stops reporting the
-    # KV rows fails here, loudly.  The compile-cost gate (BENCH_compile
+    # KV rows fails here, loudly.  The serve bench also runs the mixed
+    # long/short chunked-prefill workload (_meta.latency, sim-clock
+    # model-step units) and check_bench enforces the hard >=2x p99
+    # inter-token stall improvement vs whole-prompt prefill.  The compile-cost gate (BENCH_compile
     # vs baselines/compile.json: bucketed jaxpr stays O(#buckets) in
     # depth, unrolled keeps growing, deep advantage >= 3x) rides in the
     # same call.

@@ -62,11 +62,6 @@ def train_knobs(arch: str, overrides: Optional[dict] = None) -> dict:
     return kn
 
 
-def _abstract(tree):
-    return jax.tree.map(
-        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree)
-
-
 def _policy_state_specs(policy):
     return jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, jnp.float32),
                         policy.as_arrays())
@@ -181,8 +176,7 @@ def build_serve_cell(cfg, shape, mesh, ctx, kind: str,
 
 def model_flops(policy, shape) -> float:
     macs = sum(u.macs_per_token for u in policy.units)
-    tokens = shape.batch * (shape.seq if shape.kind == "train" else
-                            (shape.seq if shape.kind == "prefill" else 1))
+    tokens = shape.batch * (1 if shape.kind == "decode" else shape.seq)
     factor = 6.0 if shape.kind == "train" else 2.0
     return factor * macs * tokens
 
@@ -207,13 +201,13 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
                               model_axis="model")
 
     t0 = time.time()
+    serve_dtype = (knob_overrides or {}).get("serve_dtype") or "int4"
     if shape.kind == "train":
         step_fn, args, in_sh, out_sh, meta = build_train_cell(
             cfg, shape, mesh, ctx, knobs)
     else:
         step_fn, args, in_sh, out_sh, meta = build_serve_cell(
-            cfg, shape, mesh, ctx, shape.kind,
-            serve_dtype=(knob_overrides or {}).get("serve_dtype") or "int4")
+            cfg, shape, mesh, ctx, shape.kind, serve_dtype=serve_dtype)
 
     # donate the big mutable buffers: train state (arg 0) / decode caches
     donate = (0,) if shape.kind == "train" else \
@@ -248,7 +242,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
         "collective_s": rf.collective_s, "dominant": rf.dominant,
         "model_flops": rf.model_flops, "useful_ratio": rf.useful_ratio,
         "roofline_fraction": rf.roofline_fraction,
-        "knobs": knobs if shape.kind == "train" else {"serve": "int4"},
+        "knobs": knobs if shape.kind == "train" else {"serve": serve_dtype},
     }
     if verbose:
         gb = (bytes_per_dev or 0) / 2**30

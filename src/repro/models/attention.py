@@ -99,6 +99,26 @@ def _repeat_kv(x: jax.Array, group: int) -> jax.Array:
     return x.reshape(b, s, hkv * group, d)
 
 
+def _dense_decode_attention(q: jax.Array, ck: jax.Array, cv: jax.Array,
+                            positions: jax.Array, group: int) -> jax.Array:
+    """Per-query masked dense softmax over a contiguous (B, S_max, Hkv, D)
+    cache — the full-dtype decode math, shared between the contiguous
+    decode branch and the chunked-prefill STAGING read (which must be
+    bitwise-identical to it so a staged prefill row computes exactly what
+    a full-dtype decode row would).  Returns (B, S, H, D) float32.
+    """
+    dh = q.shape[-1]
+    kk = _repeat_kv(ck, group)
+    vv = _repeat_kv(cv, group)
+    logits = jnp.einsum("bqhd,bshd->bhqs", q.astype(jnp.float32),
+                        kk.astype(jnp.float32)) * (dh ** -0.5)
+    s_pos = jnp.arange(ck.shape[1])
+    mask = s_pos[None, None, None, :] <= positions[:, None, :, None]
+    logits = jnp.where(mask, logits, -1e30)
+    pr = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqs,bshd->bqhd", pr, vv.astype(jnp.float32))
+
+
 # --------------------------------------------------------------------- GQA
 def init_gqa(key, cfg) -> dict:
     d, h, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
@@ -141,13 +161,31 @@ def gqa_apply(p, x, bits, cfg, mode: str, cache, positions,
         # paged decode is bit-exact with contiguous decode.
         tbl = cache["tbl"]
         cbits = kvq.cache_bits(cache)
+        role = cache.get("role")
+        if role is not None:
+            # fused chunked-prefill dispatch (serve/kv_cache.with_staging):
+            # prefilling rows must not write provisional codes — their K
+            # grid calibrates over the WHOLE prompt at finalize — so their
+            # quant-pool writes are suppressed (pos >= n*page drops in
+            # paged_write_row) and they write/read full-dtype STAGING
+            # buffers instead; decode rows run the quant path untouched
+            # and their staging writes drop at the staging sentinel.
+            n_virt = jnp.int32(tbl.shape[-1] * cache["pkq"].shape[1])
+            main_pos = jnp.where(role[:, None], n_virt, positions)
+            stage_pos = jnp.where(role[:, None], positions,
+                                  jnp.int32(cache["sk"].shape[1]))
+            sk = cache_write(cache["sk"], k, stage_pos)
+            sv = cache_write(cache["sv"], v, stage_pos)
+            staged = _dense_decode_attention(q, sk, sv, positions, group)
+        else:
+            main_pos = positions
         kq_new = kvq.quantize_k(k, cache["k_scale"], cbits)
         vs_new = kvq.v_token_scale(v, cbits)
         vq_new = kvq.quantize_v(v, vs_new, cbits)
-        ck = kvq.paged_write_row(cache["pkq"], kq_new, positions, tbl)
-        cv = kvq.paged_write_row(cache["pvq"], vq_new, positions, tbl)
-        cvs = kvq.paged_write_row(cache["pv_scale"], vs_new, positions, tbl)
-        if s == 1:
+        ck = kvq.paged_write_row(cache["pkq"], kq_new, main_pos, tbl)
+        cv = kvq.paged_write_row(cache["pvq"], vq_new, main_pos, tbl)
+        cvs = kvq.paged_write_row(cache["pv_scale"], vs_new, main_pos, tbl)
+        if s == 1 and role is None:
             out = kops.paged_kv_cache_attention(
                 q[:, 0], ck, cache["k_scale"], cv, cvs, tbl,
                 positions[:, 0], cbits)[:, None]
@@ -167,10 +205,20 @@ def gqa_apply(p, x, bits, cfg, mode: str, cache, positions,
                     qi, ck, cache["k_scale"], cv, cvs, tbl, pi, cbits,
                     impl="ref")
             out = jax.vmap(_att, in_axes=(1, 1), out_axes=1)(q, positions)
+        if role is not None:
+            # per-row select: prefilling rows take the staged full-dtype
+            # output (bitwise the contiguous full-dtype decode math),
+            # decode rows the quant-kernel output; both paths are finite
+            # everywhere, so the discarded side never poisons the select
+            out = jnp.where(role[:, None, None, None],
+                            staged.astype(x.dtype), out.astype(x.dtype))
         out = out.astype(x.dtype).reshape(b, s, h * dh)
         y = qproj(out, p["wo"], bits["attn_wo"])
-        return y, {"pkq": ck, "k_scale": cache["k_scale"],
-                   "pvq": cv, "pv_scale": cvs, "tbl": tbl}
+        new = {"pkq": ck, "k_scale": cache["k_scale"],
+               "pvq": cv, "pv_scale": cvs, "tbl": tbl}
+        if role is not None:
+            new.update(sk=sk, sv=sv, role=role)
+        return y, new
 
     if mode == "decode" and isinstance(cache, dict) and "pk" in cache:
         # PAGED full-dtype serving cache: page pools in the cache dtype.
@@ -216,13 +264,28 @@ def gqa_apply(p, x, bits, cfg, mode: str, cache, positions,
         # reads the codes through the fused dequant kernel — a
         # full-precision cache is never materialized in HBM.
         cbits = kvq.cache_bits(cache)
+        role = cache.get("role")
+        if role is not None:
+            # fused chunked-prefill dispatch — same staging contract as
+            # the paged quant branch above: prefilling rows suppress
+            # their quant writes (pos >= S_max drops in cache_write) and
+            # run full-dtype through the staging buffers instead.
+            main_pos = jnp.where(role[:, None],
+                                 jnp.int32(cache["kq"].shape[1]), positions)
+            stage_pos = jnp.where(role[:, None], positions,
+                                  jnp.int32(cache["sk"].shape[1]))
+            sk = cache_write(cache["sk"], k, stage_pos)
+            sv = cache_write(cache["sv"], v, stage_pos)
+            staged = _dense_decode_attention(q, sk, sv, positions, group)
+        else:
+            main_pos = positions
         kq_new = kvq.quantize_k(k, cache["k_scale"], cbits)
         vs_new = kvq.v_token_scale(v, cbits)
         vq_new = kvq.quantize_v(v, vs_new, cbits)
-        ck = cache_write(cache["kq"], kq_new, positions)
-        cv = cache_write(cache["vq"], vq_new, positions)
-        cvs = cache_write(cache["v_scale"], vs_new, positions)
-        if s == 1:
+        ck = cache_write(cache["kq"], kq_new, main_pos)
+        cv = cache_write(cache["vq"], vq_new, main_pos)
+        cvs = cache_write(cache["v_scale"], vs_new, main_pos)
+        if s == 1 and role is None:
             out = kops.kv_cache_attention(q[:, 0], ck, cache["k_scale"],
                                           cv, cvs, positions[:, 0],
                                           cbits)[:, None]
@@ -238,10 +301,16 @@ def gqa_apply(p, x, bits, cfg, mode: str, cache, positions,
                                                cv, cvs, pi, cbits,
                                                impl="ref")
             out = jax.vmap(_att, in_axes=(1, 1), out_axes=1)(q, positions)
+        if role is not None:
+            out = jnp.where(role[:, None, None, None],
+                            staged.astype(x.dtype), out.astype(x.dtype))
         out = out.astype(x.dtype).reshape(b, s, h * dh)
         y = qproj(out, p["wo"], bits["attn_wo"])
-        return y, {"kq": ck, "k_scale": cache["k_scale"],
-                   "vq": cv, "v_scale": cvs}
+        new = {"kq": ck, "k_scale": cache["k_scale"],
+               "vq": cv, "v_scale": cvs}
+        if role is not None:
+            new.update(sk=sk, sv=sv, role=role)
+        return y, new
 
     if mode == "decode":
         # cache: {'k','v'} (B, S_max, Hkv, dh); positions: (B, S) abs pos,
@@ -252,15 +321,7 @@ def gqa_apply(p, x, bits, cfg, mode: str, cache, positions,
         # decode would have seen.
         ck = cache_write(cache["k"], k, positions)
         cv = cache_write(cache["v"], v, positions)
-        kk = _repeat_kv(ck, group)
-        vv = _repeat_kv(cv, group)
-        logits = jnp.einsum("bqhd,bshd->bhqs", q.astype(jnp.float32),
-                            kk.astype(jnp.float32)) * (dh ** -0.5)
-        s_pos = jnp.arange(cache["k"].shape[1])
-        mask = s_pos[None, None, None, :] <= positions[:, None, :, None]
-        logits = jnp.where(mask, logits, -1e30)
-        pr = jax.nn.softmax(logits, axis=-1)
-        out = jnp.einsum("bhqs,bshd->bqhd", pr, vv.astype(jnp.float32))
+        out = _dense_decode_attention(q, ck, cv, positions, group)
         out = out.astype(x.dtype).reshape(b, s, h * dh)
         y = qproj(out, p["wo"], bits["attn_wo"])
         return y, {"k": ck, "v": cv}

@@ -14,9 +14,10 @@ not deep inside a jit or as a silent admission deadlock.
                                          cache="quantized", cache_bits=4,
                                          draft=DraftSpec(kind="ngram", k=8)))
 
-The old flat kwargs (``ServeEngine(..., weights="packed")``) keep working
-for one release through a ``DeprecationWarning`` shim that builds the
-spec internally; passing BOTH a spec and flat kwargs is an error.
+The old flat kwargs (``ServeEngine(..., weights="packed")``) survived one
+release behind a ``DeprecationWarning`` shim; the shim is gone and any
+flat serving kwarg now raises a loud ``TypeError`` naming the migration
+(every serving knob lives on the spec).
 
 ``DraftSpec`` names the speculative draft role (serve/spec.py):
 
@@ -110,6 +111,10 @@ class EngineSpec:
     n_pages: Any = None             # physical pool size; None -> capacity
                                     # parity with contiguous (B*max_pages)
     decode_chunk: int = 16          # scanned decode steps per dispatch
+    prefill_chunk: Optional[int] = None   # None -> whole-prompt admission;
+                                    # int -> prompts prefill in chunks of
+                                    # this many tokens, fused with decode
+                                    # (scheduler chunked admission)
     sampler: sampling.SamplerConfig = sampling.GREEDY
     cache_dtype: Any = None         # None -> cfg.compute_dtype
     mesh: Any = None                # jax Mesh with a "model" axis -> TP
@@ -132,6 +137,16 @@ class EngineSpec:
             # a zero/negative scan length used to fail deep inside jit
             raise ValueError(f"decode_chunk must be >= 1, "
                              f"got {self.decode_chunk}")
+        if self.prefill_chunk is not None:
+            if int(self.prefill_chunk) < 1:
+                raise ValueError(f"prefill_chunk must be >= 1 when given, "
+                                 f"got {self.prefill_chunk}")
+            if self.mesh is not None:
+                raise ValueError(
+                    "prefill_chunk does not compose with mesh= yet: the "
+                    "fused prefill/decode dispatch needs a sharded "
+                    "multi-token decode wrapper — chunk-prefill "
+                    "single-device or drop the mesh")
         if self.cache_layout == "paged":
             if self.mesh is not None:
                 raise ValueError(
@@ -178,6 +193,13 @@ class EngineSpec:
                     "speculative decoding needs rollback-able attention "
                     "caches; recurrent (mamba/xlstm) block state cannot "
                     "un-integrate rejected tokens")
+            if self.prefill_chunk is not None and has_recurrent_state(cfg):
+                raise ValueError(
+                    "chunked prefill (prefill_chunk=) serves attention "
+                    "caches only: a fused dispatch pads every row to the "
+                    "chunk width and recurrent (mamba/xlstm) block state "
+                    "would integrate the pad tokens — serve such configs "
+                    "with whole-prompt admission (prefill_chunk=None)")
         if params is not None:
             # imported here: packing pulls in the kernel stack, which the
             # pure-knob validation path should not need

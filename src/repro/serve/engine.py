@@ -87,7 +87,6 @@ TPU and measured by benchmarks/serve_bench.py.
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -177,21 +176,13 @@ def _bits_for(policy_arrays, slot_of, path) -> Any:
 # EngineSpec validation needs them without importing the engine); both
 # stay re-exported here for existing callers.
 
-class _Unset:
-    """Sentinel for 'flat kwarg not passed' (None is a meaningful value
-    for several knobs, so it cannot mark absence)."""
-    def __repr__(self):
-        return "<unset>"
+# engine knobs consolidated into EngineSpec, in field order — resolved
+# onto the engine as plain attributes at construction
+_SPEC_FIELDS = ("decode_chunk", "prefill_chunk", "sampler", "cache_dtype",
+                "weights", "cache", "cache_bits", "mesh", "cache_layout",
+                "page_size", "n_pages")
 
 
-_UNSET = _Unset()
-# engine knobs consolidated into EngineSpec, in field order
-_SPEC_FIELDS = ("decode_chunk", "sampler", "cache_dtype", "weights",
-                "cache", "cache_bits", "mesh", "cache_layout", "page_size",
-                "n_pages")
-
-
-@dataclasses.dataclass
 class ServeEngine:
     """Batched decoding with a prefilled, length-tracked KV cache.
 
@@ -206,56 +197,44 @@ class ServeEngine:
     the scheduler serves them by prefilling each prompt at its exact
     length instead of a padded bucket.
 
+    Every serving knob rides on ``spec=EngineSpec(...)`` (serve/config.py)
+    — the historical flat kwargs (``ServeEngine(..., weights="packed")``)
+    lived one release behind a DeprecationWarning shim and now raise a
+    loud ``TypeError`` with the migration.  After construction each knob
+    is a plain attribute (``engine.decode_chunk`` etc.), resolved from
+    the spec.
+
     ``mesh``: a jax Mesh with a ``"model"`` axis enables tensor-parallel
     serving (packed weights only): params are shard-packed and placed at
     construction, caches allocate sharded along the KV-head axis, and
     prefill/decode run under shard_map — the public surface (and the
     scheduler above it) is unchanged.
     """
-    cfg: Any
-    params: Any                     # serve-layout params
-    policy_arrays: Any
-    ctx: Any
-    max_seq: int
-    # serving knobs — the typed surface is ``spec=EngineSpec(...)``
-    # (serve/config.py).  The flat kwargs below are the historical
-    # surface, kept alive one release behind a DeprecationWarning shim
-    # that builds the spec; the _UNSET sentinels are how the shim tells
-    # "explicitly passed" from "defaulted" (None is meaningful for
-    # several knobs).  After __post_init__ every knob is a plain
-    # attribute again (engine.decode_chunk etc.), resolved from the spec.
-    decode_chunk: Any = _UNSET      # int, default 16
-    sampler: Any = _UNSET           # sampling.SamplerConfig, default GREEDY
-    cache_dtype: Any = _UNSET       # None -> cfg.compute_dtype (parity)
-    weights: Any = _UNSET           # "fake_quant" | "packed" (DESIGN.md §3)
-    cache: Any = _UNSET             # "full" | "quantized" (DESIGN.md §3)
-    cache_bits: Any = _UNSET        # int 8/4, or {group: per-layer bits}
-    mesh: Any = _UNSET              # jax Mesh with a "model" axis -> TP
-    cache_layout: Any = _UNSET      # "contiguous" | "paged" (serve/paging)
-    page_size: Any = _UNSET         # tokens per physical page (paged)
-    n_pages: Any = _UNSET           # pool size; None -> capacity parity
-    spec: Optional[EngineSpec] = None
 
-    def __post_init__(self):
-        flat = {name: getattr(self, name) for name in _SPEC_FIELDS}
-        given = {k: v for k, v in flat.items() if v is not _UNSET}
-        if self.spec is not None:
-            if given:
-                raise ValueError(
-                    f"ServeEngine got both spec=EngineSpec(...) and flat "
-                    f"kwarg(s) {sorted(given)} — put every serving knob on "
-                    f"the spec")
-            if not isinstance(self.spec, EngineSpec):
-                raise ValueError(f"spec must be an EngineSpec, "
-                                 f"got {type(self.spec).__name__}")
-        else:
-            if given:
-                warnings.warn(
-                    "flat ServeEngine serving kwargs are deprecated — "
-                    "pass ServeEngine(..., spec=EngineSpec(" +
-                    ", ".join(f"{k}=..." for k in sorted(given)) + "))",
-                    DeprecationWarning, stacklevel=3)
-            self.spec = EngineSpec(**given)
+    def __init__(self, cfg: Any, params: Any, policy_arrays: Any, ctx: Any,
+                 max_seq: int, spec: Optional[EngineSpec] = None, **legacy):
+        if legacy:
+            known = sorted(set(legacy) & set(_SPEC_FIELDS))
+            raise TypeError(
+                f"ServeEngine() got unexpected keyword argument(s) "
+                f"{sorted(legacy)}: flat serving kwargs were removed "
+                f"(they lived one release behind the PR-7 "
+                f"DeprecationWarning shim) — pass "
+                f"ServeEngine(..., spec=EngineSpec("
+                + ", ".join(f"{k}=..." for k in (known or sorted(legacy)))
+                + ")) instead; every serving knob lives on the spec "
+                f"(serve/config.py)")
+        self.cfg = cfg
+        self.params = params            # serve-layout params
+        self.policy_arrays = policy_arrays
+        self.ctx = ctx
+        self.max_seq = max_seq
+        if spec is None:
+            spec = EngineSpec()
+        elif not isinstance(spec, EngineSpec):
+            raise ValueError(f"spec must be an EngineSpec, "
+                             f"got {type(spec).__name__}")
+        self.spec = spec
         for name in _SPEC_FIELDS:
             setattr(self, name, getattr(self.spec, name))
         self.draft = self.spec.draft
@@ -283,9 +262,10 @@ class ServeEngine:
             # n_steps is the scan length -> static (one compile per distinct
             # chunk size; generate uses at most two: decode_chunk + a tail)
             self._decode = jax.jit(self._decode_impl, static_argnums=(9,))
-            # speculative verify: S_v = k+1 is a SHAPE, so jit re-traces
-            # per distinct draft length (one in practice)
-            self._verify = jax.jit(self._verify_impl)
+            # fused multi-token dispatch (speculative verify AND chunked
+            # prefill): the token width S is a SHAPE, so jit re-traces per
+            # distinct width (k+1 and/or prefill_chunk in practice)
+            self._fused = jax.jit(self._fused_impl)
 
     def _resolve_cache_plan(self):
         """Derive the pattern-cache layout from the PARAMS layout
@@ -504,6 +484,23 @@ class ServeEngine:
             lengths=jax.device_put(c.lengths,
                                    NamedSharding(self.mesh, P(None))))
 
+    def new_staging_cache(self, batch: int) -> Optional[ServeCache]:
+        """Full-dtype contiguous staging cache for chunked prefill over a
+        QUANTIZED cache (contiguous or paged): prefilling rows write
+        provisional full-dtype K/V here because the per-request K quant
+        grid calibrates over the WHOLE prompt — provisional quantized
+        writes would not be bit-exact with whole-prompt admission.  On
+        prompt completion the scheduler finalizes the slot with
+        whole-prompt calibration (kv_cache.finalize_slot /
+        paging.finalize_slot_pages).  Returns None for full-dtype caches,
+        which chunk in place (a prefill chunk is just a multi-token
+        decode row)."""
+        if self.cache != "quantized":
+            return None
+        return kv_cache.init_cache(self._cfg, batch, self.max_seq,
+                                   dtype=self.cache_dtype,
+                                   plan=self._cache_plan)
+
     @property
     def max_pages(self) -> int:
         """Block-table width: logical pages per slot (ceil(S_max/page))."""
@@ -628,29 +625,95 @@ class ServeEngine:
                                      active=active)
         return cache, tok, toks
 
-    # -------------------------------------------- speculative verify
-    def _verify_impl(self, params, pa, layers, lengths, tokens, active):
-        """Score S_v = k+1 positions per slot in ONE decode-mode forward.
+    # ------------------------- fused multi-token dispatch (verify/chunk)
+    def _fused_impl(self, params, pa, layers, lengths, tokens, n_valid,
+                    active, key, nonces, t_idx):
+        """Score up to S positions per slot in ONE decode-mode forward —
+        the shared core of speculative verify AND fused chunked prefill.
 
-        tokens: (B, S_v) = [feed token, draft_0 .. draft_{k-1}]; row rows
-        enter the cache at positions lengths .. lengths+k (inactive slots
-        pin out of range, exactly like the decode scan), and the
+        tokens: (B, S); row r's first ``n_valid[r]`` tokens are real
+        (a verify row feeds [feed, draft_0..draft_{k-1}] with n_valid =
+        k+1; a prefill-chunk row feeds its next prompt-chunk tokens; a
+        plain decode row fused into the dispatch feeds one token with
+        n_valid = 1).  Valid rows enter the cache at positions
+        lengths .. lengths+n_valid-1; positions past a row's n_valid (and
+        inactive rows) pin out of range exactly like the decode scan, so
+        their writes drop and their outputs are garbage-but-finite.  The
         per-query causal mask in models/attention gives position i the
         prefix a sequential decode would have seen — so the returned
-        greedy tokens (B, S_v) are bit-exact with k+1 scanned decode
+        greedy tokens (B, S) are bit-exact with n_valid scanned decode
         steps fed the same tokens (the verify parity bar, DESIGN.md §3).
-        Returns (written cache layers, greedy argmax tokens, logits).
+
+        Sampling rides per row: ``sampled[r]`` draws from row r's LAST
+        valid logits (index n_valid[r]-1) with the scheduler-invariant
+        key (nonces[r], t_idx[r]) — a prefill row completing its prompt
+        samples its first token exactly like whole-prompt admission
+        (t_idx 0), a fused decode row exactly like the scanned chunk.
+
+        Returns (written cache layers, sampled (B,), greedy argmax (B, S),
+        logits (B, S, V)).
         """
         if self.weights == "packed" and not kops.on_tpu():
             params = packing.decode_weight_view(params)
-        b, s_v = tokens.shape
-        pos = lengths[:, None] + jnp.arange(s_v, dtype=jnp.int32)[None, :]
-        pos = jnp.where(active[:, None], pos, jnp.int32(self.max_seq))
+        b, s = tokens.shape
+        pos = lengths[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+        valid = active[:, None] \
+            & (jnp.arange(s, dtype=jnp.int32)[None, :] < n_valid[:, None])
+        pos = jnp.where(valid, pos, jnp.int32(self.max_seq))
         batch = {"tokens": tokens, **self._positions_batch(pos)}
         logits, layers, _ = tf.apply(
             params, pa, batch, self._cfg, self.ctx,
             mode="decode", caches=layers, positions=pos)
-        return layers, jnp.argmax(logits, axis=-1).astype(jnp.int32), logits
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        keys = sampling.slot_keys(key, nonces, t_idx)
+        last = logits[jnp.arange(b), n_valid - 1]
+        sampled = sampling.sample(last, keys, self.sampler)
+        return layers, sampled, greedy, logits
+
+    def fused_step(self, cache, tokens: jax.Array, n_valid, key: jax.Array,
+                   *, nonces, t_idx, active: Optional[jax.Array] = None,
+                   staging=None, role=None):
+        """One fused prefill-chunk + decode/verify dispatch (scheduler
+        chunked admission — DESIGN.md §3 chunked-prefill contract).
+
+        ``n_valid``: (B,) tokens each row actually consumes; ``t_idx``:
+        (B,) per-row generated-token index for the sampling key (0 for a
+        prefill row completing its prompt); ``staging``/``role``: the
+        full-dtype staging cache + (B,) bool prefilling mask, required
+        whenever a QUANTIZED cache serves prefilling rows
+        (kv_cache.with_staging — full-dtype caches chunk in place and
+        pass staging=None).
+
+        The cache is NOT advanced: the caller commits per-row counts via
+        ``commit_verified`` (prefill rows their chunk length, decode rows
+        1, verify rows their accepted count) — uncommitted rows are
+        stale-by-construction, same watermark argument as ``verify_step``.
+
+        Returns (scored layers, updated staging cache or None,
+        sampled (B,), greedy (B, S), logits).
+        """
+        if self.mesh is not None:
+            raise ValueError("fused_step is single-device (EngineSpec "
+                             "refuses prefill_chunk + mesh=)")
+        b = cache.lengths.shape[0]
+        if active is None:
+            active = jnp.ones((b,), bool)
+        paged = isinstance(cache, PagedServeCache)
+        layers_in = (paging.with_tables(cache.layers, cache.block_tbl)
+                     if paged else cache.layers)
+        if staging is not None:
+            layers_in = kv_cache.with_staging(
+                layers_in, staging.layers,
+                jnp.asarray(np.asarray(role, bool)))
+        layers, sampled, greedy, logits = self._fused(
+            self.params, self.policy_arrays, layers_in, cache.lengths,
+            tokens, jnp.asarray(n_valid, jnp.int32), jnp.asarray(active),
+            key, jnp.asarray(nonces, jnp.int32),
+            jnp.asarray(t_idx, jnp.int32))
+        if staging is not None:
+            layers, staged = kv_cache.strip_staging(layers, staging.layers)
+            staging = dataclasses.replace(staging, layers=staged)
+        return layers, staging, sampled, greedy, logits
 
     def verify_step(self, cache, tokens: jax.Array,
                     active: Optional[jax.Array] = None):
@@ -672,14 +735,21 @@ class ServeEngine:
         if self.mesh is not None:
             raise ValueError("verify_step is single-device (EngineSpec "
                              "refuses draft= + mesh=)")
-        b = cache.lengths.shape[0]
+        b, s_v = tokens.shape
         if active is None:
             active = jnp.ones((b,), bool)
         paged = isinstance(cache, PagedServeCache)
         layers_in = (paging.with_tables(cache.layers, cache.block_tbl)
                      if paged else cache.layers)
-        return self._verify(self.params, self.policy_arrays, layers_in,
-                            cache.lengths, tokens, active)
+        # the fused core with every row full-width (n_valid = k+1) IS the
+        # historical verify dispatch — the valid mask reduces to the
+        # active mask, bit-exact with the pre-fusion implementation
+        zeros = jnp.zeros((b,), jnp.int32)
+        layers, _, greedy, logits = self._fused(
+            self.params, self.policy_arrays, layers_in, cache.lengths,
+            tokens, jnp.full((b,), s_v, jnp.int32), active,
+            jax.random.PRNGKey(0), zeros, zeros)
+        return layers, greedy, logits
 
     def commit_verified(self, cache, layers, steps,
                         active: Optional[jax.Array] = None):

@@ -96,6 +96,130 @@ def is_quant_leaf(node) -> bool:
     return isinstance(node, dict) and "kq" in node
 
 
+def set_length(cache: ServeCache, slot: int, length: int) -> ServeCache:
+    """Pin one slot's valid length (chunked admission starts a slot at its
+    already-covered prefix length and advances per chunk)."""
+    return dataclasses.replace(
+        cache, lengths=cache.lengths.at[slot].set(jnp.int32(length)))
+
+
+# ------------------------------------------- chunked-prefill staging
+def _is_any_quant_leaf(node) -> bool:
+    return isinstance(node, dict) and ("kq" in node or "pkq" in node)
+
+
+def _zip_quant_leaves(node, other, fn):
+    """Zip-walk two structurally-matching cache trees, applying
+    ``fn(quant_leaf, other_leaf)`` at QUANTIZED attention leaves only
+    (contiguous ``kq`` or paged ``pkq``); every other leaf of ``node``
+    passes through untouched.  ``other`` is the full-dtype STAGING tree
+    (same init plan, so buckets/lists line up positionally)."""
+    if _is_any_quant_leaf(node):
+        return fn(node, other)
+    if isinstance(node, dict) and "pk" in node:
+        return node                  # paged full-dtype leaf: written
+                                     # directly during chunks, no staging
+    if isinstance(node, LayerBuckets):
+        return LayerBuckets(
+            tuple(_zip_quant_leaves(b, o, fn)
+                  for b, o in zip(node.buckets, other.buckets)),
+            node.sizes)
+    if isinstance(node, dict):
+        return {k: _zip_quant_leaves(v, other[k], fn)
+                for k, v in node.items()}
+    if isinstance(node, (list, tuple)):
+        return [_zip_quant_leaves(v, o, fn) for v, o in zip(node, other)]
+    return node
+
+
+def with_staging(layers: Any, staging: Any, role: jax.Array) -> Any:
+    """Inject chunked-prefill staging into every QUANTIZED attention leaf.
+
+    A prefilling row cannot write provisional codes into a quantized
+    cache — its per-request K grid calibrates over the WHOLE prompt, so
+    mid-prompt codes would quantize against the wrong grid and break
+    bit-exact parity with whole-prompt admission (DESIGN.md §3).  Instead
+    each quant leaf gets its full-dtype staging buffers (``sk``/``sv``,
+    (B, S_max, Hkv, D) — same init plan, so stacked leaves pair with
+    stacked staging) plus the per-row ``role`` mask ((B,) bool, True =
+    prefilling): the attention branch writes/reads prefilling rows
+    through the staging buffers at full precision and suppresses their
+    quant-cache writes, selecting per row at the output.  Full-dtype
+    leaves need none of this — a chunk row is just a multi-token decode
+    row there — so they are left untouched."""
+    def put(d, stage):
+        r = role
+        pool = d.get("kq", d.get("pkq"))
+        if pool.ndim == 5:                       # stacked scan leaf
+            r = jnp.broadcast_to(role, (pool.shape[0],) + role.shape)
+        return dict(d, sk=stage["k"], sv=stage["v"], role=r)
+    return _zip_quant_leaves(layers, staging, put)
+
+
+def strip_staging(layers: Any, staging_template: Any):
+    """Inverse of ``with_staging``: split the updated staging buffers back
+    out of the quant leaf dicts.  Returns (layers without staging keys,
+    updated staging layers — ``staging_template`` with its attention
+    leaves' k/v replaced)."""
+    stripped = _zip_quant_leaves(
+        layers, staging_template,
+        lambda d, _s: {k: v for k, v in d.items()
+                       if k not in ("sk", "sv", "role")})
+    staged = _zip_with_quant(staging_template, layers)
+    return stripped, staged
+
+
+def _zip_with_quant(stage_node, node):
+    """Walk the STAGING tree, adopting sk/sv wherever the main tree holds
+    a quant leaf (mirror of ``_zip_quant_leaves`` with roles swapped)."""
+    if _is_any_quant_leaf(node):
+        return dict(stage_node, k=node["sk"], v=node["sv"])
+    if isinstance(node, dict) and "pk" in node:
+        return stage_node            # paged full-dtype leaf: no staging
+    if isinstance(node, LayerBuckets):
+        return LayerBuckets(
+            tuple(_zip_with_quant(s, b)
+                  for s, b in zip(stage_node.buckets, node.buckets)),
+            node.sizes)
+    if isinstance(node, dict):
+        return {k: _zip_with_quant(stage_node[k], v)
+                for k, v in node.items()}
+    if isinstance(node, (list, tuple)):
+        return [_zip_with_quant(s, v) for s, v in zip(stage_node, node)]
+    return stage_node
+
+
+def finalize_slot(cache: ServeCache, staging: ServeCache, slot: int,
+                  length: int) -> ServeCache:
+    """Adopt one slot's completed chunked prefill into the QUANT leaves.
+
+    The slot's staged full-dtype rows [0, length) quantize exactly like
+    whole-prompt admission: per-channel K grid calibrated over the whole
+    valid prompt, per-token V scales — then land in the quant-cache slot
+    row.  Full-dtype leaves were written directly during the chunks (the
+    decode write path) and are NOT touched — overwriting them from
+    staging would adopt stale data on mixed full+quant stacks."""
+    lengths1 = jnp.asarray([length], jnp.int32)
+
+    def put(d, stage):
+        stacked = d["kq"].ndim == 5
+        sl = (slice(None), slice(slot, slot + 1)) if stacked \
+            else (slice(slot, slot + 1),)
+        qc = kvq.quantize_prefill({"k": stage["k"][sl], "v": stage["v"][sl]},
+                                  lengths1, kvq.cache_bits(d))
+        out = dict(d)
+        b_ax = 1 if stacked else 0
+        for key in ("kq", "vq", "v_scale", "k_scale"):
+            start = tuple(slot if i == b_ax else 0
+                          for i in range(d[key].ndim))
+            out[key] = jax.lax.dynamic_update_slice(
+                d[key], qc[key].astype(d[key].dtype), start)
+        return out
+
+    return dataclasses.replace(
+        cache, layers=_zip_quant_leaves(cache.layers, staging.layers, put))
+
+
 def quantize_like(template: Any, got: Any, lengths: jax.Array) -> Any:
     """Convert full-precision prefill layers into the (possibly quantized)
     structure of ``template``.

@@ -277,6 +277,47 @@ def write_slot_pages(cache: PagedServeCache, got_layers: Any, slot: int,
                                                  put))
 
 
+def finalize_slot_pages(cache: PagedServeCache, staging, slot: int,
+                        length: int, pages) -> PagedServeCache:
+    """Adopt one slot's completed chunked prefill into QUANTIZED pools.
+
+    The paged counterpart of ``kv_cache.finalize_slot``: the slot's
+    staged full-dtype rows [0, length) quantize with whole-prompt
+    calibration (per-request K grid over the whole valid prompt) and
+    scatter into ``pages`` — quantized chunked prefill always starts at
+    token 0 (quantized prefix sharing is identical-prompt-only, which
+    skips the model entirely).  Full-dtype ``pk`` pools were written
+    directly during the chunks through the block table and are left
+    untouched."""
+    phys = jnp.asarray(np.asarray(pages, np.int32))
+    lengths1 = jnp.asarray([length], jnp.int32)
+
+    def put(d, stage):
+        if "pkq" not in d:
+            return d
+        stacked = d["pkq"].ndim == 5
+        sl = (slice(None), slice(slot, slot + 1)) if stacked \
+            else (slice(slot, slot + 1),)
+        qc = kvq.quantize_prefill({"k": stage["k"][sl], "v": stage["v"][sl]},
+                                  lengths1, kvq.cache_bits(d))
+        out = dict(d)
+        out["pkq"] = _scatter_pages(d["pkq"], _squeeze_b(qc["kq"], stacked),
+                                    phys, stacked)
+        out["pvq"] = _scatter_pages(d["pvq"], _squeeze_b(qc["vq"], stacked),
+                                    phys, stacked)
+        out["pv_scale"] = _scatter_pages(
+            d["pv_scale"], _squeeze_b(qc["v_scale"], stacked), phys, stacked)
+        start = (0, slot, 0, 0) if stacked else (slot, 0, 0)
+        out["k_scale"] = jax.lax.dynamic_update_slice(
+            d["k_scale"], qc["k_scale"].astype(d["k_scale"].dtype), start)
+        return out
+
+    from repro.serve import kv_cache as kvc
+    return dataclasses.replace(
+        cache, layers=kvc._zip_quant_leaves(cache.layers, staging.layers,
+                                            put))
+
+
 def copy_pages(cache: PagedServeCache, src: int, dst: int) -> PagedServeCache:
     """Duplicate one physical page across every pool leaf — the
     admission-time copy-on-write for a shared partial tail page."""

@@ -25,6 +25,28 @@ The whole loop is host-side control over jitted batch steps — no
 recompilation as requests come and go, because request boundaries only
 ever change ARRAY CONTENTS (lengths, active mask, feed tokens), never
 shapes.
+
+**Chunked prefill** (``EngineSpec(prefill_chunk=N)``, DESIGN.md §3):
+whole-prompt admission runs a request's entire prompt as one prefill
+dispatch — every decoding batchmate stalls for the full prompt length
+(head-of-line blocking; the p99 inter-token stall under long-prompt
+injection is the cost).  With a chunk budget the prompt is consumed N
+tokens at a time INSIDE the regular decode cadence: each round becomes
+one fused dispatch (engine.fused_step) where prefilling slots are
+multi-token rows eating their next prompt chunk and decoding slots are
+1-token rows (or k+1-token verify rows under speculation) — so no
+running slot ever waits more than one chunk-width dispatch between
+tokens.  Quantized caches stage chunk writes at full dtype
+(engine.new_staging_cache) and re-quantize the finished prompt with
+whole-prompt calibration at completion, keeping chunked admission
+token-for-token identical to whole-prompt admission.
+
+A deterministic sim clock ticks in model-step units (a prefill costs its
+padded token count, a scanned chunk its step count, a fused dispatch its
+token width); ``latency_report()`` turns the per-request emission clocks
+into p50/p95/p99 TTFT and inter-token stall percentiles —
+benchmarks/serve_bench.py gates the chunked-vs-whole stall improvement
+on exactly these geometry-deterministic numbers.
 """
 from __future__ import annotations
 
@@ -64,6 +86,11 @@ class _Slot:
     emitted: List[int]
     nonce: int                     # admission nonce: folds into every
                                    # sampling key of this request's tokens
+    # chunked admission: prompt tokens not yet consumed (empty = decoding)
+    pending: List[int] = dataclasses.field(default_factory=list)
+    # paged full-miss admissions keep their plan so the prefix registers
+    # once the chunked prefill completes (whole-prompt registers inline)
+    plan: Optional[paging.AdmitPlan] = None
 
 
 class ContinuousBatchingScheduler:
@@ -101,6 +128,17 @@ class ContinuousBatchingScheduler:
         self._admit_idx = 0            # next admission nonce (sampling keys
                                        # fold (nonce, per-request token idx))
         self.completed: Dict[str, Completion] = {}
+        # chunked prefill (EngineSpec.prefill_chunk): prompts are consumed
+        # chunk-at-a-time inside fused dispatches; quantized caches stage
+        # the chunk writes at full dtype until whole-prompt finalize
+        self._chunked = engine.prefill_chunk is not None
+        self.staging = (engine.new_staging_cache(n_slots)
+                        if self._chunked else None)
+        # deterministic sim clock (model-step units) + per-request emission
+        # times — latency_report() derives TTFT / inter-token percentiles
+        self.clock = 0
+        self._submit_clock: Dict[str, int] = {}
+        self._emit_clocks: Dict[str, List[int]] = {}
         # speculative decoding (serve/spec.py): when the engine's spec
         # names a draft, decode rounds go draft-propose -> one verify
         # dispatch -> accept/commit instead of scanned chunks.  Per-slot
@@ -129,6 +167,7 @@ class ContinuousBatchingScheduler:
                     f"request {req.uid}: needs {need} pages but the pool "
                     f"holds {self.allocator.n_pages} — raise "
                     f"ServeEngine(n_pages=...)")
+        self._submit_clock.setdefault(req.uid, self.clock)
         self.queue.append(req)
 
     def run(self) -> Dict[str, Completion]:
@@ -136,47 +175,131 @@ class ContinuousBatchingScheduler:
         while self.queue or any(s is not None for s in self.slots):
             self._admit()
             if any(s is not None for s in self.slots):
-                if self.spec is not None:
+                if self._chunked and any(s is not None and s.pending
+                                         for s in self.slots):
+                    self._fused_round()
+                elif self.spec is not None:
                     self._spec_round()
                 else:
                     self._decode_harvest()
         return self.completed
 
     # ------------------------------------------------------------ internals
+    def _next_nonce(self) -> int:
+        """Each admission gets its own nonce: identical prompts admitted
+        at different times must not reuse one Gumbel draw, and every
+        later sampling key of this request folds the same nonce — so its
+        whole trajectory matches engine.generate(..., nonces=[n])
+        regardless of slot, batchmates, or chunk geometry.  Chunked
+        admission assigns at slot CLAIM, which is the same FIFO order
+        whole-prompt admission assigns in — so both admission modes give
+        a request the same nonce, hence the same stochastic trajectory."""
+        nonce = self._admit_idx
+        self._admit_idx += 1
+        return nonce
+
+    def _record_emit(self, uid: str, clock: Optional[int] = None) -> None:
+        self._emit_clocks.setdefault(uid, []).append(
+            self.clock if clock is None else clock)
+
+    def _begin_decode(self, j: int, slot: _Slot, first: int) -> None:
+        """A request's prompt is fully in-cache and its first token is
+        sampled (key (nonce, 0)): transition the slot to decoding —
+        shared by whole-prompt admission, identical-prompt hits, and
+        chunked-prefill completion."""
+        slot.emitted.append(first)
+        self._record_emit(slot.req.uid)
+        if self._finish_reason(slot) is not None:
+            self._evict(slot, j)        # finished on its very first token
+            return
+        self.slots[j] = slot
+        self._tok[j, 0] = first
+        if self.spec is not None:
+            self.spec.admit(j, slot.req.prompt, first, uid=slot.req.uid)
+
     def _admit(self) -> None:
         for j in range(self.n_slots):
             if self.slots[j] is not None or not self.queue:
                 continue
             req = self.queue.popleft()
-            if self._paged:
-                last = self._admit_paged(j, req)
-                if last is None:
+            if self._chunked:
+                if not self._claim_chunked(j, req):
                     # pool exhausted: defer admission (FIFO preserved)
                     # until an eviction returns pages to the free list
                     self.queue.appendleft(req)
                     return
+                continue
+            if self._paged:
+                last = self._admit_paged(j, req)
+                if last is None:
+                    self.queue.appendleft(req)
+                    return
             else:
                 last = self._admit_contiguous(j, req)
-            # each admission gets its own nonce: identical prompts admitted
-            # at different times must not reuse one Gumbel draw, and every
-            # later sampling key of this request folds the same nonce — so
-            # its whole trajectory matches engine.generate(..., nonces=[n])
-            # regardless of slot, batchmates, or chunk geometry.
-            nonce = self._admit_idx
-            self._admit_idx += 1
+            nonce = self._next_nonce()
             first = int(sampling.sample(
                 last, sampling.slot_keys(self.key,
                                          jnp.asarray([nonce], jnp.int32),
                                          jnp.zeros((1,), jnp.int32)),
                 self.engine.sampler)[0])
-            slot = _Slot(req=req, emitted=[first], nonce=nonce)
-            if self._finish_reason(slot) is not None:
-                self._evict(slot, j)        # finished on its very first token
-                continue
-            self.slots[j] = slot
-            self._tok[j, 0] = first
-            if self.spec is not None:
-                self.spec.admit(j, req.prompt, first)
+            self._begin_decode(j, _Slot(req=req, emitted=[], nonce=nonce),
+                               first)
+
+    def _claim_chunked(self, j: int, req: Request) -> bool:
+        """Chunked admission claims the SLOT (and, paged, its worst-case
+        pages — exactly ``plan_admission``, so allocator state after a
+        chunked claim is identical to a whole-prompt admission) but runs
+        NO model call: the prompt lands in ``pending`` and is consumed
+        chunk-at-a-time by ``_fused_round``.  Returns False when the page
+        pool cannot cover the request (caller defers, FIFO preserved).
+        An identical-prompt hit still short-circuits to decoding with no
+        model call at all (the donor's pages/grids/logits are this
+        request's own admission outcome)."""
+        eng = self.engine
+        n_prompt = len(req.prompt)
+        if not self._paged:
+            # the slot may be re-used: its valid length restarts at 0 and
+            # the chunk writes overwrite the stale rows front-to-back
+            self.cache = kv_cache.set_length(self.cache, j, 0)
+            self.slots[j] = _Slot(req=req, emitted=[],
+                                  nonce=self._next_nonce(),
+                                  pending=list(req.prompt))
+            return True
+        plan = paging.plan_admission(self.allocator, self.registry,
+                                     tuple(req.prompt), req.max_new_tokens,
+                                     quantized=eng.cache == "quantized")
+        if plan is None:
+            return False
+        self.cache = paging.set_table_rows(self.cache, j, plan.pages)
+        self._slot_pages[j] = plan.pages
+        if plan.cow_src is not None:
+            self.cache = paging.copy_pages(self.cache, plan.cow_src,
+                                           plan.fresh[0])
+        nonce = self._next_nonce()
+        if plan.suffix_start >= n_prompt and plan.entry is not None:
+            # identical-prompt hit: no model call, no chunking to do
+            if plan.entry.k_scales is not None:
+                self.cache = paging.set_slot_k_scales(self.cache, j,
+                                                      plan.entry.k_scales)
+            self.cache = paging.set_length(self.cache, j, n_prompt)
+            first = int(sampling.sample(
+                plan.entry.last_logits[None],
+                sampling.slot_keys(self.key, jnp.asarray([nonce], jnp.int32),
+                                   jnp.zeros((1,), jnp.int32)),
+                eng.sampler)[0])
+            self._begin_decode(j, _Slot(req=req, emitted=[], nonce=nonce),
+                               first)
+            return True
+        # page-aligned prefix hit (full-dtype cache): only the suffix
+        # chunks through the model, attending over the shared prefix
+        # pages; miss: the whole prompt chunks from position 0 and the
+        # prefix registers at completion (slot.plan)
+        self.cache = paging.set_length(self.cache, j, plan.suffix_start)
+        self.slots[j] = _Slot(
+            req=req, emitted=[], nonce=nonce,
+            pending=list(req.prompt[plan.suffix_start:]),
+            plan=plan if plan.suffix_start == 0 else None)
+        return True
 
     def _bucket_pad(self, n: int, cap: int) -> int:
         """Bucket a prompt/suffix length so jit caches stay warm, never
@@ -201,6 +324,8 @@ class ContinuousBatchingScheduler:
             jnp.asarray(toks), jnp.asarray([n_prompt], jnp.int32))
         self.cache = kv_cache.write_slot(self.cache, pre, j, n_prompt,
                                          self._batch_axes)
+        self.clock += pad               # whole-prompt prefill: every other
+                                        # slot stalls for the padded prompt
         return last
 
     def _admit_paged(self, j: int, req: Request) -> Optional[jax.Array]:
@@ -244,6 +369,7 @@ class ContinuousBatchingScheduler:
             toks[0, :len(suffix)] = np.asarray(suffix, np.int32)
             last, suf = eng.prefill_suffix(jnp.asarray(toks), len(suffix),
                                            plan.suffix_start, self.cache, j)
+            self.clock += pad
             start_page = plan.suffix_start // page
             phys = plan.pages[start_page:
                               start_page + kvq.page_count(pad, page)]
@@ -257,6 +383,7 @@ class ContinuousBatchingScheduler:
             toks[0, :n_prompt] = np.asarray(req.prompt, np.int32)
             last, pre = eng.prefill(jnp.asarray(toks),
                                     jnp.asarray([n_prompt], jnp.int32))
+            self.clock += pad
             n_write = min(kvq.page_count(pad, page), len(plan.pages))
             self.cache = paging.write_slot_pages(self.cache, pre, j,
                                                  n_prompt, 0,
@@ -318,12 +445,15 @@ class ContinuousBatchingScheduler:
             self.cache, jnp.asarray(self._tok), self.key, nonces=nonces,
             step0=t0, active=jnp.asarray(active), n_steps=n_steps)
         toks_np = np.asarray(toks)
+        c0 = self.clock                 # scan step i emits at c0 + i + 1
+        self.clock += n_steps
         for j, slot in enumerate(self.slots):
             if slot is None:
                 continue
             done = False
-            for t in toks_np[j]:
+            for i, t in enumerate(toks_np[j]):
                 slot.emitted.append(int(t))
+                self._record_emit(slot.req.uid, c0 + i + 1)
                 if self._finish_reason(slot) is not None:
                     done = True
                     break
@@ -354,6 +484,8 @@ class ContinuousBatchingScheduler:
         x = np.concatenate([self._tok, d], axis=1)            # (B, k+1)
         layers, g, _ = self.engine.verify_step(
             self.cache, jnp.asarray(x), active=jnp.asarray(active))
+        self.clock += self.spec.k + 1   # one verify dispatch of width k+1;
+                                        # committed tokens emit as a burst
         g_np = np.asarray(g)
         accepted = self.spec.accept(d, g_np, active)          # (B,) j
         self.cache = self.engine.commit_verified(
@@ -366,6 +498,7 @@ class ContinuousBatchingScheduler:
             done = False
             for t in g_np[j, :int(accepted[j])]:
                 slot.emitted.append(int(t))
+                self._record_emit(slot.req.uid)
                 if self._finish_reason(slot) is not None:
                     done = True
                     break
@@ -374,7 +507,168 @@ class ContinuousBatchingScheduler:
             else:
                 self._tok[j, 0] = slot.emitted[-1]
 
+    def _fused_round(self) -> None:
+        """One fused prefill-chunk + decode dispatch (engine.fused_step;
+        runs whenever any live slot still holds pending prompt tokens).
+
+        Per-row roles in the SAME batched dispatch: a prefilling slot is
+        a multi-token row consuming its next ``prefill_chunk`` prompt
+        tokens (no emission until the prompt completes); a decoding slot
+        is a 1-token row emitting exactly one sampled token — or, under
+        speculation, a k+1-token verify row committing its accepted
+        prefix (a spec round and a prefill chunk share the dispatch).
+        So a long prompt costs batchmates at most one chunk-width
+        dispatch between tokens, never its full length.
+
+        Parity (DESIGN.md §3 chunked-prefill contract): per-token cache
+        rows are bitwise the rows whole-prompt prefill writes (full-dtype
+        caches write them directly; quantized caches stage at full dtype
+        and re-quantize with whole-prompt calibration at completion), the
+        completion sample uses key (nonce, 0) on the same last-position
+        logits, and decode rows sample key (nonce, t) on the same
+        history — token-for-token identical to whole-prompt admission.
+        """
+        eng = self.engine
+        chunk = eng.prefill_chunk
+        k = self.spec.k if self.spec is not None else 0
+        s_w = max(chunk, k + 1) if self.spec is not None else chunk
+        n = self.n_slots
+        active = np.array([s is not None for s in self.slots])
+        role = np.array([s is not None and bool(s.pending)
+                         for s in self.slots])
+        decode_mask = active & ~role
+        tokens = np.zeros((n, s_w), np.int32)
+        n_valid = np.ones((n,), np.int32)
+        t_idx = np.zeros((n,), np.int32)
+        take = np.zeros((n,), np.int32)
+        nonces = np.array([s.nonce if s is not None else 0
+                           for s in self.slots], np.int32)
+        d = (self.spec.propose(self._tok, decode_mask)
+             if self.spec is not None and decode_mask.any() else None)
+        for j, slot in enumerate(self.slots):
+            if slot is None:
+                continue
+            if slot.pending:
+                c = min(len(slot.pending), chunk)
+                tokens[j, :c] = slot.pending[:c]
+                n_valid[j] = take[j] = c
+                # t_idx stays 0: a completing prompt samples token 0 with
+                # key (nonce, 0), exactly like whole-prompt admission
+            else:
+                tokens[j, 0] = self._tok[j, 0]
+                t_idx[j] = len(slot.emitted)
+                if d is not None:
+                    tokens[j, 1:k + 1] = d[j]
+                    n_valid[j] = k + 1
+        layers, staging, sampled, g, logits = eng.fused_step(
+            self.cache, jnp.asarray(tokens), n_valid, self.key,
+            nonces=nonces, t_idx=t_idx, active=jnp.asarray(active),
+            staging=self.staging,
+            role=role if self.staging is not None else None)
+        g_np = np.asarray(g)
+        sampled_np = np.asarray(sampled)
+        if d is not None:
+            accepted = self.spec.accept(d, g_np, decode_mask)
+            steps = np.where(role, take, accepted).astype(np.int32)
+        else:
+            accepted = None
+            steps = np.where(role, take,
+                             active.astype(np.int32)).astype(np.int32)
+        self.cache = eng.commit_verified(self.cache, layers,
+                                         jnp.asarray(steps),
+                                         active=jnp.asarray(active))
+        if staging is not None:
+            self.staging = staging
+        if d is not None:
+            self.spec.commit(accepted, g_np, decode_mask)
+        self.clock += s_w               # one dispatch of width s_w
+        for j, slot in enumerate(self.slots):
+            if slot is None:
+                continue
+            if role[j]:
+                del slot.pending[:int(take[j])]
+                if slot.pending:
+                    continue            # still prefilling next round
+                n_prompt = len(slot.req.prompt)
+                if self.staging is not None:
+                    # quantized: whole-prompt-calibrated re-quantization
+                    # of the staged rows (bit-identical to the codes
+                    # whole-prompt admission writes)
+                    if self._paged:
+                        cover = self._slot_pages[j][
+                            :kvq.page_count(n_prompt, eng.page_size)]
+                        self.cache = paging.finalize_slot_pages(
+                            self.cache, self.staging, j, n_prompt, cover)
+                    else:
+                        self.cache = kv_cache.finalize_slot(
+                            self.cache, self.staging, j, n_prompt)
+                if self._paged and slot.plan is not None:
+                    # full-miss admission registers its prefix now (the
+                    # pages/grids/logits are final only at completion)
+                    self._register_prefix(
+                        j, slot.req, slot.plan,
+                        logits[j:j + 1, int(n_valid[j]) - 1])
+                    slot.plan = None
+                self._begin_decode(j, slot, int(sampled_np[j]))
+            elif accepted is not None:
+                done = False
+                for t in g_np[j, :int(accepted[j])]:
+                    slot.emitted.append(int(t))
+                    self._record_emit(slot.req.uid)
+                    if self._finish_reason(slot) is not None:
+                        done = True
+                        break
+                if done:
+                    self._evict(slot, j)
+                else:
+                    self._tok[j, 0] = slot.emitted[-1]
+            else:
+                t = int(sampled_np[j])
+                slot.emitted.append(t)
+                self._record_emit(slot.req.uid)
+                if self._finish_reason(slot) is not None:
+                    self._evict(slot, j)
+                else:
+                    self._tok[j, 0] = t
+
+    # ------------------------------------------------------------ telemetry
+    def latency_report(self) -> dict:
+        """Deterministic step-count latency percentiles (the bench gate).
+
+        The sim clock ticks in MODEL-STEP units: a prefill costs its
+        padded token count, a scanned decode chunk one unit per step
+        (emissions land at successive steps), a fused/verify dispatch its
+        token width (emissions land as a burst at dispatch end).  TTFT =
+        first-emission clock minus submit clock; inter-token = gaps
+        between consecutive emissions of one request, and the p99/max gap
+        IS the head-of-line stall a long-prompt admission inflicts on its
+        batchmates.  Identical across runs for a fixed workload + chunk
+        geometry — no wall-clock noise, so benchmarks/check_bench can
+        gate hard on the chunked-vs-whole ratio.
+        """
+        ttfts, gaps = [], []
+        for uid, emits in self._emit_clocks.items():
+            ttfts.append(emits[0] - self._submit_clock.get(uid, 0))
+            gaps.extend(int(b - a) for a, b in zip(emits, emits[1:]))
+
+        def pcts(xs):
+            if not xs:
+                return {"p50": 0.0, "p95": 0.0, "p99": 0.0, "max": 0.0}
+            a = np.asarray(xs, np.float64)
+            return {"p50": float(np.percentile(a, 50, method="nearest")),
+                    "p95": float(np.percentile(a, 95, method="nearest")),
+                    "p99": float(np.percentile(a, 99, method="nearest")),
+                    "max": float(a.max())}
+
+        return {"unit": "model_steps", "clock": int(self.clock),
+                "n_requests": len(self._emit_clocks),
+                "n_tokens": int(sum(len(v)
+                                    for v in self._emit_clocks.values())),
+                "ttft": pcts(ttfts), "inter_token": pcts(gaps)}
+
     def _finish_reason(self, slot: _Slot) -> Optional[str]:
+        if not slot.emitted:
+            return None                 # still prefilling (chunked)
         if slot.req.eos_id is not None \
                 and slot.emitted[-1] == slot.req.eos_id:
             return "eos"

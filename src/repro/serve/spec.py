@@ -89,6 +89,10 @@ class SpecDecoder:
         self._proposed = 0
         self._accepted = 0
         self._committed = 0
+        # per-request acceptance telemetry (keyed by the scheduler's uid;
+        # slots without a uid only feed the aggregate counters)
+        self._slot_uid: List[Optional[str]] = [None] * n_slots
+        self._per_request: dict = {}
         if self.draft.kind == "policy":
             # the draft engine is internal scratch: contiguous full-dtype
             # cache regardless of the target's layout (it is rolled back
@@ -107,10 +111,17 @@ class SpecDecoder:
         self._key = jax.random.PRNGKey(0)
 
     # ---------------------------------------------------------- slot churn
-    def admit(self, slot: int, prompt, first_token: int) -> None:
+    def admit(self, slot: int, prompt, first_token: int,
+              uid: Optional[str] = None) -> None:
         """Seed slot ``slot``'s draft state at admission: the committed
         sequence is prompt + [first_token] (the admission-sampled token,
-        which is also the first verify feed)."""
+        which is also the first verify feed).  ``uid`` keys this
+        request's per-request acceptance telemetry in ``stats()``."""
+        self._slot_uid[slot] = uid
+        if uid is not None:
+            self._per_request.setdefault(
+                uid, {"rounds": 0, "proposed": 0, "accepted": 0,
+                      "committed": 0})
         if self._hist is not None:
             self._hist[slot] = list(prompt) + [int(first_token)]
             return
@@ -127,6 +138,7 @@ class SpecDecoder:
     def evict(self, slot: int) -> None:
         """Drop slot ``slot``'s draft state (the policy draft's cache rows
         go stale-until-readmission, same as the target's)."""
+        self._slot_uid[slot] = None
         if self._hist is not None:
             self._hist[slot] = None
 
@@ -180,6 +192,16 @@ class SpecDecoder:
         self._proposed += self.k * n_active
         self._accepted += int(np.sum(np.where(active, accepted - 1, 0)))
         self._committed += int(np.sum(accepted))
+        for s in range(self.n_slots):
+            if not active[s]:
+                continue
+            uid = self._slot_uid[s]
+            if uid is not None:
+                pr = self._per_request[uid]
+                pr["rounds"] += 1
+                pr["proposed"] += self.k
+                pr["accepted"] += int(accepted[s]) - 1
+                pr["committed"] += int(accepted[s])
         if self._hist is not None:
             for s in range(self.n_slots):
                 if active[s] and self._hist[s] is not None:
@@ -197,7 +219,16 @@ class SpecDecoder:
         proposed draft tokens (bonus tokens excluded — a rate of 0 still
         commits 1 token/round); ``committed_per_dispatch`` = tokens
         committed per verify dispatch (the speedup driver: a plain chunk
-        step commits exactly 1 token per model step)."""
+        step commits exactly 1 token per model step).  ``per_request``
+        breaks both down by scheduler uid — the draft-k tuning signal
+        (a uid with low acceptance wants a smaller k or no draft)."""
+        per_request = {
+            uid: dict(pr,
+                      acceptance_rate=(pr["accepted"] / pr["proposed"]
+                                       if pr["proposed"] else 0.0),
+                      committed_per_dispatch=(pr["committed"] / pr["rounds"]
+                                              if pr["rounds"] else 0.0))
+            for uid, pr in self._per_request.items()}
         return {
             "rounds": self._rounds,
             "proposed": self._proposed,
@@ -207,6 +238,7 @@ class SpecDecoder:
                                 if self._proposed else 0.0),
             "committed_per_dispatch": (self._committed / self._rounds
                                        if self._rounds else 0.0),
+            "per_request": per_request,
         }
 
 

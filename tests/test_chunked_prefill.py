@@ -1,0 +1,197 @@
+"""Chunked prefill: fused prefill/decode dispatch parity and the
+head-of-line latency regression bar (DESIGN.md §3).
+
+The contract under test: splitting a prompt into ``prefill_chunk``-sized
+chunks and fusing "prefill chunk for slots A,B + decode step for slots
+C..H" into one batched dispatch changes NOTHING about outputs — every
+request's token stream is bit-identical to the whole-prompt scheduler
+and to a solo ``engine.generate`` — while bounding the inter-token stall
+a long-prompt admission inflicts on its batchmates to one chunk-width
+dispatch instead of the full prompt length.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import transformer as tf
+from repro.parallel.context import local_context
+from repro.serve import (ContinuousBatchingScheduler, DraftSpec, EngineSpec,
+                         Request, SamplerConfig, ServeEngine,
+                         quantize_for_serving)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = configs.get_config("olmo-1b").smoke()
+    ctx = local_context()
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    policy = tf.build_policy(cfg)
+    pa = jax.tree.map(jnp.asarray, policy.as_arrays())
+    qparams = quantize_for_serving(params, policy.as_arrays(), cfg)
+    return cfg, ctx, pa, qparams
+
+
+def _engine(setup, **kw):
+    cfg, ctx, pa, qparams = setup
+    return ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx,
+                       max_seq=64, spec=EngineSpec(**kw))
+
+
+# mixed long/short: the 40-token prompt lands while shorter requests are
+# mid-decode, so whole-prompt admission visibly stalls them
+MIXED = [(5, 8), (23, 6), (11, 10), (40, 5), (9, 7)]
+
+
+def _requests(cfg, shapes=MIXED, seed=7):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=f"r{i}",
+                    prompt=rng.integers(0, cfg.vocab, n).tolist(),
+                    max_new_tokens=m)
+            for i, (n, m) in enumerate(shapes)]
+
+
+def _run(setup, reqs, key=None, n_slots=3, **kw):
+    sched = ContinuousBatchingScheduler(_engine(setup, **kw),
+                                        n_slots=n_slots, key=key)
+    for r in reqs:
+        sched.submit(r)
+    out = sched.run()
+    return {u: c.tokens for u, c in out.items()}, sched
+
+
+CACHE_GEOMETRIES = [
+    pytest.param({}, id="contig-full"),
+    pytest.param({"cache": "quantized", "cache_bits": 8}, id="contig-int8"),
+    pytest.param({"cache_layout": "paged", "page_size": 16},
+                 id="paged-full"),
+    pytest.param({"cache": "quantized", "cache_bits": 4,
+                  "cache_layout": "paged", "page_size": 16},
+                 id="paged-int4"),
+]
+
+
+# ------------------------------------------------------------------ parity
+@pytest.mark.parametrize("kw", CACHE_GEOMETRIES)
+def test_chunked_scheduler_parity_all_geometries(setup, kw):
+    """chunked-fused == whole-prompt == solo, greedy, token-for-token,
+    for contiguous/paged x full/int8/int4 caches.  Chunk writes stage in
+    full dtype and quantize at prompt completion with whole-prompt
+    calibration, so the quantized grids — hence every decode read — are
+    the grids whole-prompt admission would have produced."""
+    cfg = setup[0]
+    reqs = _requests(cfg)
+    whole, _ = _run(setup, reqs, **kw)
+    chunked, _ = _run(setup, reqs, prefill_chunk=8, **kw)
+    assert whole == chunked
+    # ladder down to solo for the longest prompt (most chunks)
+    eng = _engine(setup, **kw)
+    r = reqs[3]
+    solo = np.asarray(eng.generate(jnp.asarray([r.prompt], jnp.int32),
+                                   n_new=r.max_new_tokens))
+    assert chunked[r.uid] == solo[0].tolist()
+
+
+def test_chunked_parity_chunk_size_invariant(setup):
+    """The chunk budget is a latency knob, not a semantics knob: every
+    chunk geometry (including chunk=1 and chunk >= max prompt, and a
+    chunk that straddles page boundaries) yields the same tokens."""
+    cfg = setup[0]
+    reqs = _requests(cfg)
+    whole, _ = _run(setup, reqs)
+    for chunk in (1, 7, 16, 64):
+        got, _ = _run(setup, reqs, prefill_chunk=chunk)
+        assert got == whole, f"prefill_chunk={chunk}"
+
+
+def test_chunked_sampled_parity_top_k(setup):
+    """Stochastic trajectories survive chunking: per-slot keys fold
+    (nonce, t_idx) and chunked admission assigns nonces at slot claim in
+    the same FIFO order as whole-prompt admission, so top-k sampled
+    streams are identical."""
+    cfg = setup[0]
+    reqs = _requests(cfg, seed=11)
+    kw = dict(sampler=SamplerConfig(kind="top_k", temperature=0.8, top_k=5))
+    key = jax.random.PRNGKey(3)
+    whole, _ = _run(setup, reqs, key=key, **kw)
+    chunked, _ = _run(setup, reqs, key=key, prefill_chunk=8, **kw)
+    assert whole == chunked
+
+
+def test_chunked_composes_with_speculative_decode(setup):
+    """A spec verify round and a prefill chunk may share one fused
+    dispatch (width max(chunk, k+1)); committed tokens still match the
+    plain whole-prompt scheduler, and per-request acceptance telemetry
+    is populated for every admitted uid."""
+    cfg = setup[0]
+    reqs = _requests(cfg, shapes=[(6, 9), (25, 6), (12, 8), (33, 5)],
+                     seed=11)
+    kw = dict(cache="quantized", cache_bits=8,
+              draft=DraftSpec(kind="ngram", k=3))
+    whole, _ = _run(setup, reqs, n_slots=2, **kw)
+    chunked, sched = _run(setup, reqs, n_slots=2, prefill_chunk=8, **kw)
+    assert whole == chunked
+    st = sched.spec.stats()
+    assert sorted(st["per_request"]) == sorted(r.uid for r in reqs)
+    for pr in st["per_request"].values():
+        assert pr["rounds"] > 0 and pr["committed"] >= 1
+        assert 0.0 <= pr["acceptance_rate"] <= 1.0
+
+
+# ------------------------------------------------------- head-of-line bar
+def test_head_of_line_stall_bounded_by_chunk(setup):
+    """THE tentpole regression: admit a near-max-length prompt next to
+    active decoders.  Whole-prompt prefill blocks every running slot for
+    the full padded prompt length; chunked prefill bounds the stall to
+    one fused dispatch of chunk width.  Gate: no running slot goes more
+    than ``prefill_chunk`` model steps without emitting, and the p99/max
+    stall improves >= 2x (the same invariant scripts/check_bench.py
+    enforces on the bench report)."""
+    cfg = setup[0]
+    rng = np.random.default_rng(5)
+    chunk = 8
+    reqs = [  # two shorts decoding when the 48-token prompt arrives
+        Request(uid="s0", prompt=rng.integers(0, cfg.vocab, 6).tolist(),
+                max_new_tokens=12),
+        Request(uid="s1", prompt=rng.integers(0, cfg.vocab, 9).tolist(),
+                max_new_tokens=12),
+        Request(uid="long", prompt=rng.integers(0, cfg.vocab, 48).tolist(),
+                max_new_tokens=8),
+    ]
+    whole, s_w = _run(setup, reqs, n_slots=3)
+    chunked, s_c = _run(setup, reqs, n_slots=3, prefill_chunk=chunk)
+    assert whole == chunked             # the bar never trades correctness
+    rep_w = s_w.latency_report()
+    rep_c = s_c.latency_report()
+    assert rep_c["inter_token"]["max"] <= chunk
+    long_pad = 48                       # >= the whole-prompt stall floor
+    assert rep_w["inter_token"]["max"] >= long_pad
+    for q in ("p99", "max"):
+        assert rep_w["inter_token"][q] >= 2.0 * rep_c["inter_token"][q]
+
+
+def test_latency_report_deterministic_and_shaped(setup):
+    """The sim clock counts model steps, not wall time: two runs of the
+    same workload + chunk geometry produce the IDENTICAL report (that is
+    what lets check_bench gate hard on the ratio), with every token of
+    every request accounted."""
+    cfg = setup[0]
+    reqs = _requests(cfg)
+    _, s1 = _run(setup, reqs, prefill_chunk=8)
+    _, s2 = _run(setup, reqs, prefill_chunk=8)
+    rep = s1.latency_report()
+    assert rep == s2.latency_report()
+    assert rep["unit"] == "model_steps"
+    assert rep["n_requests"] == len(reqs)
+    assert rep["n_tokens"] == sum(m for _, m in MIXED)
+    for sect in ("ttft", "inter_token"):
+        ps = rep[sect]
+        assert ps["p50"] <= ps["p95"] <= ps["p99"] <= ps["max"]
+
+
+def test_prefill_chunk_validation(setup):
+    with pytest.raises(ValueError):
+        EngineSpec(prefill_chunk=0).validate()
+    with pytest.raises(ValueError, match="mesh"):
+        EngineSpec(prefill_chunk=8, mesh=object()).validate()

@@ -346,3 +346,72 @@ def test_spec_rounds_preserve_allocator_invariants():
     assert rounds > 0 and len(sched.completed) == len(reqs)
     assert sched.spec.stats()["committed"] >= sum(
         r.max_new_tokens - 1 for r in reqs)
+
+
+@pytest.mark.parametrize("cache", ["full", "quantized"])
+def test_chunked_admission_claims_pages_like_whole(cache):
+    """Chunked admission must be allocator-IDENTICAL to whole-prompt
+    admission: ``_claim_chunked`` runs the same ``plan_admission`` at
+    slot claim, so every request maps the same pages (fresh claims, COW
+    copies, and prefix/identical-prompt hits included) in both modes,
+    and the refcount model holds after every fused round even while
+    prompts are mid-chunk.  Requests run SERIALLY so the registry state
+    at each admission matches across modes — chunked admission cannot
+    register a prefix before its pages are actually written (the entry
+    lands at prompt completion), so a concurrently-admitted sibling
+    legitimately plans against an emptier registry."""
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp  # noqa: F401
+    from repro import configs
+    from repro.models import transformer as tf
+    from repro.parallel.context import local_context
+    from repro.serve import (ContinuousBatchingScheduler, EngineSpec,
+                             Request, ServeEngine, quantize_for_serving)
+    cfg = configs.get_config("olmo-1b").smoke()
+    ctx = local_context()
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    policy = tf.build_policy(cfg)
+    pa = jax.tree.map(jnp.asarray, policy.as_arrays())
+    qparams = quantize_for_serving(params, policy.as_arrays(), cfg)
+    rng = np.random.default_rng(13)
+    sys_prompt = rng.integers(0, cfg.vocab, 16).tolist()  # one full page
+    prompts = [
+        sys_prompt + rng.integers(0, cfg.vocab, 5).tolist(),   # miss
+        sys_prompt + rng.integers(0, cfg.vocab, 9).tolist(),   # prefix/COW
+        rng.integers(0, cfg.vocab, 7).tolist(),                # unrelated
+    ]
+    prompts.append(list(prompts[0]))    # identical-prompt hit
+    reqs = [Request(uid=f"r{i}", prompt=p, max_new_tokens=4)
+            for i, p in enumerate(prompts)]
+
+    def drive(prefill_chunk):
+        eng = ServeEngine(
+            cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx, max_seq=64,
+            spec=EngineSpec(cache=cache, cache_bits=8, cache_layout="paged",
+                            page_size=16, prefill_chunk=prefill_chunk))
+        sched = ContinuousBatchingScheduler(eng, n_slots=2)
+        claims = {}
+        for r in reqs:                  # serial: drain before next admit
+            sched.submit(r)
+            while sched.queue or any(s is not None for s in sched.slots):
+                sched._admit()
+                for j, s in enumerate(sched.slots):
+                    if s is not None and s.req.uid not in claims:
+                        claims[s.req.uid] = list(sched._slot_pages[j] or [])
+                if any(s is not None for s in sched.slots):
+                    if sched._chunked and any(s is not None and s.pending
+                                              for s in sched.slots):
+                        sched._fused_round()
+                    else:
+                        sched._decode_harvest()
+                _check_model(sched.allocator,
+                             {j: p for j, p in enumerate(sched._slot_pages)
+                              if p},
+                             sched.registry)
+        return claims, {u: c.tokens for u, c in sched.completed.items()}
+
+    claims_w, toks_w = drive(None)
+    claims_c, toks_c = drive(8)
+    assert toks_w == toks_c
+    assert claims_w == claims_c        # same pages, same order, per uid
+    assert len(claims_c) == len(reqs)

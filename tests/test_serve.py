@@ -167,8 +167,7 @@ def test_packed_engine_parity_uniform_int4(setup):
     pparams = pack_params(params, policy.as_arrays(), cfg)   # uniform int4
     e_fq = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx,
                        max_seq=64)
-    e_pk = ServeEngine(cfg=cfg, params=pparams, policy_arrays=pa, ctx=ctx,
-                       max_seq=64, weights="packed")
+    e_pk = ServeEngine(cfg=cfg, params=pparams, policy_arrays=pa, ctx=ctx, max_seq=64, spec=EngineSpec(weights="packed"))
     rng = np.random.default_rng(16)
     prompt = jnp.asarray(rng.integers(0, cfg.vocab, (2, 12)), jnp.int32)
     got = np.asarray(e_pk.generate(prompt, n_new=16))
@@ -189,8 +188,7 @@ def test_packed_engine_parity_mixed_knapsack(setup):
     pmixed = pack_params(params, mixed.as_arrays(), cfg)
     e_fq = ServeEngine(cfg=cfg, params=qmixed, policy_arrays=pa_mixed,
                        ctx=ctx, max_seq=64)
-    e_pk = ServeEngine(cfg=cfg, params=pmixed, policy_arrays=pa_mixed,
-                       ctx=ctx, max_seq=64, weights="packed")
+    e_pk = ServeEngine(cfg=cfg, params=pmixed, policy_arrays=pa_mixed, ctx=ctx, max_seq=64, spec=EngineSpec(weights="packed"))
     rng = np.random.default_rng(17)
     prompt = jnp.asarray(rng.integers(0, cfg.vocab, (1, 12)), jnp.int32)
     got = np.asarray(e_pk.generate(prompt, n_new=16))
@@ -222,8 +220,7 @@ def test_packed_engine_parity_moe_per_expert_bits(setup):
     pparams = pack_params(params, arr, cfg)
     e_fq = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx,
                        max_seq=40)
-    e_pk = ServeEngine(cfg=cfg, params=pparams, policy_arrays=pa, ctx=ctx,
-                       max_seq=40, weights="packed")
+    e_pk = ServeEngine(cfg=cfg, params=pparams, policy_arrays=pa, ctx=ctx, max_seq=40, spec=EngineSpec(weights="packed"))
     rng = np.random.default_rng(19)
     prompt = jnp.asarray(rng.integers(0, cfg.vocab, (1, 10)), jnp.int32)
     got = np.asarray(e_pk.generate(prompt, n_new=8))
@@ -236,22 +233,19 @@ def test_weights_mode_layout_validation(setup):
     cfg, ctx, params, policy, pa, qparams = setup
     pparams = pack_params(params, policy.as_arrays(), cfg)
     with pytest.raises(ValueError, match="layout"):
-        ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx,
-                    max_seq=64, weights="packed")
+        ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx, max_seq=64, spec=EngineSpec(weights="packed"))
     with pytest.raises(ValueError, match="layout"):
         ServeEngine(cfg=cfg, params=pparams, policy_arrays=pa, ctx=ctx,
                     max_seq=64)
     with pytest.raises(ValueError, match="weights"):
-        ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx,
-                    max_seq=64, weights="int4")
+        ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx, max_seq=64, spec=EngineSpec(weights="int4"))
 
 
 def test_packed_scheduler_parity(setup):
     """Continuous batching over the packed engine == solo greedy runs."""
     cfg, ctx, params, policy, pa, qparams = setup
     pparams = pack_params(params, policy.as_arrays(), cfg)
-    engine = ServeEngine(cfg=cfg, params=pparams, policy_arrays=pa, ctx=ctx,
-                         max_seq=64, weights="packed")
+    engine = ServeEngine(cfg=cfg, params=pparams, policy_arrays=pa, ctx=ctx, max_seq=64, spec=EngineSpec(weights="packed"))
     rng = np.random.default_rng(18)
     prompts = [rng.integers(0, cfg.vocab, n).tolist() for n in (9, 14)]
     reqs = [Request(uid=f"r{i}", prompt=p, max_new_tokens=8)
@@ -292,11 +286,8 @@ def stepwise_quantized_reference(engine: ServeEngine, prompt: np.ndarray,
 def qcache_engines(setup):
     cfg, ctx, params, policy, pa, qparams = setup
     pparams = pack_params(params, policy.as_arrays(), cfg)
-    e_q8 = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx,
-                       max_seq=64, cache="quantized", cache_bits=8)
-    e_pk8 = ServeEngine(cfg=cfg, params=pparams, policy_arrays=pa, ctx=ctx,
-                        max_seq=64, weights="packed", cache="quantized",
-                        cache_bits=8)
+    e_q8 = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx, max_seq=64, spec=EngineSpec(cache="quantized", cache_bits=8))
+    e_pk8 = ServeEngine(cfg=cfg, params=pparams, policy_arrays=pa, ctx=ctx, max_seq=64, spec=EngineSpec(weights="packed", cache="quantized", cache_bits=8))
     return e_q8, e_pk8
 
 
@@ -401,8 +392,7 @@ def test_quantized_cache_byte_reduction(setup, qcache_engines):
     e_q8, _ = qcache_engines
     e_full = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx,
                          max_seq=64)
-    e_q4 = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx,
-                       max_seq=64, cache="quantized", cache_bits=4)
+    e_q4 = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx, max_seq=64, spec=EngineSpec(cache="quantized", cache_bits=4))
     full = residency.resident_kv_bytes(e_full.new_cache(4))
     q8 = residency.resident_kv_bytes(e_q8.new_cache(4))
     q4 = residency.resident_kv_bytes(e_q4.new_cache(4))
@@ -421,9 +411,7 @@ def test_quantized_cache_mixed_per_layer_bits(setup):
     scan-per-bucket decode; generation works, matches ITS OWN stepwise
     oracle, and the bytes land between the uniform layouts."""
     cfg, ctx, params, policy, pa, qparams = setup
-    e_mix = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx,
-                        max_seq=64, cache="quantized",
-                        cache_bits={"pat0": [8.0, 4.0]})
+    e_mix = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx, max_seq=64, spec=EngineSpec(cache="quantized", cache_bits={"pat0": [8.0, 4.0]}))
     c = e_mix.new_cache(2)
     assert isinstance(c.layers["pat"], LayerBuckets)
     assert c.layers["pat"].sizes == (1, 1)
@@ -446,9 +434,7 @@ def test_quantized_cache_16_passthrough_layer(setup):
     """cache_bits=16 for a layer keeps that layer's buffers full dtype
     (recurrent/MLA-style passthrough in a quantized serving config)."""
     cfg, ctx, params, policy, pa, qparams = setup
-    e = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx,
-                    max_seq=64, cache="quantized",
-                    cache_bits={"pat0": [16.0, 8.0]})
+    e = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx, max_seq=64, spec=EngineSpec(cache="quantized", cache_bits={"pat0": [16.0, 8.0]}))
     c = e.new_cache(1)
     assert sorted(c.layers["pat"].buckets[0]["p0"]) == ["k", "v"]
     assert sorted(c.layers["pat"].buckets[1]["p0"]) == ["k_scale", "kq",
@@ -463,8 +449,7 @@ def test_quantized_cache_16_passthrough_layer(setup):
 def test_cache_mode_validation(setup):
     cfg, ctx, params, policy, pa, qparams = setup
     with pytest.raises(ValueError, match="cache"):
-        ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx,
-                    max_seq=64, cache="int8")
+        ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx, max_seq=64, spec=EngineSpec(cache="int8"))
 
 
 # --------------------------------------------------------------- scheduler
@@ -594,10 +579,8 @@ def test_sampling_modes(setup):
 
 def test_temperature_sampled_generation_shapes(setup):
     cfg, ctx, params, policy, pa, qparams = setup
-    engine = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx,
-                         max_seq=64,
-                         sampler=SamplerConfig(kind="temperature",
-                                               temperature=1.3))
+    engine = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx, max_seq=64, spec=EngineSpec(sampler=SamplerConfig(kind="temperature",
+                                               temperature=1.3)))
     rng = np.random.default_rng(10)
     prompt = jnp.asarray(rng.integers(0, cfg.vocab, (2, 8)), jnp.int32)
     a = np.asarray(engine.generate(prompt, n_new=6, key=jax.random.PRNGKey(1)))
@@ -616,10 +599,8 @@ def test_typed_prng_keys_sample_like_raw_keys(setup):
     (regression: key.ndim==logits.ndim misread a (B,) typed key batch
     as a single key and crashed categorical)."""
     cfg, ctx, params, policy, pa, qparams = setup
-    engine = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx,
-                         max_seq=64,
-                         sampler=SamplerConfig(kind="temperature",
-                                               temperature=1.3))
+    engine = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx, max_seq=64, spec=EngineSpec(sampler=SamplerConfig(kind="temperature",
+                                               temperature=1.3)))
     rng = np.random.default_rng(27)
     prompt = jnp.asarray(rng.integers(0, cfg.vocab, (2, 8)), jnp.int32)
     raw = np.asarray(engine.generate(prompt, n_new=6,
@@ -640,9 +621,7 @@ def test_sampled_trajectory_invariant_to_decode_chunk(setup):
     key = jax.random.PRNGKey(3)
     outs = []
     for chunk in (4, 16):
-        eng = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa,
-                          ctx=ctx, max_seq=64, decode_chunk=chunk,
-                          sampler=samp)
+        eng = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx, max_seq=64, spec=EngineSpec(decode_chunk=chunk, sampler=samp))
         outs.append(np.asarray(eng.generate(prompt, n_new=9, key=key)))
     np.testing.assert_array_equal(outs[0], outs[1])
 
@@ -661,10 +640,8 @@ def test_scheduler_temperature_parity_tail_chunk_and_readmit(setup):
     request must equal ``engine.generate(prompt, key, nonces=[i])`` with
     its admission index as the nonce."""
     cfg, ctx, params, policy, pa, qparams = setup
-    engine = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx,
-                         max_seq=64, decode_chunk=4,
-                         sampler=SamplerConfig(kind="temperature",
-                                               temperature=1.2))
+    engine = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx, max_seq=64, spec=EngineSpec(decode_chunk=4, sampler=SamplerConfig(kind="temperature",
+                                               temperature=1.2)))
     key = jax.random.PRNGKey(42)
     rng = np.random.default_rng(25)
     prompts = [rng.integers(0, cfg.vocab, n).tolist() for n in (9, 12, 7)]
@@ -677,8 +654,7 @@ def test_scheduler_temperature_parity_tail_chunk_and_readmit(setup):
                                           n_new=b, key=key, nonces=[i]))
         assert res[f"r{i}"].tokens == solo[0].tolist(), f"r{i}"
     # and the whole thing is invariant to the engine's chunk size
-    e2 = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx,
-                     max_seq=64, decode_chunk=16, sampler=engine.sampler)
+    e2 = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx, max_seq=64, spec=EngineSpec(decode_chunk=16, sampler=engine.sampler))
     res2 = serve_all(e2, [Request(uid=r.uid, prompt=r.prompt,
                                   max_new_tokens=r.max_new_tokens)
                           for r in reqs], n_slots=2, key=key)
@@ -687,7 +663,7 @@ def test_scheduler_temperature_parity_tail_chunk_and_readmit(setup):
 
 
 def test_sharded_engine_single_shard_matches_unsharded(setup):
-    """ServeEngine(mesh=...) with a 1-device 'model' mesh runs the full
+    """EngineSpec(mesh=...) with a 1-device 'model' mesh runs the full
     shard_map serving path (shard-packed params, sharded cache specs, the
     two-psum decode) on the default CPU device — tier-1 coverage of the
     tensor-parallel machinery without forced host devices (the 8-device
@@ -695,14 +671,8 @@ def test_sharded_engine_single_shard_matches_unsharded(setup):
     cfg, ctx, params, policy, pa, qparams = setup
     pparams = pack_params(params, policy.as_arrays(), cfg)
     mesh = jax.make_mesh((1,), ("model",))
-    e1 = ServeEngine(cfg=cfg, params=pparams, policy_arrays=pa, ctx=ctx,
-                     max_seq=64, weights="packed", cache="quantized",
-                     cache_bits=8)
-    eS = ServeEngine(cfg=cfg,
-                     params=pack_params(params, policy.as_arrays(), cfg),
-                     policy_arrays=pa, ctx=ctx, max_seq=64,
-                     weights="packed", cache="quantized", cache_bits=8,
-                     mesh=mesh)
+    e1 = ServeEngine(cfg=cfg, params=pparams, policy_arrays=pa, ctx=ctx, max_seq=64, spec=EngineSpec(weights="packed", cache="quantized", cache_bits=8))
+    eS = ServeEngine(cfg=cfg, params=pack_params(params, policy.as_arrays(), cfg), policy_arrays=pa, ctx=ctx, max_seq=64, spec=EngineSpec(weights="packed", cache="quantized", cache_bits=8, mesh=mesh))
     rng = np.random.default_rng(26)
     prompt = jnp.asarray(rng.integers(0, cfg.vocab, (1, 12)), jnp.int32)
     np.testing.assert_array_equal(np.asarray(eS.generate(prompt, n_new=8)),
@@ -717,13 +687,11 @@ def test_sharded_engine_validation(setup):
     cfg, ctx, params, policy, pa, qparams = setup
     mesh = jax.make_mesh((1,), ("model",))
     with pytest.raises(ValueError, match="packed"):
-        ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx,
-                    max_seq=64, mesh=mesh)
+        ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx, max_seq=64, spec=EngineSpec(mesh=mesh))
     pparams = pack_params(params, policy.as_arrays(), cfg)
     bad = jax.make_mesh((1,), ("data",))
     with pytest.raises(ValueError, match="model"):
-        ServeEngine(cfg=cfg, params=pparams, policy_arrays=pa, ctx=ctx,
-                    max_seq=64, weights="packed", mesh=bad)
+        ServeEngine(cfg=cfg, params=pparams, policy_arrays=pa, ctx=ctx, max_seq=64, spec=EngineSpec(weights="packed", mesh=bad))
     from repro.serve import packing as packing_mod
     assert packing_mod.tp_shardable(cfg, 3) is not None      # 4 heads % 3
     assert packing_mod.tp_shardable(cfg, 8) is not None      # 4 kv heads % 8
@@ -751,9 +719,7 @@ def paged_prompts(setup):
 
 def _paged_engine(setup, cache, bits, **kw):
     cfg, ctx, params, policy, pa, qparams = setup
-    return ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx,
-                       max_seq=64, cache=cache, cache_bits=bits,
-                       cache_layout="paged", **kw)
+    return ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx, max_seq=64, spec=EngineSpec(cache=cache, cache_bits=bits, cache_layout="paged", **kw))
 
 
 @pytest.mark.parametrize("cache,bits", PAGED_CACHE_MODES)
@@ -764,8 +730,7 @@ def test_paged_generate_matches_contiguous(setup, cache, bits):
     row addressing goes through the block table."""
     cfg, ctx, params, policy, pa, qparams = setup
     e_p = _paged_engine(setup, cache, bits)
-    e_c = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx,
-                      max_seq=64, cache=cache, cache_bits=bits)
+    e_c = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx, max_seq=64, spec=EngineSpec(cache=cache, cache_bits=bits))
     rng = np.random.default_rng(32)
     toks = np.zeros((2, 20), np.int32)
     toks[0, :13] = rng.integers(0, cfg.vocab, 13)
@@ -793,8 +758,7 @@ def test_paged_scheduler_differential_ladder(setup, paged_prompts, cache,
     reqs = [Request(uid=f"r{i}", prompt=pr, max_new_tokens=6)
             for i, pr in enumerate(order)]
     e_p = _paged_engine(setup, cache, bits)
-    e_c = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx,
-                      max_seq=64, cache=cache, cache_bits=bits)
+    e_c = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx, max_seq=64, spec=EngineSpec(cache=cache, cache_bits=bits))
     res_p = serve_all(e_p, reqs, n_slots=2)
     res_c = serve_all(e_c, [Request(uid=r.uid, prompt=r.prompt,
                                     max_new_tokens=r.max_new_tokens)
@@ -876,8 +840,7 @@ def test_paged_residency_short_request_mix(setup):
     n_slots, budget = 4, 8
     prompt_lens = [5, 9, 7, 12]          # the short-request mix
     need = sum(-(-(pl + budget) // 16) for pl in prompt_lens)
-    e_c = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx,
-                      max_seq=64, cache="quantized", cache_bits=8)
+    e_c = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx, max_seq=64, spec=EngineSpec(cache="quantized", cache_bits=8))
     e_p = _paged_engine(setup, "quantized", 8, n_pages=need)
     contiguous = residency.resident_kv_bytes(e_c.new_cache(n_slots))
     paged = residency.resident_kv_bytes(e_p.new_cache(n_slots))
@@ -899,9 +862,9 @@ def test_paged_idle_slots_never_corrupt_neighbors(setup, paged_prompts):
     cfg, ctx, params, policy, pa, qparams = setup
     p = paged_prompts
     engine = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx,
-                         max_seq=60,            # 60 % 16 != 0 -> 4 pages=64
-                         cache="quantized", cache_bits=8,
-                         cache_layout="paged")
+                         max_seq=60,  # 60 % 16 != 0 -> 4 pages=64
+                         spec=EngineSpec(cache="quantized", cache_bits=8,
+                                         cache_layout="paged"))
     # 4 slots, 1 request: three never-admitted lanes decode garbage the
     # whole run; then a second wave re-admits over the evicted lane
     res = serve_all(engine, [Request(uid="lone", prompt=p["a"],
@@ -925,22 +888,18 @@ def test_paged_engine_validation(setup):
     and requests that cannot fit the pool."""
     cfg, ctx, params, policy, pa, qparams = setup
     with pytest.raises(ValueError, match="cache_layout"):
-        ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx,
-                    max_seq=64, cache_layout="pages")
+        ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx, max_seq=64, spec=EngineSpec(cache_layout="pages"))
     xcfg = configs.get_config("xlstm-1.3b").smoke()
     xparams = tf.init_params(xcfg, jax.random.PRNGKey(1))
     xpolicy = tf.build_policy(xcfg)
     xpa = jax.tree.map(jnp.asarray, xpolicy.as_arrays())
     xq = quantize_for_serving(xparams, xpolicy.as_arrays(), xcfg)
     with pytest.raises(ValueError, match="GQA"):
-        ServeEngine(cfg=xcfg, params=xq, policy_arrays=xpa, ctx=ctx,
-                    max_seq=64, cache_layout="paged")
+        ServeEngine(cfg=xcfg, params=xq, policy_arrays=xpa, ctx=ctx, max_seq=64, spec=EngineSpec(cache_layout="paged"))
     pparams = pack_params(params, policy.as_arrays(), cfg)
     mesh = jax.make_mesh((1,), ("model",))
     with pytest.raises(ValueError, match="paged"):
-        ServeEngine(cfg=cfg, params=pparams, policy_arrays=pa, ctx=ctx,
-                    max_seq=64, weights="packed", mesh=mesh,
-                    cache_layout="paged")
+        ServeEngine(cfg=cfg, params=pparams, policy_arrays=pa, ctx=ctx, max_seq=64, spec=EngineSpec(weights="packed", mesh=mesh, cache_layout="paged"))
     small = _paged_engine(setup, "full", 8, n_pages=1)
     from repro.serve.scheduler import ContinuousBatchingScheduler
     sched = ContinuousBatchingScheduler(small, n_slots=1)
@@ -972,10 +931,8 @@ def test_scheduler_admissions_draw_distinct_first_tokens(setup):
     """Identical prompts admitted at different times must not reuse one
     Gumbel draw for their first sampled token (per-admission key fold)."""
     cfg, ctx, params, policy, pa, qparams = setup
-    engine = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx,
-                         max_seq=64,
-                         sampler=SamplerConfig(kind="temperature",
-                                               temperature=2.0))
+    engine = ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx, max_seq=64, spec=EngineSpec(sampler=SamplerConfig(kind="temperature",
+                                               temperature=2.0)))
     rng = np.random.default_rng(15)
     prompt = rng.integers(0, cfg.vocab, 8).tolist()
     reqs = [Request(uid=f"s{i}", prompt=prompt, max_new_tokens=2)
@@ -998,10 +955,11 @@ def _bucket_pair(setup, arr, cache_layout, cache_bits=None):
     """(bucketed engine, unrolled engine) over identical packed weights."""
     cfg, ctx, params, _policy, _pa, _q = setup
     pa = jax.tree.map(jnp.asarray, arr)
-    kw = dict(cfg=cfg, policy_arrays=pa, ctx=ctx, max_seq=64,
-              weights="packed", cache_layout=cache_layout)
+    skw = dict(weights="packed", cache_layout=cache_layout)
     if cache_bits is not None:
-        kw.update(cache="quantized", cache_bits=cache_bits)
+        skw.update(cache="quantized", cache_bits=cache_bits)
+    kw = dict(cfg=cfg, policy_arrays=pa, ctx=ctx, max_seq=64,
+              spec=EngineSpec(**skw))
     eb = ServeEngine(params=pack_params(params, arr, cfg,
                                         cache_bits=cache_bits), **kw)
     eu = ServeEngine(params=pack_params(params, arr, cfg,
@@ -1075,14 +1033,9 @@ def test_bucketed_vs_unrolled_moe_per_expert_bits():
         policy, knapsack.synthetic_gains(policy), budget_frac=0.6).take)
     arr = mixed.as_arrays()
     pa = jax.tree.map(jnp.asarray, arr)
-    eb = ServeEngine(cfg=cfg, params=pack_params(params, arr, cfg),
-                     policy_arrays=pa, ctx=ctx, max_seq=40,
-                     weights="packed")
-    eu = ServeEngine(cfg=cfg,
-                     params=pack_params(params, arr, cfg,
-                                        layout="unrolled"),
-                     policy_arrays=pa, ctx=ctx, max_seq=40,
-                     weights="packed")
+    eb = ServeEngine(cfg=cfg, params=pack_params(params, arr, cfg), policy_arrays=pa, ctx=ctx, max_seq=40, spec=EngineSpec(weights="packed"))
+    eu = ServeEngine(cfg=cfg, params=pack_params(params, arr, cfg,
+                                        layout="unrolled"), policy_arrays=pa, ctx=ctx, max_seq=40, spec=EngineSpec(weights="packed"))
     rng = np.random.default_rng(44)
     prompt = jnp.asarray(rng.integers(0, cfg.vocab, (1, 10)), jnp.int32)
     np.testing.assert_array_equal(
@@ -1132,8 +1085,8 @@ def test_bucketed_deep_multibucket_parity(cache_layout):
     cb = {"pat0": [8.0, 8.0, 4.0, 4.0, 4.0, 4.0]}
     pa = jax.tree.map(jnp.asarray, arr)
     kw = dict(cfg=cfg, policy_arrays=pa, ctx=ctx, max_seq=64,
-              weights="packed", cache="quantized", cache_bits=cb,
-              cache_layout=cache_layout)
+              spec=EngineSpec(weights="packed", cache="quantized",
+                              cache_bits=cb, cache_layout=cache_layout))
     eb = ServeEngine(params=pack_params(params, arr, cfg, cache_bits=cb),
                      **kw)
     eu = ServeEngine(params=pack_params(params, arr, cfg,
@@ -1277,31 +1230,28 @@ def test_draft_spec_validation():
 
 
 # ------------------------------------------------------------ EngineSpec
-def test_engine_spec_flat_kwargs_shim_equivalent(setup):
-    """Old flat kwargs still construct (with a DeprecationWarning), build
-    the SAME spec, and decode the same tokens as the EngineSpec path."""
+def test_engine_spec_flat_kwargs_removed_loudly(setup):
+    """The flat-kwarg shim lived one release behind a DeprecationWarning
+    and is gone: any historical flat serving kwarg raises a TypeError
+    that names the EngineSpec migration (never a silent ignore)."""
     cfg, ctx, params, policy, pa, qparams = setup
     kw = dict(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx,
               max_seq=64)
-    with pytest.deprecated_call():
-        e_flat = ServeEngine(cache="quantized", cache_bits=8,
-                             decode_chunk=4, **kw)
-    e_spec = ServeEngine(spec=EngineSpec(cache="quantized", cache_bits=8,
-                                         decode_chunk=4), **kw)
-    assert e_flat.spec == e_spec.spec
-    rng = np.random.default_rng(54)
-    prompt = jnp.asarray(rng.integers(0, cfg.vocab, (1, 10)), jnp.int32)
-    np.testing.assert_array_equal(
-        np.asarray(e_flat.generate(prompt, n_new=8)),
-        np.asarray(e_spec.generate(prompt, n_new=8)))
+    with pytest.raises(TypeError, match="EngineSpec"):
+        ServeEngine(cache="quantized", cache_bits=8, decode_chunk=4, **kw)
+    with pytest.raises(TypeError, match="weights"):
+        ServeEngine(weights="packed", **kw)
+    # unknown junk kwargs fail just as loudly (and are named)
+    with pytest.raises(TypeError, match="bogus"):
+        ServeEngine(bogus=1, **kw)
 
 
 def test_engine_spec_conflicts_and_validation(setup):
     cfg, ctx, params, policy, pa, qparams = setup
     kw = dict(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx,
               max_seq=64)
-    # spec= and flat kwargs together: ambiguous, refuse loudly
-    with pytest.raises(ValueError, match="spec"):
+    # spec= plus a flat kwarg: the flat kwarg itself is the error now
+    with pytest.raises(TypeError, match="EngineSpec"):
         ServeEngine(cache="quantized", spec=EngineSpec(), **kw)
     with pytest.raises(ValueError, match="decode_chunk"):
         ServeEngine(spec=EngineSpec(decode_chunk=0), **kw)
@@ -1309,6 +1259,12 @@ def test_engine_spec_conflicts_and_validation(setup):
         EngineSpec(weights="int3").validate()
     with pytest.raises(ValueError, match="cache_layout"):
         EngineSpec(cache_layout="ragged").validate()
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        EngineSpec(prefill_chunk=0).validate()
+    # knob validation composes: chunked prefill has no sharded fused
+    # dispatch yet, so prefill_chunk + mesh refuses at validation
+    with pytest.raises(ValueError, match="mesh"):
+        EngineSpec(prefill_chunk=8, mesh=object()).validate()
     # packed/fake-quant layout disagreement is caught at construction
     with pytest.raises(ValueError, match="layout"):
         ServeEngine(spec=EngineSpec(weights="packed"), **kw)

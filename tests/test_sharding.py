@@ -132,7 +132,7 @@ print("OK")
 
 @pytest.mark.slow
 def test_sharded_serving_bit_exact_with_single_device():
-    """Tensor-parallel packed serving (ServeEngine(mesh=...), 8 host
+    """Tensor-parallel packed serving (EngineSpec(mesh=...), 8 host
     devices, model=4) is token-for-token BIT-EXACT with single-device
     decode for >=16 greedy tokens on olmo-1b smoke — packed weights over
     the full-dtype cache AND the int8 / packed-int4 quantized caches —
@@ -142,7 +142,7 @@ def test_sharded_serving_bit_exact_with_single_device():
 from repro import configs
 from repro.models import transformer as tf
 from repro.parallel.context import local_context
-from repro.serve import ServeEngine, pack_params
+from repro.serve import EngineSpec, ServeEngine, pack_params
 
 cfg = configs.get_config("olmo-1b").smoke()
 ctx = local_context()
@@ -154,13 +154,8 @@ rng = np.random.default_rng(2)
 prompt = jnp.asarray(rng.integers(0, cfg.vocab, (2, 12)), jnp.int32)
 mesh = jax.make_mesh((2, 4), ("data", "model"))     # all 8 host devices
 for cache, bits in (("full", 8), ("quantized", 8), ("quantized", 4)):
-    e1 = ServeEngine(cfg=cfg, params=pack_params(params, arrays, cfg),
-                     policy_arrays=pa, ctx=ctx, max_seq=64,
-                     weights="packed", cache=cache, cache_bits=bits)
-    eS = ServeEngine(cfg=cfg, params=pack_params(params, arrays, cfg),
-                     policy_arrays=pa, ctx=ctx, max_seq=64,
-                     weights="packed", cache=cache, cache_bits=bits,
-                     mesh=mesh)
+    e1 = ServeEngine(cfg=cfg, params=pack_params(params, arrays, cfg), policy_arrays=pa, ctx=ctx, max_seq=64, spec=EngineSpec(weights="packed", cache=cache, cache_bits=bits))
+    eS = ServeEngine(cfg=cfg, params=pack_params(params, arrays, cfg), policy_arrays=pa, ctx=ctx, max_seq=64, spec=EngineSpec(weights="packed", cache=cache, cache_bits=bits, mesh=mesh))
     want = np.asarray(e1.generate(prompt, n_new=16))
     got = np.asarray(eS.generate(prompt, n_new=16))
     np.testing.assert_array_equal(got, want)
@@ -182,7 +177,7 @@ from repro import configs
 from repro.core import knapsack
 from repro.models import transformer as tf
 from repro.parallel.context import local_context
-from repro.serve import Request, ServeEngine, pack_params, serve_all
+from repro.serve import EngineSpec, Request, ServeEngine, pack_params, serve_all
 
 cfg = configs.get_config("olmo-1b").smoke()
 ctx = local_context()
@@ -195,18 +190,13 @@ pa = jax.tree.map(jnp.asarray, arrays)
 mesh = jax.make_mesh((4,), ("model",))
 rng = np.random.default_rng(3)
 prompt = jnp.asarray(rng.integers(0, cfg.vocab, (1, 12)), jnp.int32)
-e1 = ServeEngine(cfg=cfg, params=pack_params(params, arrays, cfg),
-                 policy_arrays=pa, ctx=ctx, max_seq=64, weights="packed")
-eS = ServeEngine(cfg=cfg, params=pack_params(params, arrays, cfg),
-                 policy_arrays=pa, ctx=ctx, max_seq=64, weights="packed",
-                 mesh=mesh)
+e1 = ServeEngine(cfg=cfg, params=pack_params(params, arrays, cfg), policy_arrays=pa, ctx=ctx, max_seq=64, spec=EngineSpec(weights="packed"))
+eS = ServeEngine(cfg=cfg, params=pack_params(params, arrays, cfg), policy_arrays=pa, ctx=ctx, max_seq=64, spec=EngineSpec(weights="packed", mesh=mesh))
 np.testing.assert_array_equal(np.asarray(eS.generate(prompt, n_new=16)),
                               np.asarray(e1.generate(prompt, n_new=16)))
 # scheduler (UNCHANGED) over the sharded engine: 2 requests, 1 slot ->
 # eviction + re-admission into the freed slot, quantized cache re-grid
-eQ = ServeEngine(cfg=cfg, params=pack_params(params, arrays, cfg),
-                 policy_arrays=pa, ctx=ctx, max_seq=64, weights="packed",
-                 cache="quantized", cache_bits=8, mesh=mesh)
+eQ = ServeEngine(cfg=cfg, params=pack_params(params, arrays, cfg), policy_arrays=pa, ctx=ctx, max_seq=64, spec=EngineSpec(weights="packed", cache="quantized", cache_bits=8, mesh=mesh))
 prompts = [rng.integers(0, cfg.vocab, n).tolist() for n in (9, 14)]
 reqs = [Request(uid=f"r{i}", prompt=p, max_new_tokens=6)
         for i, p in enumerate(prompts)]
@@ -229,7 +219,7 @@ from repro import configs
 from repro.core import knapsack
 from repro.models import transformer as tf
 from repro.parallel.context import local_context
-from repro.serve import ServeEngine, pack_params
+from repro.serve import EngineSpec, ServeEngine, pack_params
 
 # dbrx smoke is MQA (1 KV head -> nothing to shard the cache on); serve a
 # GQA variant of the same MoE architecture.
@@ -243,11 +233,8 @@ arrays = mixed.as_arrays()
 pa = jax.tree.map(jnp.asarray, arrays)
 rng = np.random.default_rng(19)
 prompt = jnp.asarray(rng.integers(0, cfg.vocab, (1, 10)), jnp.int32)
-e1 = ServeEngine(cfg=cfg, params=pack_params(params, arrays, cfg),
-                 policy_arrays=pa, ctx=ctx, max_seq=40, weights="packed")
-eS = ServeEngine(cfg=cfg, params=pack_params(params, arrays, cfg),
-                 policy_arrays=pa, ctx=ctx, max_seq=40, weights="packed",
-                 mesh=jax.make_mesh((2,), ("model",)))
+e1 = ServeEngine(cfg=cfg, params=pack_params(params, arrays, cfg), policy_arrays=pa, ctx=ctx, max_seq=40, spec=EngineSpec(weights="packed"))
+eS = ServeEngine(cfg=cfg, params=pack_params(params, arrays, cfg), policy_arrays=pa, ctx=ctx, max_seq=40, spec=EngineSpec(weights="packed", mesh=jax.make_mesh((2,), ("model",))))
 np.testing.assert_array_equal(np.asarray(eS.generate(prompt, n_new=8)),
                               np.asarray(e1.generate(prompt, n_new=8)))
 print("OK")
