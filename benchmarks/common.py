@@ -51,9 +51,8 @@ def finetune_eval(setup, policy, steps: int = 25, seed: int = 7) -> Dict:
     pa = jax.tree.map(jnp.asarray, policy.as_arrays())
     st = setup["state"]._replace(policy=pa)
     cfg = setup["cfg"]
-    m = {}
     for i in range(steps):
-        st, m = setup["step"](st, make_batch(seed, i, setup["batch"],
+        st, _ = setup["step"](st, make_batch(seed, i, setup["batch"],
                                              setup["seq"], cfg.vocab))
     probe = dict(setup, state=st)
     return eval_loss(probe, policy)

@@ -26,31 +26,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
+# the recursive eqn walker lives with the static analyzer so the bench
+# and the program-size contract gate count the same way
+from repro.analysis.jaxpr_checks import count_eqns
 from repro.models import transformer as tf
 from repro.parallel.context import local_context
 from repro.serve import kv_cache, pack_params
 
 DEPTHS = (8, 32, 80)
-
-
-def count_eqns(jaxpr) -> int:
-    """Total equations including scan/cond/remat/pjit subjaxprs."""
-    n = 0
-    for eqn in jaxpr.eqns:
-        n += 1
-        for v in eqn.params.values():
-            n += _sub_eqns(v)
-    return n
-
-
-def _sub_eqns(v) -> int:
-    if hasattr(v, "jaxpr"):                   # ClosedJaxpr
-        return count_eqns(v.jaxpr)
-    if hasattr(v, "eqns"):                    # Jaxpr
-        return count_eqns(v)
-    if isinstance(v, (tuple, list)):
-        return sum(_sub_eqns(x) for x in v)
-    return 0
 
 
 def _four_level_policy(cfg):

@@ -11,6 +11,13 @@ token budget, and decode runs as one scanned dispatch per chunk routed
 through kernels/quant_matmul (Pallas on TPU, exact ref path on CPU).  The
 resident/streamed weight bytes printed below are MEASURED buffer sizes,
 which on TPU v5e is the decode-time HBM-roofline win.
+
+The serving path this example drives is held to written contracts —
+retrace budget, no baked constants, no full-dtype cache materialization,
+two psums per block, O(#buckets) program size (DESIGN.md §8).  To check
+them mechanically against the traced dispatch jaxprs, run:
+
+  PYTHONPATH=src:. python scripts/analyze.py
 """
 import jax
 import jax.numpy as jnp

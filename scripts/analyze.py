@@ -1,0 +1,137 @@
+#!/usr/bin/env python
+"""Serving-contract static analyzer driver: emits ANALYSIS.json.
+
+    JAX_PLATFORMS=cpu PYTHONPATH=src:. python scripts/analyze.py \
+        [--out ANALYSIS.json] [--skip-compile]
+
+Traces the four serving dispatch shapes (prefill, scanned decode, spec
+verify, fused prefill+decode — plus the shard_map'd decode) on
+smoke-sized engines (repro.analysis.harness) and runs every contract
+from DESIGN.md §8:
+
+  retrace       jit-cache entries vs the documented dispatch budget,
+                across scheduler workload sweeps (PR 8)
+  baked_consts  no params-sized constant in any serving jaxpr (PR 4)
+  dtype_flow    no full-dtype cache-sized intermediate in quantized
+                decode, traced as deployed (PR 1/PR 3)
+  collectives   exactly two psums per block body in sharded decode (PR 4)
+  program_size  bucketed decode eqn count flat in depth, plus the old
+                compile-smoke trace+lower wall budget (PR 6)
+
+plus the AST lint (raw PRNG keys in serve/) and the dead-code sweep.
+This script only REPORTS (exit 0 unless the analysis itself crashes);
+scripts/check_analysis.py is the gate.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+sys.path.insert(0, str(REPO))
+
+COMPILE_DEPTHS = (8, 32, 80)
+LOWER_BUDGET_S = 30.0
+
+
+def _merge(results_by_kind):
+    """One ContractResult per engine-kind -> one merged result."""
+    from repro.analysis.contracts import ContractResult
+    first = next(iter(results_by_kind.values()))
+    violations = []
+    details = {}
+    for kind, r in results_by_kind.items():
+        violations.extend(f"[{kind}] {v}" for v in r.violations)
+        details[kind] = r.details
+    return ContractResult(first.name, first.motivated_by, first.invariant,
+                          tuple(violations), details)
+
+
+def run_analysis(skip_compile: bool = False) -> dict:
+    import jax
+
+    from repro.analysis import (contracts, deadcode, harness, lint_rules,
+                                report)
+
+    t_start = time.perf_counter()
+    results = []
+
+    print("analyze: tracing serving dispatches "
+          f"(engines: {', '.join(harness.ENGINE_KINDS)})")
+    engines = {kind: harness.build_engine(kind)
+               for kind in harness.ENGINE_KINDS}
+    results.append(_merge({k: contracts.check_baked_consts(e)
+                           for k, e in engines.items()}))
+    results.append(_merge({k: contracts.check_dtype_flow(e)
+                           for k, e in engines.items()}))
+    results.append(contracts.check_collectives(engines["sharded"]))
+
+    print("analyze: retrace audit (scheduler workload sweep)")
+    audits = harness.run_retrace_workloads()
+    results.append(contracts.check_retrace(audits))
+
+    if skip_compile:
+        results.append(contracts.check_program_size({}, None))
+    else:
+        print(f"analyze: program-size sweep depths={COMPILE_DEPTHS}")
+        from benchmarks import compile_bench
+        sweep = compile_bench.run(depths=COMPILE_DEPTHS,
+                                  layouts=("bucketed",))
+        eqns = {d: sweep[f"bucketed@{d}"]["jaxpr_eqns"]
+                for d in COMPILE_DEPTHS}
+        results.append(contracts.check_program_size(
+            eqns, lower_s_deep=sweep[f"bucketed@{COMPILE_DEPTHS[-1]}"]
+            ["lower_s"], lower_budget_s=LOWER_BUDGET_S))
+
+    print("analyze: AST lint + dead-code sweep")
+    lint = lint_rules.check_raw_keys(REPO / "src" / "repro" / "serve")
+    dead = deadcode.sweep(REPO)
+
+    doc = report.build_report(
+        results, lint, dead,
+        meta={"jax": jax.__version__,
+              "config": "olmo-1b.smoke",
+              "engines": list(harness.ENGINE_KINDS),
+              "wall_s": round(time.perf_counter() - t_start, 1)})
+    return doc
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="ANALYSIS.json")
+    ap.add_argument("--skip-compile", action="store_true",
+                    help="skip the depth sweep (fast local iteration; "
+                         "the program_size contract reports empty and "
+                         "check_analysis will fail it against a real "
+                         "baseline)")
+    args = ap.parse_args()
+
+    from repro.analysis import report
+    doc = run_analysis(skip_compile=args.skip_compile)
+    report.write_report(doc, args.out)
+
+    n_fail = 0
+    for name, c in doc["contracts"].items():
+        status = "ok" if c["ok"] else "FAIL"
+        print(f"analyze: contract {name:<13} {status}")
+        for v in c["violations"]:
+            n_fail += 1
+            print(f"    {v}")
+    for rule, vs in doc["lint"].items():
+        print(f"analyze: lint {rule:<18} {'ok' if not vs else 'FAIL'}")
+        n_fail += len(vs)
+    dc = doc["deadcode"]
+    print(f"analyze: deadcode          "
+          f"{'ok' if not dc['violations'] else 'FAIL'} "
+          f"({len(dc['allowlisted'])} allowlisted)")
+    n_fail += len(dc["violations"])
+    print(f"{args.out} written ({n_fail} violations; "
+          "scripts/check_analysis.py gates)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

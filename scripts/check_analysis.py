@@ -1,0 +1,78 @@
+#!/usr/bin/env python
+"""CI static-analysis gate: ANALYSIS.json vs the committed baseline.
+
+    python scripts/check_analysis.py \
+        [--analysis ANALYSIS.json] \
+        [--baseline benchmarks/baselines/analysis.json]
+
+Gate rules (repro.analysis.report.gate — the tests exercise the same
+function against injected regressions):
+
+  * REQUIRED sections and all five contracts must be PRESENT — an
+    analyzer that silently stops reporting a check fails loudly here,
+    same style as check_bench's REQUIRED bench columns;
+  * every contract must hold (its violations print one line each);
+  * lint and dead-code violations are failures;
+  * vs baseline: the sharded decode's psum count matches EXACTLY, and
+    the bucketed eqn counts stay within rtol per depth.
+
+Exits nonzero on any violation, printing one line per check.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+
+
+def ok(msg: str) -> None:
+    print(f"OK    {msg}")
+
+
+def fail(msg: str) -> None:
+    print(f"FAIL  {msg}")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--analysis", default="ANALYSIS.json")
+    ap.add_argument("--baseline",
+                    default="benchmarks/baselines/analysis.json")
+    args = ap.parse_args()
+
+    from repro.analysis import report
+
+    if not Path(args.analysis).is_file():
+        fail(f"{args.analysis} missing — run scripts/analyze.py first")
+        return 1
+    analysis = report.load(args.analysis)
+    baseline = None
+    if Path(args.baseline).is_file():
+        baseline = report.load(args.baseline)
+    else:
+        fail(f"baseline {args.baseline} missing — the static gate needs "
+             "a committed reference (generate with scripts/analyze.py "
+             "and commit deliberately)")
+        return 1
+
+    failures = report.gate(analysis, baseline)
+    for f in failures:
+        fail(f)
+    if not failures:
+        for name, c in analysis.get("contracts", {}).items():
+            ok(f"contract {name} ({c.get('motivated_by', '?')})")
+        ok(f"lint clean, deadcode clean "
+           f"({len(analysis['deadcode'].get('allowlisted', []))} "
+           "allowlisted)")
+        print("check_analysis: all serving contracts hold")
+        return 0
+    print(f"check_analysis: {len(failures)} violation(s) — the serving "
+          "contracts above are broken (DESIGN.md §8)", file=sys.stderr)
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -2,7 +2,7 @@
 # Tier-1 CI: dev deps -> lint -> test suite -> quick benches -> bench gate.
 #
 #   bash scripts/ci.sh [--lint-only] [--skip-bench] [--skip-tests]
-#                      [--compile-smoke]
+#                      [--compile-smoke] [--analyze]
 #
 #   --lint-only    lint and stop (the workflow's lint job calls exactly
 #                  this, so local and CI lint run ONE entrypoint and
@@ -10,11 +10,15 @@
 #                  ruff via ci.sh and the workflow had its own command)
 #   --skip-bench   tests only (the workflow's test job)
 #   --skip-tests   benches + regression gate only (the workflow's bench job)
-#   --compile-smoke  deep-config compile smoke only (the workflow's
-#                  compile-smoke job): an 80-repeat 4-bucket mixed config
-#                  must trace+lower inside a tight wall budget — catches
-#                  O(depth) program-size regressions without waiting for
-#                  the full bench leg
+#   --analyze      static-analysis job: scripts/analyze.py traces the
+#                  serving dispatches into jaxprs, checks the DESIGN.md §8
+#                  contracts (retrace budget, baked consts, dtype flow,
+#                  psum count, program size — the old compile-smoke wall
+#                  budget folds in here), runs the AST lint + dead-code
+#                  sweep, then scripts/check_analysis.py gates
+#                  ANALYSIS.json against benchmarks/baselines/analysis.json
+#   --compile-smoke  legacy alias: the deep-config compile budget only
+#                  (now a shim over the analyzer's program_size contract)
 #
 # The bench step emits BENCH_serve.json and BENCH_knapsack.json in the repo
 # root and gates BENCH_serve.json against benchmarks/baselines/serve.json
@@ -26,16 +30,34 @@ LINT_ONLY=0
 SKIP_BENCH=0
 SKIP_TESTS=0
 COMPILE_SMOKE=0
+ANALYZE=0
 for arg in "$@"; do
     case "$arg" in
         --lint-only)  LINT_ONLY=1 ;;
         --skip-bench) SKIP_BENCH=1 ;;
         --skip-tests) SKIP_TESTS=1 ;;
         --compile-smoke) COMPILE_SMOKE=1 ;;
+        --analyze) ANALYZE=1 ;;
         *) echo "usage: ci.sh [--lint-only] [--skip-bench] [--skip-tests]" \
-               "[--compile-smoke]" >&2; exit 2 ;;
+               "[--compile-smoke] [--analyze]" >&2; exit 2 ;;
     esac
 done
+
+if [ "$ANALYZE" -eq 1 ]; then
+    rm -f ANALYSIS.json
+    JAX_PLATFORMS=cpu PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} \
+        python scripts/analyze.py
+    if [ ! -s ANALYSIS.json ]; then
+        echo "ERROR: analyzer emitted no ANALYSIS.json" >&2
+        exit 1
+    fi
+    PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} \
+        python scripts/check_analysis.py \
+        || { echo "ERROR: static-analysis gate failed (see FAIL lines" \
+                  "above — a DESIGN.md §8 serving contract is broken)" >&2; \
+             exit 1; }
+    exit 0
+fi
 
 if [ "$COMPILE_SMOKE" -eq 1 ]; then
     JAX_PLATFORMS=cpu PYTHONPATH=src:.${PYTHONPATH:+:$PYTHONPATH} \

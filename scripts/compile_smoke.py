@@ -1,25 +1,26 @@
 #!/usr/bin/env python
-"""CI compile smoke: a DEEP mixed-precision config must stay cheap to
-trace.
+"""Deep-config compile budget — now a shim over the static analyzer.
 
-Builds an 80-repeat config under a 4-level mixed policy (weight 4/2 bit x
-cache 8/4 bit — 4 buckets), packs it into the bucketed layout, and
-trace+lowers the packed decode step.  The wall-clock budget is deliberately
-tight: the bucketed program is O(#buckets), so tracing the 80-deep stack
-costs the same as an 8-deep one (~1-2 s on the CI runner class).  If a
-change reintroduces per-layer python unrolling, tracing balloons to
-O(depth) (>10 s for this config) and this smoke times out loudly instead
-of every deep-config user paying the compile tax at import time.
+The trace+lower wall budget for an 80-repeat 4-bucket mixed config lives
+in the analyzer's ``program_size`` contract (repro.analysis.contracts.
+check_program_size); CI runs it via ``ci.sh --analyze`` as part of the
+static-analysis job, so this script exists only for the historical CLI:
 
     python scripts/compile_smoke.py [--depth 80] [--budget-s 30]
 
-Exits nonzero if the trace+lower exceeds the budget (or crashes).
+It runs exactly the analyzer's check for one depth and exits nonzero on
+a busted budget — same measurement (benchmarks/compile_bench), same
+contract code, one definition.
 """
 from __future__ import annotations
 
 import argparse
 import sys
-import time
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+sys.path.insert(0, str(REPO))
 
 
 def main() -> int:
@@ -33,18 +34,18 @@ def main() -> int:
     args = ap.parse_args()
 
     from benchmarks import compile_bench
+    from repro.analysis import contracts
 
-    t0 = time.perf_counter()
     out = compile_bench.run(depths=(args.depth,), layouts=("bucketed",))
-    dt = time.perf_counter() - t0
     row = out[f"bucketed@{args.depth}"]
     print(f"compile_smoke: depth={args.depth} buckets={row['n_buckets']} "
-          f"jaxpr_eqns={row['jaxpr_eqns']} lower_s={row['lower_s']} "
-          f"total_s={dt:.1f}")
-    if row["lower_s"] > args.budget_s:
-        print(f"FAIL  trace+lower took {row['lower_s']:.1f}s "
-              f"> budget {args.budget_s:.0f}s — deep-config compile cost "
-              f"is scaling with depth again", file=sys.stderr)
+          f"jaxpr_eqns={row['jaxpr_eqns']} lower_s={row['lower_s']}")
+    res = contracts.check_program_size(
+        {args.depth: row["jaxpr_eqns"]}, lower_s_deep=row["lower_s"],
+        lower_budget_s=args.budget_s)
+    for v in res.violations:
+        print(f"FAIL  {v}", file=sys.stderr)
+    if not res.ok:
         return 1
     print("compile_smoke: ok")
     return 0

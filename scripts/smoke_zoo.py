@@ -37,7 +37,7 @@ def run(arch: str):
     loss, metrics = tf.loss_fn(params, pa, batch, cfg, ctx)
     assert np.isfinite(float(loss)), (arch, "loss", loss)
     g = jax.grad(lambda p: tf.loss_fn(p, pa, batch, cfg, ctx)[0])(params)
-    gn = jax.tree.reduce(lambda a, l: a + float(jnp.sum(jnp.abs(l))), g, 0.0)
+    gn = jax.tree.reduce(lambda a, t: a + float(jnp.sum(jnp.abs(t))), g, 0.0)
     assert np.isfinite(gn) and gn > 0, (arch, "gradnorm", gn)
 
     # prefill + decode

@@ -1,0 +1,24 @@
+"""Serving-contract static analysis (DESIGN.md §8).
+
+The system's performance invariants — params enter jaxprs as arguments,
+quantized decode dequantizes in-register, two psums per block, bounded
+jit retraces, O(#buckets) program size — used to be enforced only by
+runtime benches or discovered as shipped bugs.  This package checks them
+on the TRACED programs instead: ``ServeEngine.dispatch_closures()``
+exposes the exact callables jit compiles, ``jaxpr_checks`` walks their
+jaxprs, ``contracts`` names each invariant with the PR that motivated it,
+and ``lint_rules``/``deadcode`` add AST-level repo rules no generic
+linter expresses.  ``scripts/analyze.py`` drives everything into
+ANALYSIS.json; ``scripts/check_analysis.py`` gates it in CI.
+"""
+from repro.analysis import deadcode, harness, jaxpr_checks  # noqa: F401
+from repro.analysis import contracts, lint_rules, report  # noqa: F401
+from repro.analysis.contracts import (  # noqa: F401
+    ALL_CONTRACTS, ContractResult, check_baked_consts, check_collectives,
+    check_dtype_flow, check_program_size, check_retrace,
+    run_engine_contracts,
+)
+from repro.analysis.jaxpr_checks import (  # noqa: F401
+    count_eqns, count_primitive, find_baked_consts,
+    find_float_intermediates, iter_eqns,
+)

@@ -1,0 +1,229 @@
+"""Serving-contract checks over traced dispatch jaxprs.
+
+Each check takes a ``ServeEngine`` (and its ``dispatch_closures()``) and
+returns a ``ContractResult`` carrying the PR that motivated it and the
+file where the invariant is written down — DESIGN.md §8 renders the same
+table.  A check FAILS by listing violations, never by raising: the
+analyzer reports every broken contract in one run.
+
+Tracing happens under ``kernels.ops.deployed_backend("tpu")`` so the
+checked program is the one that deploys (Pallas in-register dequant), not
+the CPU ref oracle — the ref path legitimately materializes a full-dtype
+cache, which is exactly what the dtype-flow contract forbids on TPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.analysis import jaxpr_checks as jc
+from repro.kernels import ops as kops
+
+#: element-count threshold above which a trace-time constant is
+#: "params-sized" rather than a legitimate small table (masks, iotas).
+BAKED_CONST_MIN_ELEMS = 2048
+
+
+@dataclasses.dataclass(frozen=True)
+class ContractResult:
+    name: str
+    motivated_by: str            # the PR whose bug class this catches
+    invariant: str               # file where the invariant is documented
+    violations: Tuple[str, ...]  # empty == contract holds
+    details: Dict[str, Any]
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def to_json(self) -> dict:
+        return {"name": self.name, "ok": self.ok,
+                "motivated_by": self.motivated_by,
+                "invariant": self.invariant,
+                "violations": list(self.violations),
+                "details": self.details}
+
+
+def _traced(engine, names: Optional[Sequence[str]] = None) -> Dict[str, Any]:
+    """name -> ClosedJaxpr for the engine's dispatches, traced as
+    deployed (forced-TPU impl resolution; nothing executes)."""
+    closures = engine.dispatch_closures()
+    if names is not None:
+        closures = {k: v for k, v in closures.items() if k in names}
+    with kops.deployed_backend("tpu"):
+        return {name: c.trace() for name, c in closures.items()}
+
+
+# ------------------------------------------------------------ 1. retrace
+def check_retrace(audits: Dict[str, dict]) -> ContractResult:
+    """Jit-cache entries stay inside the documented dispatch set.
+
+    ``audits``: workload name -> ``ContinuousBatchingScheduler.
+    dispatch_audit()`` taken AFTER driving that workload (chunk sizes,
+    draft k, admission patterns).  Any dispatch tracing beyond
+    ``ServeEngine.dispatch_budget`` means a retrace leak — the silent
+    recompile-per-call bug class (PR 8's ``S = max(chunk, k+1)`` width
+    contract).
+    """
+    violations = []
+    for wl, audit in audits.items():
+        for disp, over in audit.get("over", {}).items():
+            violations.append(
+                f"{wl}: {disp} traced {over['traces']}x, documented "
+                f"budget {over['budget']} (ServeEngine.dispatch_budget)")
+    return ContractResult(
+        "retrace", motivated_by="PR 8",
+        invariant="src/repro/serve/engine.py (dispatch_budget)",
+        violations=tuple(violations),
+        details={wl: a["sizes"] for wl, a in audits.items()})
+
+
+# ------------------------------------------------------ 2. baked consts
+def check_baked_consts(engine,
+                       min_elems: int = BAKED_CONST_MIN_ELEMS,
+                       ) -> ContractResult:
+    """No params-sized constant baked into any serving jaxpr.
+
+    Params/caches must enter as ARGUMENTS: a trace-time-captured
+    checkpoint pins weights into the executable and silently doubles
+    memory (the PR 4 bug class — jitting a closure over ``self.params``).
+    """
+    violations = []
+    details = {}
+    for name, closed in _traced(engine).items():
+        baked = jc.find_baked_consts(closed, min_elems=min_elems)
+        details[name] = {"n_consts": len(list(closed.consts)),
+                         "flagged": len(baked)}
+        for rec in baked:
+            violations.append(f"{name}: {rec.describe()}")
+    return ContractResult(
+        "baked_consts", motivated_by="PR 4",
+        invariant="src/repro/serve/engine.py (dispatch_closures)",
+        violations=tuple(violations), details=details)
+
+
+# -------------------------------------------------------- 3. dtype flow
+def check_dtype_flow(engine) -> ContractResult:
+    """Quantized-cache decode never materializes a full-dtype cache.
+
+    The decode scan reads int8/int4 codes through the fused Pallas kernel
+    (in-register dequant, DESIGN.md §3) — a float intermediate the size
+    of one (B, S_max, Hkv, D) cache buffer in the traced-as-deployed
+    program means someone dequantized the cache in HBM (the PR 1/PR 3
+    bug class: the bf16 round-trip that broke greedy parity).
+
+    Scope: the scanned ``decode`` dispatch.  The multi-token verify and
+    fused-prefill dispatches are documented exceptions today — the
+    multi-query path vmaps the ref kernel (models/attention.py, "no
+    multi-query Pallas kernel yet") and chunked prefill stages full-dtype
+    by design, so flagging them would gate on known, written-down
+    behavior rather than a regression.
+    """
+    if engine.cache != "quantized":
+        return ContractResult(
+            "dtype_flow", motivated_by="PR 1/PR 3",
+            invariant="src/repro/models/attention.py (quantized decode)",
+            violations=(), details={"skipped": "full-dtype cache engine"})
+    cfg = engine.cfg
+    b = 1                        # dispatch_closures default batch
+    min_elems = b * engine.max_seq * cfg.n_kv_heads * cfg.head_dim
+    violations = []
+    details = {"threshold_elems": min_elems, "s_max": engine.max_seq}
+    for name, closed in _traced(engine, names=("decode",)).items():
+        recs = jc.find_float_intermediates(closed, min_elems=min_elems,
+                                           require_axis=engine.max_seq)
+        details[name] = {"flagged": len(recs)}
+        for rec in recs:
+            violations.append(f"{name}: {rec.describe()}")
+    return ContractResult(
+        "dtype_flow", motivated_by="PR 1/PR 3",
+        invariant="src/repro/models/attention.py (quantized decode)",
+        violations=tuple(violations), details=details)
+
+
+# ------------------------------------------------------- 4. collectives
+def check_collectives(engine) -> ContractResult:
+    """Exactly two psums per transformer-block body in sharded decode.
+
+    DESIGN.md §3: tensor-parallel serving all-reduces once after the
+    attention out-projection and once after the FFN down-projection —
+    nothing else.  A third psum per body (e.g. a re-replicated
+    normalization) multiplies interconnect traffic on every decode step.
+    Static count over the shard_map jaxpr: one scan body == one count,
+    so the expectation is ``2 * n_scan_bodies()``, depth-independent for
+    the bucketed layout.
+    """
+    if engine.mesh is None:
+        return ContractResult(
+            "collectives", motivated_by="PR 4",
+            invariant="DESIGN.md §3 (two psums per block)",
+            violations=(), details={"skipped": "single-device engine"})
+    traced = _traced(engine, names=("decode",))
+    n_psum = jc.count_primitive(traced["decode"], "psum")
+    expected = 2 * engine.n_scan_bodies()
+    violations = ()
+    if n_psum != expected:
+        violations = (
+            f"sharded decode traces {n_psum} psums, contract expects "
+            f"{expected} (2 per block body x {engine.n_scan_bodies()} "
+            f"bodies)",)
+    return ContractResult(
+        "collectives", motivated_by="PR 4",
+        invariant="DESIGN.md §3 (two psums per block)",
+        violations=violations,
+        details={"psums": n_psum, "expected": expected})
+
+
+# ------------------------------------------------------ 5. program size
+def check_program_size(eqns_by_depth: Dict[int, int],
+                       lower_s_deep: Optional[float] = None,
+                       growth_budget: float = 1.05,
+                       lower_budget_s: float = 30.0) -> ContractResult:
+    """Bucketed decode program size is flat in depth.
+
+    ``eqns_by_depth``: n_repeats -> recursive eqn count of the bucketed
+    decode step under the fixed 4-bucket policy (compile_bench's
+    measurement, shared ``count_eqns``).  O(#buckets) compile is PR 6's
+    reason to exist — any depth-proportional term reappearing (an
+    unrolled sub-path, a per-layer python loop) shows up here without
+    timing anything.  ``lower_s_deep`` folds in the old compile-smoke
+    wall budget for the deepest config's trace+lower.
+    """
+    depths = sorted(eqns_by_depth)
+    violations = []
+    if len(depths) >= 2:
+        shallow, deep = eqns_by_depth[depths[0]], eqns_by_depth[depths[-1]]
+        growth = deep / max(shallow, 1)
+        if growth > growth_budget:
+            violations.append(
+                f"bucketed eqn count grows {growth:.2f}x from depth "
+                f"{depths[0]} ({shallow}) to {depths[-1]} ({deep}) — "
+                f"budget {growth_budget}x (O(#buckets) contract)")
+    else:
+        growth = 1.0
+    if lower_s_deep is not None and lower_s_deep > lower_budget_s:
+        violations.append(
+            f"depth-{depths[-1]} trace+lower took {lower_s_deep:.1f}s, "
+            f"budget {lower_budget_s:.0f}s (compile-smoke wall gate)")
+    return ContractResult(
+        "program_size", motivated_by="PR 6",
+        invariant="benchmarks/compile_bench.py (O(#buckets) contract)",
+        violations=tuple(violations),
+        details={"eqns_by_depth": {str(k): v
+                                   for k, v in eqns_by_depth.items()},
+                 "growth": round(growth, 3),
+                 "lower_s_deep": lower_s_deep,
+                 "lower_budget_s": lower_budget_s})
+
+
+ALL_CONTRACTS = ("retrace", "baked_consts", "dtype_flow", "collectives",
+                 "program_size")
+
+
+def run_engine_contracts(engine) -> List[ContractResult]:
+    """The jaxpr contracts derivable from one engine (no workload run):
+    baked consts, dtype flow, collectives.  Retrace needs scheduler
+    audits and program-size needs the depth sweep — the driver
+    (scripts/analyze.py) supplies both."""
+    return [check_baked_consts(engine), check_dtype_flow(engine),
+            check_collectives(engine)]

@@ -1,0 +1,151 @@
+"""Dead-code sweep: unreferenced public symbols and modules in src/repro.
+
+Name-based and deliberately conservative: a top-level public function/
+class counts as referenced if its bare name occurs ANYWHERE else in the
+repo (attribute access, call, import, decorator — any mention); a module
+counts as referenced only via a real import of its dotted path.  That
+direction of error never flags live code spuriously; it can miss dead
+code that shares a name with live code, which is fine for a gate.
+
+Known-unreferenced scaffolding is not deleted silently: it lives in the
+allowlist file (``deadcode_allow.txt``) where every entry must carry a
+one-line justification — ROADMAP points at ``launch/elastic.py`` /
+``launch/mesh.py`` as the tensor-parallel scale-out seam, so they stay.
+Entries that become referenced again are reported as stale (prune the
+allowlist, not a failure); entries without a justification are
+violations.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Dict, List, Set, Tuple
+
+DEFAULT_ALLOWLIST = Path(__file__).with_name("deadcode_allow.txt")
+SCAN_ROOTS = ("src", "tests", "benchmarks", "scripts", "examples")
+
+
+def _py_files(root: Path):
+    return (p for p in sorted(root.rglob("*.py"))
+            if "__pycache__" not in p.parts)
+
+
+def _module_dotted(path: Path, src_root: Path) -> str:
+    rel = path.relative_to(src_root).with_suffix("")
+    parts = list(rel.parts)
+    if parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+def _definitions(src_pkg: Path, src_root: Path) -> Dict[str, List[str]]:
+    """module dotted path -> its top-level public function/class names."""
+    defs: Dict[str, List[str]] = {}
+    for path in _py_files(src_pkg):
+        tree = ast.parse(path.read_text(), filename=str(path))
+        names = [n.name for n in tree.body
+                 if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                   ast.ClassDef))
+                 and not n.name.startswith("_")]
+        defs[_module_dotted(path, src_root)] = names
+    return defs
+
+
+def _references(repo_root: Path) -> Tuple[Set[str], Set[str]]:
+    """(mentioned names, imported dotted module paths) across the repo."""
+    names: Set[str] = set()
+    imports: Set[str] = set()
+    for root in SCAN_ROOTS:
+        base = repo_root / root
+        if not base.is_dir():
+            continue
+        for path in _py_files(base):
+            tree = ast.parse(path.read_text(), filename=str(path))
+            for node in ast.walk(tree):
+                if isinstance(node, ast.Name):
+                    names.add(node.id)
+                elif isinstance(node, ast.Attribute):
+                    names.add(node.attr)
+                elif isinstance(node, ast.Import):
+                    for a in node.names:
+                        imports.add(a.name)
+                        names.add((a.asname or a.name).split(".")[0])
+                elif isinstance(node, ast.ImportFrom):
+                    mod = node.module or ""
+                    imports.add(mod)
+                    for a in node.names:
+                        imports.add(f"{mod}.{a.name}" if mod else a.name)
+                        names.add(a.asname or a.name)
+                elif isinstance(node, ast.Constant) \
+                        and isinstance(node.value, str):
+                    if node.value.isidentifier():
+                        # __all__ strings, getattr names, registry keys
+                        names.add(node.value)
+                    elif "." in node.value and all(
+                            p.isidentifier()
+                            for p in node.value.split(".")):
+                        # dotted module paths loaded dynamically (the
+                        # configs/__init__ importlib registry)
+                        imports.add(node.value)
+    return names, imports
+
+
+def load_allowlist(path: Path = DEFAULT_ALLOWLIST,
+                   ) -> Tuple[Dict[str, str], List[str]]:
+    """entry -> justification, plus violations for unjustified entries."""
+    allow: Dict[str, str] = {}
+    violations: List[str] = []
+    if not path.is_file():
+        return allow, violations
+    for i, raw in enumerate(path.read_text().splitlines(), 1):
+        line = raw.strip()
+        if not line or line.startswith("#"):
+            continue
+        entry, _, why = line.partition(":")
+        entry, why = entry.strip(), why.strip()
+        if not why:
+            violations.append(
+                f"{path}:{i}: allowlist entry '{entry}' has no "
+                "justification ('name: why it stays')")
+        allow[entry] = why
+    return allow, violations
+
+
+def sweep(repo_root, allowlist_path: Path = DEFAULT_ALLOWLIST) -> dict:
+    """Full sweep.  Returns ``violations`` (unreferenced and not
+    allowlisted, or unjustified allowlist lines), ``allowlisted`` (dead
+    but explained), and ``stale_allowlist`` (explained but alive)."""
+    repo_root = Path(repo_root)
+    src_root = repo_root / "src"
+    defs = _definitions(src_root / "repro", src_root)
+    names, imports = _references(repo_root)
+    allow, violations = load_allowlist(allowlist_path)
+
+    unreferenced: List[str] = []
+    for mod, symbols in defs.items():
+        parent, _, base = mod.rpartition(".")
+        mod_used = mod in imports or (parent in imports and base in names) \
+            or any(imp.startswith(mod + ".") for imp in imports)
+        if not mod_used:
+            unreferenced.append(mod)
+            continue           # a dead module subsumes its symbols
+        unreferenced.extend(f"{mod}.{s}" for s in symbols
+                            if s not in names)
+
+    flagged, allowlisted = [], []
+    for item in unreferenced:
+        bare = item.rpartition(".")[2]
+        if item in allow or bare in allow:
+            allowlisted.append(item)
+        else:
+            flagged.append(item)
+    violations.extend(
+        f"unreferenced public symbol/module: {it} — delete it or add a "
+        f"justified line to {allowlist_path.name}" for it in flagged)
+    dead = set(unreferenced)
+    stale = [e for e in allow
+             if e not in dead and not any(d.rpartition(".")[2] == e
+                                          or d == e for d in dead)]
+    return {"violations": violations, "allowlisted": allowlisted,
+            "stale_allowlist": stale,
+            "n_definitions": sum(len(v) for v in defs.values())}

@@ -1,0 +1,111 @@
+"""AST-level custom lint: repo-specific API rules ruff cannot express.
+
+RULE raw-key (RK001): no raw ``jax.random.PRNGKey`` / ``key`` /
+``fold_in`` / ``split`` calls inside ``src/repro/serve/`` outside
+``sampling.py``.  Sampling keys are a CONTRACT there (PR 4): a request's
+t-th token draws from ``request_key(base, nonce, t)`` and nothing else,
+which is what makes trajectories invariant to chunk geometry, slot
+placement, and batchmates.  An ad-hoc key constructed elsewhere in the
+serving layer either duplicates the base-key default (drift risk) or
+folds different data (the scheduler-variance bug).  Route through
+``sampling.base_key`` / ``request_key`` / ``slot_keys``; where a raw key
+is genuinely needed, allowlist the LINE with an inline justification::
+
+    key = jax.random.PRNGKey(seed)  # analysis: allow-raw-key -- <why>
+
+The marker must carry a justification after ``--``; a bare marker is
+itself a violation (silent exemptions rot).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from pathlib import Path
+from typing import List, Sequence, Tuple
+
+RAW_KEY_FUNCS = ("PRNGKey", "key", "fold_in", "split")
+ALLOW_MARKER = "analysis: allow-raw-key"
+
+
+@dataclasses.dataclass(frozen=True)
+class LintViolation:
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def describe(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+def _call_name(func) -> str:
+    """Dotted name of a call target, best effort ("jax.random.PRNGKey")."""
+    parts = []
+    node = func
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def _is_raw_key_call(node: ast.Call, from_random_names: frozenset) -> bool:
+    name = _call_name(node.func)
+    if not name:
+        return False
+    parts = name.split(".")
+    # jax.random.PRNGKey / random.fold_in (import jax / from jax import random)
+    if len(parts) >= 2 and parts[-2] == "random" \
+            and parts[-1] in RAW_KEY_FUNCS:
+        return True
+    # bare PRNGKey(...) via `from jax.random import PRNGKey`
+    return len(parts) == 1 and parts[0] in from_random_names
+
+
+def check_raw_keys(serve_dir, exempt: Sequence[str] = ("sampling.py",),
+                   ) -> List[LintViolation]:
+    """Run RK001 over every .py under ``serve_dir``."""
+    out: List[LintViolation] = []
+    for path in sorted(Path(serve_dir).glob("*.py")):
+        if path.name in exempt:
+            continue
+        out.extend(_check_file(path))
+    return out
+
+
+def _check_file(path: Path) -> List[LintViolation]:
+    src = path.read_text()
+    lines = src.splitlines()
+    tree = ast.parse(src, filename=str(path))
+    from_random = frozenset(
+        a.asname or a.name
+        for node in ast.walk(tree) if isinstance(node, ast.ImportFrom)
+        if node.module == "jax.random" for a in node.names)
+    out = []
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and _is_raw_key_call(node, from_random)):
+            continue
+        line_txt = lines[node.lineno - 1] if node.lineno <= len(lines) else ""
+        marked, justified = _allow_marker(line_txt)
+        if marked and justified:
+            continue
+        if marked:
+            msg = (f"'{ALLOW_MARKER}' needs a justification after '--' "
+                   f"({_call_name(node.func)})")
+        else:
+            msg = (f"raw {_call_name(node.func)} in the serving layer — "
+                   "route through serve.sampling (base_key/request_key/"
+                   f"slot_keys) or add '# {ALLOW_MARKER} -- <why>'")
+        out.append(LintViolation("RK001", str(path), node.lineno, msg))
+    return out
+
+
+def _allow_marker(line: str) -> Tuple[bool, bool]:
+    """(marker present, justification present) for one source line."""
+    if ALLOW_MARKER not in line:
+        return False, False
+    tail = line.split(ALLOW_MARKER, 1)[1]
+    just = tail.split("--", 1)[1].strip() if "--" in tail else ""
+    return True, bool(just)

@@ -1,0 +1,112 @@
+"""ANALYSIS.json assembly and the baseline gate.
+
+``build_report`` collects contract results + lint + dead-code into one
+JSON document; ``gate`` compares a report against the committed baseline
+(benchmarks/baselines/analysis.json) and returns failure strings —
+scripts/check_analysis.py is a thin CLI over it, and the tests call
+``gate`` directly to prove every injected regression fails loudly
+(check_bench.py's REQUIRED-column style: a section that silently stops
+reporting is itself a failure).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence
+
+SCHEMA_VERSION = 1
+
+#: every report must carry these contract sections — a run that stops
+#: producing one is a gate failure, not a silent pass
+REQUIRED_CONTRACTS = ("retrace", "baked_consts", "dtype_flow",
+                      "collectives", "program_size")
+REQUIRED_SECTIONS = ("contracts", "lint", "deadcode")
+
+#: eqn counts may drift with jax version / model tweaks; growth is the
+#: contract, the absolute count only gates loosely vs baseline
+EQN_RTOL = 0.15
+
+
+def build_report(contracts: Sequence, lint_violations: Sequence,
+                 deadcode_result: dict, meta: Optional[dict] = None) -> dict:
+    """Assemble the ANALYSIS.json document from check outputs."""
+    return {
+        "_meta": {"schema": SCHEMA_VERSION, **(meta or {})},
+        "contracts": {c.name: c.to_json() for c in contracts},
+        "lint": {"raw_key": [v.describe() for v in lint_violations]},
+        "deadcode": deadcode_result,
+    }
+
+
+def write_report(report: dict, path) -> None:
+    Path(path).write_text(json.dumps(report, indent=2, sort_keys=True)
+                          + "\n")
+
+
+def load(path) -> dict:
+    return json.loads(Path(path).read_text())
+
+
+def gate(analysis: dict, baseline: Optional[dict] = None) -> List[str]:
+    """All reasons this report fails, [] if it passes.
+
+    Self-contained rules (no baseline needed):
+      * every REQUIRED section and contract present;
+      * every contract ``ok`` (its violations list is the evidence);
+      * zero lint and dead-code violations.
+    Baseline rules:
+      * collectives psum count matches EXACTLY (a collective appearing
+        or vanishing is a contract event either way);
+      * bucketed eqn counts within ``EQN_RTOL`` of baseline per depth.
+    """
+    fails: List[str] = []
+    for sec in REQUIRED_SECTIONS:
+        if sec not in analysis:
+            fails.append(f"REQUIRED section '{sec}' missing from report")
+    contracts: Dict[str, dict] = analysis.get("contracts", {})
+    for name in REQUIRED_CONTRACTS:
+        c = contracts.get(name)
+        if c is None:
+            fails.append(f"REQUIRED contract '{name}' missing from report")
+            continue
+        for v in c.get("violations", []):
+            fails.append(f"contract {name}: {v}")
+        if not c.get("ok", False) and not c.get("violations"):
+            fails.append(f"contract {name}: not ok (no detail reported)")
+    for rule, violations in analysis.get("lint", {}).items():
+        for v in violations:
+            fails.append(f"lint {rule}: {v}")
+    for v in analysis.get("deadcode", {}).get("violations", []):
+        fails.append(f"deadcode: {v}")
+
+    if baseline is not None:
+        fails.extend(_gate_vs_baseline(contracts, baseline))
+    return fails
+
+
+def _gate_vs_baseline(contracts: Dict[str, dict], baseline: dict,
+                      ) -> List[str]:
+    fails: List[str] = []
+    base_c = baseline.get("contracts", {})
+    cur = contracts.get("collectives", {}).get("details", {})
+    ref = base_c.get("collectives", {}).get("details", {})
+    if "psums" in ref and cur.get("psums") != ref["psums"]:
+        fails.append(
+            f"collectives: psum count {cur.get('psums')} != baseline "
+            f"{ref['psums']} (exact-match column — any change to the "
+            "sharded decode's collective structure must re-baseline "
+            "deliberately)")
+    cur_e = contracts.get("program_size", {}) \
+        .get("details", {}).get("eqns_by_depth", {})
+    ref_e = base_c.get("program_size", {}) \
+        .get("details", {}).get("eqns_by_depth", {})
+    for depth, ref_n in ref_e.items():
+        got = cur_e.get(depth)
+        if got is None:
+            fails.append(f"program_size: depth-{depth} eqn count missing "
+                         f"(baseline has {ref_n})")
+        elif abs(got - ref_n) > EQN_RTOL * ref_n:
+            fails.append(
+                f"program_size: depth-{depth} eqn count {got} outside "
+                f"rtol {EQN_RTOL} of baseline {ref_n}")
+    return fails

@@ -3,7 +3,7 @@
 MLA (q_lora 1536, kv_lora 512, nope 128, rope 64, v 128); 3 dense prefix
 layers (ff 18432); 58 MoE layers with 256 routed experts top-8 + 1 shared;
 MTP head [arXiv:2412.19437].  Router group-limited routing simplified to
-plain top-8 (DESIGN.md §8).
+plain top-8 (DESIGN.md §9).
 """
 import jax.numpy as jnp
 

@@ -3,7 +3,7 @@
 GPT-BigCode lineage: multi-query attention, non-gated GeLU MLP (d_ff = 4d),
 LayerNorm [arXiv:2405.04324].  RoPE substituted for learned absolute
 positions (positional scheme is orthogonal to the quantization study —
-DESIGN.md §8).
+DESIGN.md §9).
 """
 import jax.numpy as jnp
 

@@ -67,7 +67,6 @@ def quant_perturbation_l2sq(w: jax.Array, b_hi: float, b_lo: float) -> float:
     """||Q_hi(W) - Q_lo(W)||² with HAWQ's range-based step init (Appendix C)."""
     w = w.astype(jnp.float32)
     rng = jnp.maximum(jnp.abs(w.min()), jnp.abs(w.max()))
-    out = 0.0
     deq = {}
     for b in (b_hi, b_lo):
         step = rng / (2.0 ** (b - 1.0))

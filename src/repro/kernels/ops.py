@@ -12,6 +12,8 @@
 """
 from __future__ import annotations
 
+import contextlib
+
 import jax
 import jax.numpy as jnp
 
@@ -24,7 +26,33 @@ from repro.kernels import quant_matmul as _qmm
 from repro.kernels import ref
 
 
+# Forced-backend stack for deployed_backend(); empty -> real backend.
+_DEPLOYED: list = []
+
+
+@contextlib.contextmanager
+def deployed_backend(backend: str):
+    """Resolve ``impl='auto'`` as if running on ``backend`` ("tpu"/"cpu").
+
+    For ABSTRACT work only — tracing (``jax.make_jaxpr``) and lowering.
+    The static analyzer (repro.analysis) uses this to trace the serving
+    dispatches down the Pallas path on a CPU host, so contracts like
+    "quantized decode never materializes a full-dtype cache" are checked
+    against the program that actually deploys, not the CPU ref oracle
+    (which legitimately dequantizes in full).  Actually EXECUTING a
+    Pallas kernel under a forced "tpu" on a CPU host will fail at
+    compile time, loudly.
+    """
+    _DEPLOYED.append(backend)
+    try:
+        yield
+    finally:
+        _DEPLOYED.pop()
+
+
 def on_tpu() -> bool:
+    if _DEPLOYED:
+        return _DEPLOYED[-1] == "tpu"
     return jax.default_backend() == "tpu"
 
 

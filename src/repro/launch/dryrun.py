@@ -271,7 +271,6 @@ def main():
     ap.add_argument("--serve-dtype", default=None)
     args = ap.parse_args()
 
-    cells = []
     archs = configs.ARCHS if (args.all or not args.arch) else [args.arch]
     names = list(shp.SHAPES) if (args.all or not args.shape) else [args.shape]
     meshes = [False, True] if args.both_meshes else [args.multi_pod]

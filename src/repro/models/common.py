@@ -1,9 +1,10 @@
 """Shared model building blocks: norms, RoPE/M-RoPE, quantized dense.
 
-Every matmul-bearing projection goes through ``qdense`` — the paper's
+Every matmul-bearing projection goes through ``qproj`` — the paper's
 quant-unit: weights *and* input activations fake-quantized with LSQ at the
-unit's policy bits.  Bits ride in as traced arrays so one compiled step
-serves every knapsack outcome.
+unit's policy bits (or, in the packed serving layout, real low-bit codes
+streamed through the quant matmul).  Bits ride in as traced arrays so one
+compiled step serves every knapsack outcome.
 """
 from __future__ import annotations
 
@@ -101,18 +102,6 @@ def mrope_angles(positions: jax.Array, dim: int, sections=(16, 24, 24),
 
 
 # ----------------------------------------------------------- quantized dense
-def qdense(x: jax.Array, w: jax.Array, sw: jax.Array, sa: jax.Array,
-           bits: jax.Array) -> jax.Array:
-    """Fake-quantized x @ w (paper §3.4.1: acts+weights share the bits).
-
-    x: (..., d_in); w: (d_in, d_out) (or (E, d_in, d_out) with per-expert
-    sw/sa/bits of shape (E,) — broadcast handled by the caller's einsum).
-    """
-    xq = quant.lsq_fake_quant(x, sa.astype(jnp.float32), bits)
-    wq = quant.lsq_fake_quant(w, sw.astype(jnp.float32), bits)
-    return xq @ wq
-
-
 def weight_of(p, bits) -> jax.Array:
     """The (de)quantized weight of a param dict.
 

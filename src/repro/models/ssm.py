@@ -66,9 +66,9 @@ def _causal_conv(x, w, b, state=None):
     return out + b[None, None, :], new_state
 
 
-def _ssm_combine(l, r):
-    al, bl = l
-    ar, br = r
+def _ssm_combine(lt, rt):
+    al, bl = lt
+    ar, br = rt
     return al * ar, bl * ar + br
 
 

@@ -290,7 +290,7 @@ def init_caches(cfg, batch: int, max_seq: int, cache_dtype=None,
 
         def stack(c, n):
             return jax.tree.map(
-                lambda l: jnp.broadcast_to(l, (n,) + l.shape), c)
+                lambda t: jnp.broadcast_to(t, (n,) + t.shape), c)
 
         if isinstance(plan, str) and plan == "unrolled":
             caches["pat"] = [
@@ -495,7 +495,7 @@ def apply(params, policy_arrays, batch: Dict, cfg, ctx, mode: str = "train",
                 elif cache_is_list:
                     layer_cache = pat_caches[layer]
                 else:
-                    layer_cache = jax.tree.map(lambda l, i=layer: l[i],
+                    layer_cache = jax.tree.map(lambda t, i=layer: t[i],
                                                pat_caches)
                 bits = [{k: v[layer]
                          for k, v in policy_arrays[f"pat{j}"].items()}
@@ -596,7 +596,7 @@ def loss_fn(params, policy_arrays, batch: Dict, cfg, ctx):
         # Multi-token prediction: predict t+2 from [h_t ; embed(tok_{t+1})]
         # through a lightweight projection + the shared LM head
         # (single-depth MTP head, simplified vs the paper's extra block —
-        # DESIGN.md §8).
+        # DESIGN.md §9).
         hidden = extras["hidden"]
         e = _embed(params, cfg, batch)
         hh = common.apply_norm(cfg.norm, hidden[:, :-1, :],

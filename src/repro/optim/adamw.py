@@ -153,6 +153,6 @@ def _flatten_like(state_tree, grad_treedef, is_q8: bool):
 
 def global_norm(tree) -> jax.Array:
     sq = jax.tree.reduce(
-        lambda a, l: a + jnp.sum(jnp.square(l.astype(jnp.float32))),
+        lambda a, t: a + jnp.sum(jnp.square(t.astype(jnp.float32))),
         tree, jnp.float32(0.0))
     return jnp.sqrt(sq)

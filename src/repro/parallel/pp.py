@@ -36,7 +36,7 @@ def pipeline_apply(block_fn: Callable, stage_params, x_microbatches,
     perm_fwd = [(i, (i + 1) % n_stages) for i in range(n_stages)]
 
     def shard_body(params_local, xs):
-        params_local = jax.tree.map(lambda l: l[0], params_local)
+        params_local = jax.tree.map(lambda t: t[0], params_local)
         stage = jax.lax.axis_index(axis)
         t_total = n_mb + n_stages - 1
         buf = jnp.zeros_like(xs[0])                      # inter-stage buffer

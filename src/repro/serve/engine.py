@@ -350,20 +350,27 @@ class ServeEngine:
                                    cache_dtype=self.cache_dtype,
                                    plan=pre_plan))
         self._pre_specs = sharding.serve_cache_specs(pre_template)
-        self._prefill = jax.jit(compat.shard_map(
+        # keep the unjitted shard_map'd callables around: they are the
+        # exact programs jit compiles, and repro.analysis traces THEM
+        # (dispatch_closures) to check the collective-count contract
+        self._prefill_sm = compat.shard_map(
             self._prefill_impl, mesh=self.mesh,
             in_specs=(self._pspecs, self._pa_specs, P(None, None), P(None)),
             out_specs=(P(None, None), self._pre_specs),
-            check_vma=False))
+            check_vma=False)
+        self._prefill = jax.jit(self._prefill_sm)
+        self._sharded_decode_sms: Dict[tuple, Any] = {}
         self._sharded_decode_fns: Dict[tuple, Any] = {}
 
     def _shardings(self, specs):
         return jax.tree.map(lambda s: NamedSharding(self.mesh, s), specs)
 
-    def _sharded_decode(self, n_steps: int, key_ndim: int):
-        """shard_map'd decode chunk, cached per (scan length, key rank)."""
+    def _sharded_decode_sm(self, n_steps: int, key_ndim: int):
+        """UNJITTED shard_map'd decode chunk, cached per (scan length, key
+        rank) — the exact program ``_sharded_decode`` jits, exposed so the
+        static analyzer can trace it without executing."""
         k = (n_steps, key_ndim)
-        fn = self._sharded_decode_fns.get(k)
+        fn = self._sharded_decode_sms.get(k)
         if fn is None:
             def body(params, pa, layers, lengths, tok, active, key, nonces,
                      t0):
@@ -371,13 +378,22 @@ class ServeEngine:
                     params, pa, layers, lengths, tok, active, key, nonces,
                     t0, n_steps, self._cfg_local, self._tp_axis,
                     local_context())
-            fn = jax.jit(compat.shard_map(
+            fn = compat.shard_map(
                 body, mesh=self.mesh,
                 in_specs=(self._pspecs, self._pa_specs, self._cache_specs,
                           P(None), P(None, None), P(None),
                           P(*([None] * key_ndim)), P(None), P(None)),
                 out_specs=(self._cache_specs, P(None, None), P(None, None)),
-                check_vma=False))
+                check_vma=False)
+            self._sharded_decode_sms[k] = fn
+        return fn
+
+    def _sharded_decode(self, n_steps: int, key_ndim: int):
+        """shard_map'd decode chunk, cached per (scan length, key rank)."""
+        k = (n_steps, key_ndim)
+        fn = self._sharded_decode_fns.get(k)
+        if fn is None:
+            fn = jax.jit(self._sharded_decode_sm(n_steps, key_ndim))
             self._sharded_decode_fns[k] = fn
         return fn
 
@@ -748,7 +764,7 @@ class ServeEngine:
         layers, _, greedy, logits = self._fused(
             self.params, self.policy_arrays, layers_in, cache.lengths,
             tokens, jnp.full((b,), s_v, jnp.int32), active,
-            jax.random.PRNGKey(0), zeros, zeros)
+            sampling.base_key(), zeros, zeros)
         return layers, greedy, logits
 
     def commit_verified(self, cache, layers, steps,
@@ -780,7 +796,7 @@ class ServeEngine:
             raise ValueError(f"prompt {s_prompt} + n_new {n_new} exceeds "
                              f"max_seq {self.max_seq}")
         if key is None:
-            key = jax.random.PRNGKey(0)
+            key = sampling.base_key()
         lengths = (jnp.full((b,), s_prompt, jnp.int32) if lengths is None
                    else jnp.asarray(lengths, jnp.int32))
         if np.any(np.asarray(lengths) < 1) \
@@ -813,3 +829,170 @@ class ServeEngine:
             remaining -= n_steps
             t0 += n_steps
         return jnp.concatenate(out, axis=1)
+
+    # --------------------------- static-analysis surface (repro.analysis)
+    def dispatch_closures(self, batch: int = 1,
+                          prompt_tokens: int = 8,
+                          ) -> Dict[str, "DispatchClosure"]:
+        """The serving dispatches as TRACEABLE closures — the exact
+        callables ``jax.jit`` wraps (shard_map'd on a mesh engine), paired
+        with argument pytrees shaped like the scheduler's traffic, so
+        ``jax.make_jaxpr`` sees the deployed program without running it.
+
+        This is the contract surface ``repro.analysis`` checks: params
+        enter as ARGUMENTS here (a closure that baked them as trace-time
+        constants is exactly the PR 4 bug class the baked-const detector
+        exists for), cache buffers enter in this engine's real layout
+        (quantized codes+scales, paged tables, staging where the
+        scheduler would pass it), and the fused widths are the ones the
+        scheduler dispatches (``max(prefill_chunk, k+1)`` and ``k+1``).
+
+        Keys: ``prefill`` always; ``decode`` (scanned chunk — shard_map'd
+        when ``mesh=``); ``spec_verify`` when a draft is configured;
+        ``fused_prefill_decode`` when ``prefill_chunk`` is set.
+        """
+        b = batch
+        cache = self.new_cache(b)
+        paged = isinstance(cache, PagedServeCache)
+        layers = (paging.with_tables(cache.layers, cache.block_tbl)
+                  if paged else cache.layers)
+        tok = jnp.zeros((b, 1), jnp.int32)
+        active = jnp.ones((b,), bool)
+        key = sampling.base_key()
+        nonces = jnp.arange(b, dtype=jnp.int32)
+        t0 = jnp.ones((b,), jnp.int32)
+        s_p = min(int(prompt_tokens), self.max_seq)
+        ptoks = jnp.zeros((b, s_p), jnp.int32)
+        plens = jnp.full((b,), s_p, jnp.int32)
+        out: Dict[str, DispatchClosure] = {}
+        if self.mesh is not None:
+            out["prefill"] = DispatchClosure(
+                "prefill", self._prefill_sm,
+                (self.params, self.policy_arrays, ptoks, plens),
+                sharded=True)
+            out["decode"] = DispatchClosure(
+                "decode",
+                self._sharded_decode_sm(self.decode_chunk,
+                                        int(jnp.asarray(key).ndim)),
+                (self.params, self.policy_arrays, layers, cache.lengths,
+                 tok, active, key, nonces, t0),
+                sharded=True)
+            return out
+        out["prefill"] = DispatchClosure(
+            "prefill", self._prefill_impl,
+            (self.params, self.policy_arrays, ptoks, plens))
+        out["decode"] = DispatchClosure(
+            "decode", self._decode_impl,
+            (self.params, self.policy_arrays, layers, cache.lengths, tok,
+             active, key, nonces, t0, self.decode_chunk),
+            static_argnums=(9,))
+
+        def fused(name, s_w, layers_in):
+            return DispatchClosure(
+                name, self._fused_impl,
+                (self.params, self.policy_arrays, layers_in, cache.lengths,
+                 jnp.zeros((b, s_w), jnp.int32),
+                 jnp.full((b,), s_w, jnp.int32), active, key, nonces,
+                 jnp.zeros((b,), jnp.int32)))
+
+        if self.draft is not None:
+            out["spec_verify"] = fused("spec_verify", self.draft.k + 1,
+                                       layers)
+        if self.prefill_chunk is not None:
+            s_w = max(self.prefill_chunk,
+                      (self.draft.k + 1) if self.draft is not None else 1)
+            layers_in = layers
+            staging = self.new_staging_cache(b)
+            if staging is not None:
+                layers_in = kv_cache.with_staging(
+                    layers_in, staging.layers, jnp.ones((b,), bool))
+            out["fused_prefill_decode"] = fused("fused_prefill_decode",
+                                                s_w, layers_in)
+        return out
+
+    def jit_cache_sizes(self) -> Dict[str, int]:
+        """Live jit-cache entry count per serving dispatch — the measured
+        side of the retrace audit (``dispatch_budget`` is the documented
+        ceiling).  Sharded decode sums across the per-(n_steps, key rank)
+        wrappers; a dispatch that never ran reports 0."""
+        def n(fn):
+            return int(fn._cache_size()) if fn is not None else 0
+        sizes = {"prefill": n(self._prefill)}
+        if self.mesh is not None:
+            sizes["decode"] = sum(
+                n(f) for f in self._sharded_decode_fns.values())
+            return sizes
+        sizes["prefill_suffix"] = n(self._prefill_suffix)
+        sizes["decode"] = n(self._decode)
+        sizes["fused"] = n(self._fused)
+        return sizes
+
+    def dispatch_budget(self, prompt_bucket: Optional[int] = None,
+                        ) -> Dict[str, int]:
+        """Documented ceiling on DISTINCT jit traces per dispatch
+        (DESIGN.md §8) — the retrace contract ``repro.analysis`` gates:
+
+          * ``prefill`` / ``prefill_suffix``: one trace per padded prompt
+            width; the scheduler pads to ``prompt_bucket`` multiples
+            capped at ``max_seq``, so at most ceil(max_seq/bucket).
+          * ``decode``: the full ``decode_chunk`` scan plus the
+            scheduler's power-of-two tail chunks below it.
+          * ``fused``: the token width S is a shape and the staging
+            attachment changes the input pytree STRUCTURE, so one trace
+            per distinct (width, staging) pair — the fused prefill+decode
+            round runs ``max(prefill_chunk, k+1)`` wide WITH staging on a
+            quantized cache (the scheduler always attaches it), spec
+            verify runs ``k+1`` wide on bare layers (PR 8).
+
+        A measured ``jit_cache_sizes`` above these means a retrace leak:
+        some argument that should be an array (or a stable static) is
+        feeding new trace keys per call — the recompile bug class.
+        """
+        pb = int(prompt_bucket) if prompt_bucket else self.max_seq
+        n_prefill = -(-self.max_seq // pb)
+        tails = {self.decode_chunk}
+        w = 1
+        while w < self.decode_chunk:
+            tails.add(w)
+            w *= 2
+        fused_keys = set()
+        if self.draft is not None:
+            fused_keys.add((self.draft.k + 1, False))
+        if self.prefill_chunk is not None:
+            s_w = max(self.prefill_chunk,
+                      (self.draft.k + 1) if self.draft is not None else 1)
+            fused_keys.add((s_w, self.cache == "quantized"))
+        return {"prefill": n_prefill, "prefill_suffix": n_prefill,
+                "decode": len(tails), "fused": len(fused_keys)}
+
+    def n_scan_bodies(self) -> int:
+        """Distinct transformer-block bodies in one traced decode step:
+        prefix layers unroll individually; the repeated pattern runs as
+        one scan per bucket (bucketed), one body per layer (unrolled), or
+        one scan total (stacked).  The collective-count contract expects
+        exactly ``2 * n_scan_bodies()`` psums in a sharded decode trace
+        (DESIGN.md §3: one after attention out-proj, one after the FFN
+        down-proj, per body)."""
+        n_prefix = len(getattr(self.cfg, "prefix", ()) or ())
+        plan = self._cache_plan
+        if isinstance(plan, tuple):
+            return n_prefix + len(plan)
+        if plan == "unrolled":
+            return n_prefix + int(self.cfg.n_repeats)
+        return n_prefix + (1 if self.cfg.n_repeats else len(self.cfg.pattern))
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchClosure:
+    """One serving dispatch as (exact jitted callable, example args) —
+    see ``ServeEngine.dispatch_closures``.  ``trace()`` returns the
+    ClosedJaxpr the analyzer walks; nothing executes."""
+    name: str
+    fn: Any
+    args: tuple
+    static_argnums: tuple = ()
+    sharded: bool = False
+
+    def trace(self):
+        return jax.make_jaxpr(self.fn, static_argnums=self.static_argnums)(
+            *self.args)

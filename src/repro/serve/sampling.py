@@ -50,6 +50,20 @@ class SamplerConfig:
 GREEDY = SamplerConfig()
 
 
+def base_key(seed: int = 0) -> jax.Array:
+    """The one sanctioned raw-key construction for the serving layer.
+
+    Everything under ``repro.serve`` derives keys from a single base via
+    ``request_key``/``slot_keys`` — constructing ad-hoc ``PRNGKey``s
+    elsewhere reintroduces the scheduler-variance bug class this module's
+    docstring describes, so ``repro.analysis.lint_rules`` forbids raw
+    ``jax.random.PRNGKey``/``fold_in`` calls outside this file.  Default
+    seeds and dummy keys (greedy paths that never consume them) route
+    through here instead.
+    """
+    return jax.random.PRNGKey(seed)
+
+
 def request_key(base: jax.Array, nonce, t) -> jax.Array:
     """Key for generated token ``t`` (0-based) of the request with
     admission nonce ``nonce`` (both non-negative int32)."""
@@ -95,6 +109,6 @@ def sample(logits: jax.Array, key: jax.Array, cfg: SamplerConfig) -> jax.Array:
         kth = jnp.sort(scaled, axis=-1)[:, -k][:, None]
         scaled = jnp.where(scaled >= kth, scaled, -1e30)
     if _is_key_batch(key, logits):              # per-row keys
-        draw = jax.vmap(lambda l, kk: jax.random.categorical(kk, l))
+        draw = jax.vmap(lambda lg, kk: jax.random.categorical(kk, lg))
         return draw(scaled, key).astype(jnp.int32)
     return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)

@@ -103,7 +103,7 @@ class ContinuousBatchingScheduler:
         self.engine = engine
         self.n_slots = n_slots
         self.prompt_bucket = prompt_bucket
-        self.key = jax.random.PRNGKey(0) if key is None else key
+        self.key = sampling.base_key() if key is None else key
         self.cache = engine.new_cache(n_slots)
         self._paged = getattr(engine, "cache_layout",
                               "contiguous") == "paged"
@@ -665,6 +665,18 @@ class ContinuousBatchingScheduler:
                 "n_tokens": int(sum(len(v)
                                     for v in self._emit_clocks.values())),
                 "ttft": pcts(ttfts), "inter_token": pcts(gaps)}
+
+    def dispatch_audit(self) -> dict:
+        """Measured jit-cache entries per serving dispatch vs the
+        documented ceiling (``ServeEngine.dispatch_budget`` with THIS
+        scheduler's prompt bucket).  ``over`` nonempty means some call
+        pattern retraces beyond the written contract — the recompile bug
+        class ``repro.analysis`` gates on across workload sweeps."""
+        sizes = self.engine.jit_cache_sizes()
+        budget = self.engine.dispatch_budget(self.prompt_bucket)
+        over = {k: {"traces": v, "budget": budget[k]}
+                for k, v in sizes.items() if k in budget and v > budget[k]}
+        return {"sizes": sizes, "budget": budget, "over": over}
 
     def _finish_reason(self, slot: _Slot) -> Optional[str]:
         if not slot.emitted:

@@ -45,7 +45,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serve import kv_cache
+from repro.serve import kv_cache, sampling
 from repro.serve.config import DraftSpec, EngineSpec
 
 
@@ -108,7 +108,7 @@ class SpecDecoder:
             self._hist = [None] * n_slots
         # greedy is enforced (EngineSpec.validate), so draft sampling
         # keys never influence output; a fixed key keeps the surface tidy
-        self._key = jax.random.PRNGKey(0)
+        self._key = sampling.base_key()
 
     # ---------------------------------------------------------- slot churn
     def admit(self, slot: int, prompt, first_token: int,

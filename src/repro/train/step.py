@@ -164,6 +164,6 @@ def make_train_step(cfg, ctx, optimizer, *, loss_fn: Optional[Callable] = None,
 
 def grad_compress_norm(grads) -> jax.Array:
     sq = jax.tree.reduce(
-        lambda a, l: a + jnp.sum(jnp.square(l.astype(jnp.float32))),
+        lambda a, t: a + jnp.sum(jnp.square(t.astype(jnp.float32))),
         grads, jnp.float32(0.0))
     return jnp.sqrt(sq)

@@ -46,7 +46,7 @@ def test_smoke_forward_train(arch):
     assert np.isfinite(float(loss))
     grads = jax.grad(lambda p: tf.loss_fn(p, pa, batch, cfg, ctx)[0])(params)
     gn = jax.tree.reduce(
-        lambda a, l: a + float(jnp.sum(jnp.abs(l.astype(jnp.float32)))),
+        lambda a, t: a + float(jnp.sum(jnp.abs(t.astype(jnp.float32)))),
         grads, 0.0)
     assert np.isfinite(gn) and gn > 0
 

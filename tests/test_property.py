@@ -71,7 +71,8 @@ def test_chunked_attention_matches_reference(seed):
     v = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
 
     def kv_fn(i):
-        sl = lambda t: jax.lax.dynamic_slice_in_dim(t, i * chunk, chunk, 1)
+        def sl(t):
+            return jax.lax.dynamic_slice_in_dim(t, i * chunk, chunk, 1)
         return sl(k), sl(v)
 
     got = chunked_attention(q, kv_fn, s // chunk, chunk, causal=True)
