@@ -5,16 +5,17 @@
         [--out ANALYSIS.json] [--skip-compile]
 
 Traces the four serving dispatch shapes (prefill, scanned decode, spec
-verify, fused prefill+decode — plus the shard_map'd decode) on
-smoke-sized engines (repro.analysis.harness) and runs every contract
-from DESIGN.md §8:
+verify, fused prefill+decode — plus the shard_map'd decode, contiguous
+AND paged) on smoke-sized engines (repro.analysis.harness) and runs
+every contract from DESIGN.md §8:
 
   retrace       jit-cache entries vs the documented dispatch budget,
                 across scheduler workload sweeps (PR 8)
   baked_consts  no params-sized constant in any serving jaxpr (PR 4)
   dtype_flow    no full-dtype cache-sized intermediate in quantized
                 decode, traced as deployed (PR 1/PR 3)
-  collectives   exactly two psums per block body in sharded decode (PR 4)
+  collectives   exactly two psums per block body in sharded decode,
+                contiguous and paged cache layouts (PR 4)
   program_size  bucketed decode eqn count flat in depth, plus the old
                 compile-smoke trace+lower wall budget (PR 6)
 
@@ -67,7 +68,8 @@ def run_analysis(skip_compile: bool = False) -> dict:
                            for k, e in engines.items()}))
     results.append(_merge({k: contracts.check_dtype_flow(e)
                            for k, e in engines.items()}))
-    results.append(contracts.check_collectives(engines["sharded"]))
+    results.append(_merge({k: contracts.check_collectives(engines[k])
+                           for k in ("sharded", "sharded_paged")}))
 
     print("analyze: retrace audit (scheduler workload sweep)")
     audits = harness.run_retrace_workloads()

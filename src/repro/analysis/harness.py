@@ -15,6 +15,12 @@ cover the four dispatch shapes the ISSUE names:
                          contract walks (the psum structure is identical
                          at any shard count; a 1-device mesh traces it
                          on any host).
+  * ``sharded_paged``  — the same mesh with ``cache_layout="paged"``:
+                         the sharded PAGED decode dispatch (page pools
+                         sharded on the KV-head axis, block table
+                         replicated).  Traced so the collective /
+                         baked-consts / dtype contracts cover the
+                         paged+mesh composition, not just contiguous.
 
 The retrace workloads drive real schedulers (mixed prompt lengths,
 staggered admission, tail chunks, speculation) and read back
@@ -35,12 +41,13 @@ from repro.serve.config import DraftSpec, EngineSpec
 from repro.serve.engine import ServeEngine
 from repro.serve.scheduler import ContinuousBatchingScheduler, Request
 
-ENGINE_KINDS = ("quantized", "spec_chunked", "sharded")
+ENGINE_KINDS = ("quantized", "spec_chunked", "sharded", "sharded_paged")
 MAX_SEQ = 64
 DECODE_CHUNK = 4
 PREFILL_CHUNK = 4
 DRAFT_K = 3
 PROMPT_BUCKET = 16
+PAGE_SIZE = 8
 
 
 def _packed_setup():
@@ -63,6 +70,10 @@ def build_engine(kind: str) -> ServeEngine:
     elif kind == "sharded":
         mesh = jax.make_mesh((1,), ("model",))
         spec = EngineSpec(**base, mesh=mesh)
+    elif kind == "sharded_paged":
+        mesh = jax.make_mesh((1,), ("model",))
+        spec = EngineSpec(**base, mesh=mesh, cache_layout="paged",
+                          page_size=PAGE_SIZE)
     else:
         raise ValueError(f"unknown engine kind {kind!r}; "
                          f"one of {ENGINE_KINDS}")

@@ -90,12 +90,22 @@ def _gate_vs_baseline(contracts: Dict[str, dict], baseline: dict,
     base_c = baseline.get("contracts", {})
     cur = contracts.get("collectives", {}).get("details", {})
     ref = base_c.get("collectives", {}).get("details", {})
-    if "psums" in ref and cur.get("psums") != ref["psums"]:
-        fails.append(
-            f"collectives: psum count {cur.get('psums')} != baseline "
-            f"{ref['psums']} (exact-match column — any change to the "
-            "sharded decode's collective structure must re-baseline "
-            "deliberately)")
+    # details are either flat ({"psums": ...} — pre-paged baselines) or
+    # keyed per sharded engine kind ({"sharded": {"psums": ...},
+    # "sharded_paged": {...}}); gate every psum count EXACTLY either way
+    ref_psums = ({"": ref} if "psums" in ref else ref) or {}
+    for kind, ref_d in sorted(ref_psums.items()):
+        if not isinstance(ref_d, dict) or "psums" not in ref_d:
+            continue
+        cur_d = cur if kind == "" else cur.get(kind, {})
+        got = cur_d.get("psums") if isinstance(cur_d, dict) else None
+        if got != ref_d["psums"]:
+            label = f"collectives[{kind}]" if kind else "collectives"
+            fails.append(
+                f"{label}: psum count {got} != baseline "
+                f"{ref_d['psums']} (exact-match column — any change to "
+                "the sharded decode's collective structure must "
+                "re-baseline deliberately)")
     cur_e = contracts.get("program_size", {}) \
         .get("details", {}).get("eqns_by_depth", {})
     ref_e = base_c.get("program_size", {}) \

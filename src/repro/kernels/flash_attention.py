@@ -256,6 +256,12 @@ def paged_kv_decode_attention(q: jax.Array, kq_pool: jax.Array,
     not the traffic model).  One page (16 rows by default) per grid step
     is sublane-aligned but narrow; fusing multiple pages per step is a
     perf follow-up, not a correctness concern.
+
+    Tensor-parallel note: every count here — grid H, the GQA ``group``,
+    ``hkv`` — derives from the LOCAL operand shapes, so under
+    ``shard_map`` with head-sharded pools each shard streams pages for
+    ITS KV heads through the same replicated block table with zero mesh
+    awareness (DESIGN.md §3, paged sharding).
     """
     b, h, d = q.shape
     p_phys, page, hkv, dp = kq_pool.shape

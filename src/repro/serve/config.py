@@ -144,16 +144,12 @@ class EngineSpec:
             if self.mesh is not None:
                 raise ValueError(
                     "prefill_chunk does not compose with mesh= yet: the "
-                    "fused prefill/decode dispatch needs a sharded "
-                    "multi-token decode wrapper — chunk-prefill "
+                    "fused prefill/decode dispatch mixes per-row prefill "
+                    "and decode roles in ONE batched call, and that role-"
+                    "masked body has no shard_map wrapper (plain decode — "
+                    "contiguous or paged — does) — chunk-prefill "
                     "single-device or drop the mesh")
         if self.cache_layout == "paged":
-            if self.mesh is not None:
-                raise ValueError(
-                    "cache_layout='paged' is single-device this release; "
-                    "the page pools already carry KV-head-axis shard specs "
-                    "(parallel/sharding.serve_cache_specs) but the sharded "
-                    "decode wrapper pins the contiguous layout")
             if self.page_size < 1:
                 raise ValueError(f"page_size must be >= 1, "
                                  f"got {self.page_size}")
@@ -174,9 +170,12 @@ class EngineSpec:
             if self.mesh is not None:
                 raise ValueError(
                     "speculative decoding (draft=) does not compose with "
-                    "mesh= yet: the verify dispatch needs a sharded "
-                    "multi-token decode wrapper — run spec decode "
-                    "single-device or drop the draft")
+                    "mesh= yet: the (B, k+1) verify dispatch and the "
+                    "host-side accept/rollback loop have no shard_map "
+                    "wrapper (plain decode — contiguous or paged — does), "
+                    "and a policy draft would need its own sharded "
+                    "engine — run spec decode single-device or drop the "
+                    "draft")
         if cfg is not None:
             if self.cache_layout == "paged":
                 blocks = tuple(cfg.prefix) + tuple(cfg.pattern)

@@ -63,13 +63,19 @@ for gate/up) and input channels (heads for O, d_ff for down — repacked so
 no nibble byte straddles a shard), the KV cache (codes AND scales) shards
 along the KV-head axis, and prefill/decode run under
 ``parallel/compat.shard_map`` with exactly two psums per block (after the
-O-projection and after the MLP down-projection).  The scheduler is
-completely unchanged — it drives the same ``prefill``/``decode_chunk_step``
-surface and never sees the mesh.  Sharded decode is token-for-token
-bit-exact with single-device decode (tests/test_sharding.py): per-head
-attention is head-local, every elementwise op acts on replicated or
-exactly-sliced data, and the activation fake-quant grid snaps the
-psum-reassociation noise back onto the single-device code grid.
+O-projection and after the MLP down-projection).  Both cache layouts
+compose: a PAGED cache shards its physical page pools (``pk/pv``,
+``pkq/pvq`` + per-page ``pv_scale``) on the same KV-head axis while the
+block table and per-slot state stay replicated — page geometry is
+head-count-independent, so the host-side allocator/prefix registry never
+see the mesh, and the paged decode kernel's grid is derived from LOCAL
+shapes (local KV heads per shard).  The scheduler is completely
+unchanged — it drives the same ``prefill``/``decode_chunk_step`` surface
+and never sees the mesh.  Sharded decode is token-for-token bit-exact
+with single-device decode (tests/test_sharding.py): per-head attention
+is head-local, every elementwise op acts on replicated or exactly-sliced
+data, and the activation fake-quant grid snaps the psum-reassociation
+noise back onto the single-device code grid.
 
 Sampling keys (serve/sampling.py): the key for a request's t-th generated
 token folds ONLY (per-request admission nonce, t) into the base key, so a
@@ -335,12 +341,35 @@ class ServeEngine:
         # cache layouts: decode buffers (possibly quantized) and the
         # full-dtype prefill handoff — both shard on the KV-head axis
         bits = self.cache_bits if self.cache == "quantized" else None
-        cache_template = jax.eval_shape(
-            lambda: kv_cache.init_cache(self._cfg, 1, self.max_seq,
-                                        dtype=self.cache_dtype,
-                                        cache_bits=bits,
-                                        plan=self._cache_plan).layers)
-        self._cache_specs = sharding.serve_cache_specs(cache_template)
+        if self.cache_layout == "paged":
+            # Paged pools (pk/pv, pkq/pvq + pv_scale) shard on the KV-head
+            # axis exactly like contiguous codes+scales — serve_cache_specs
+            # is leaf-NAME driven and already carries the paged rules; the
+            # block table and per-slot K scales replicate via its fallback.
+            # The decode dispatch sees TABLE-INJECTED layers
+            # (paging.with_tables; gqa_apply's paged branches return dicts
+            # that retain ``tbl``, so in/out structures match), while the
+            # stored cache holds bare pools — two templates, because
+            # paging.strip_tables dereferences pool shapes and cannot walk
+            # a PartitionSpec tree.
+            def tpl(with_tbl):
+                c = paging.init_paged_cache(
+                    self._cfg, 1, self.max_seq, 1, self.page_size,
+                    dtype=self.cache_dtype, cache_bits=bits,
+                    plan=self._cache_plan)
+                return (paging.with_tables(c.layers, c.block_tbl)
+                        if with_tbl else c.layers)
+            self._cache_specs = sharding.serve_cache_specs(
+                jax.eval_shape(lambda: tpl(True)))
+            self._paged_store_specs = sharding.serve_cache_specs(
+                jax.eval_shape(lambda: tpl(False)))
+        else:
+            cache_template = jax.eval_shape(
+                lambda: kv_cache.init_cache(self._cfg, 1, self.max_seq,
+                                            dtype=self.cache_dtype,
+                                            cache_bits=bits,
+                                            plan=self._cache_plan).layers)
+            self._cache_specs = sharding.serve_cache_specs(cache_template)
         # prefill emits FULL-dtype caches in the params-derived layout
         # (bucketed params -> bucketed prefill output)
         pre_plan = (self._cache_plan
@@ -485,10 +514,22 @@ class ServeEngine:
                     f"batch: every slot needs >= 1 page (worst case "
                     f"{self.max_pages}/slot at max_seq={self.max_seq}, "
                     f"page_size={self.page_size})")
-            return paging.init_paged_cache(
+            c = paging.init_paged_cache(
                 self._cfg, batch, self.max_seq, int(n_pages), self.page_size,
                 dtype=self.cache_dtype, cache_bits=bits,
                 plan=self._cache_plan)
+            if self.mesh is None:
+                return c
+            # pools on the KV-head axis; the block table and lengths are
+            # replicated host-of-record state (the allocator mutates the
+            # table row-wise — page geometry is head-count-independent)
+            return PagedServeCache(
+                layers=jax.device_put(
+                    c.layers, self._shardings(self._paged_store_specs)),
+                block_tbl=jax.device_put(
+                    c.block_tbl, NamedSharding(self.mesh, P(None, None))),
+                lengths=jax.device_put(
+                    c.lengths, NamedSharding(self.mesh, P(None))))
         c = kv_cache.init_cache(self._cfg, batch, self.max_seq,
                                 dtype=self.cache_dtype, cache_bits=bits,
                                 plan=self._cache_plan)
@@ -709,8 +750,11 @@ class ServeEngine:
         sampled (B,), greedy (B, S), logits).
         """
         if self.mesh is not None:
-            raise ValueError("fused_step is single-device (EngineSpec "
-                             "refuses prefill_chunk + mesh=)")
+            raise ValueError(
+                "fused_step is single-device: the role-masked fused "
+                "prefill/decode body has no shard_map wrapper — plain "
+                "decode (contiguous or paged) does (EngineSpec refuses "
+                "prefill_chunk + mesh=)")
         b = cache.lengths.shape[0]
         if active is None:
             active = jnp.ones((b,), bool)
@@ -749,8 +793,11 @@ class ServeEngine:
         Returns (scored layers, greedy tokens (B, k+1), logits).
         """
         if self.mesh is not None:
-            raise ValueError("verify_step is single-device (EngineSpec "
-                             "refuses draft= + mesh=)")
+            raise ValueError(
+                "verify_step is single-device: the (B, k+1) verify "
+                "dispatch has no shard_map wrapper — plain decode "
+                "(contiguous or paged) does (EngineSpec refuses "
+                "draft= + mesh=)")
         b, s_v = tokens.shape
         if active is None:
             active = jnp.ones((b,), bool)

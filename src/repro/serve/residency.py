@@ -85,11 +85,26 @@ def resident_kv_bytes(cache_or_layers: Any) -> int:
 _PAGED_POOL_KEYS = {"pk": 4, "pv": 4, "pkq": 4, "pvq": 4, "pv_scale": 3}
 
 
-def paged_page_bytes(cache_or_layers: Any) -> int:
+def _leaf_shape(leaf, per_device: bool):
+    """A leaf's global shape, or — ``per_device`` — its shard shape, read
+    off the leaf's actual sharding exactly like ``per_device_bytes``."""
+    shape = leaf.shape
+    if per_device:
+        shard = getattr(leaf, "sharding", None)
+        if shard is not None and hasattr(shard, "shard_shape"):
+            shape = shard.shard_shape(shape)
+    return shape
+
+
+def paged_page_bytes(cache_or_layers: Any, per_device: bool = False) -> int:
     """Measured bytes ONE physical page keeps resident, summed across all
     layers (pool bytes / pool size) — the unit the paged residency story
     is denominated in: a pool sized to a workload's peak page demand
     keeps ``peak_pages * paged_page_bytes + paged_slot_bytes`` resident.
+
+    ``per_device``: count each pool's per-device SHARD instead (sharded
+    engines split pools along the KV-head axis; the page axis is never
+    sharded, so this is one page's local share on one device).
     """
     layers = getattr(cache_or_layers, "layers", cache_or_layers)
     total = 0
@@ -100,19 +115,21 @@ def paged_page_bytes(cache_or_layers: Any) -> int:
         core = _PAGED_POOL_KEYS.get(name)
         if core is None or not hasattr(leaf, "shape"):
             continue
+        shape = _leaf_shape(leaf, per_device)
         p_axis = leaf.ndim - core              # 0 unstacked, 1 scan-stacked
-        n_pages = leaf.shape[p_axis]
-        total += int(np.prod(leaf.shape, dtype=np.int64)
+        n_pages = shape[p_axis]
+        total += int(np.prod(shape, dtype=np.int64)
                      * np.dtype(leaf.dtype).itemsize)
     if n_pages is None:
         raise ValueError("not a paged cache: no page-pool leaves found")
     return total // int(n_pages)
 
 
-def paged_slot_bytes(cache_or_layers: Any) -> int:
+def paged_slot_bytes(cache_or_layers: Any, per_device: bool = False) -> int:
     """Resident bytes of the paged cache's per-SLOT state (the per-request
     K grids) — pool-size independent, reported next to the per-page
-    term."""
+    term.  ``per_device``: count shard shapes (the per-slot K grids carry
+    a KV-head axis, so sharded engines split them too)."""
     layers = getattr(cache_or_layers, "layers", cache_or_layers)
     total = 0
     for path, leaf in jax.tree_util.tree_flatten_with_path(layers)[0]:
@@ -120,9 +137,20 @@ def paged_slot_bytes(cache_or_layers: Any) -> int:
                      if hasattr(p, "key")), "")
         if name in _PAGED_POOL_KEYS or not hasattr(leaf, "shape"):
             continue
-        total += int(np.prod(leaf.shape, dtype=np.int64)
+        shape = _leaf_shape(leaf, per_device)
+        total += int(np.prod(shape, dtype=np.int64)
                      * np.dtype(leaf.dtype).itemsize)
     return total
+
+
+def _is_paged(layers: Any) -> bool:
+    """Name-keyed paged detection (no serving-layer import)."""
+    for path, leaf in jax.tree_util.tree_flatten_with_path(layers)[0]:
+        name = next((str(p.key) for p in reversed(path)
+                     if hasattr(p, "key")), "")
+        if name in _PAGED_POOL_KEYS:
+            return True
+    return False
 
 
 def kv_read_bytes_per_token(cache: Any) -> float:
@@ -146,10 +174,19 @@ def report(params: Any, cache: Optional[Any] = None) -> dict:
     out = {"resident_weight_bytes": resident_bytes(params),
            "per_device_weight_bytes": per_device_bytes(params)}
     if cache is not None:
+        layers = getattr(cache, "layers", cache)
         out["resident_kv_bytes"] = resident_kv_bytes(cache)
-        out["per_device_kv_bytes"] = per_device_bytes(
-            getattr(cache, "layers", cache))
+        out["per_device_kv_bytes"] = per_device_bytes(layers)
         out["kv_read_bytes_per_token"] = kv_read_bytes_per_token(cache)
         out["bytes_per_token_roofline"] = (
             out["resident_weight_bytes"] + out["kv_read_bytes_per_token"])
+        if _is_paged(layers):
+            # the paged denomination, global AND what one device holds —
+            # the sharded bench gate measures the per_device_* columns
+            out["paged_page_bytes"] = paged_page_bytes(layers)
+            out["paged_slot_bytes"] = paged_slot_bytes(layers)
+            out["per_device_paged_page_bytes"] = paged_page_bytes(
+                layers, per_device=True)
+            out["per_device_paged_slot_bytes"] = paged_slot_bytes(
+                layers, per_device=True)
     return out

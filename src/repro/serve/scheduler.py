@@ -43,7 +43,10 @@ token-for-token identical to whole-prompt admission.
 
 A deterministic sim clock ticks in model-step units (a prefill costs its
 padded token count, a scanned chunk its step count, a fused dispatch its
-token width); ``latency_report()`` turns the per-request emission clocks
+token width, and a policy-draft propose its k+1 steps scaled by the
+draft's resident-bytes/token roofline share of a target step —
+``SpecDecoder.draft_step_cost``); ``latency_report()`` turns the
+per-request emission clocks
 into p50/p95/p99 TTFT and inter-token stall percentiles —
 benchmarks/serve_bench.py gates the chunked-vs-whole stall improvement
 on exactly these geometry-deterministic numbers.
@@ -484,8 +487,15 @@ class ContinuousBatchingScheduler:
         x = np.concatenate([self._tok, d], axis=1)            # (B, k+1)
         layers, g, _ = self.engine.verify_step(
             self.cache, jnp.asarray(x), active=jnp.asarray(active))
-        self.clock += self.spec.k + 1   # one verify dispatch of width k+1;
-                                        # committed tokens emit as a burst
+        # one verify dispatch of width k+1 (committed tokens emit as a
+        # burst) PLUS the draft's k+1 propose steps priced at the draft's
+        # resident-bytes/token roofline share of a target step — 0 for
+        # the model-free n-gram draft; a policy draft streams its own
+        # bytes per step, which the CPU ref path cannot show (it prices a
+        # draft step like a target step), so the sim clock charges the
+        # byte ratio instead (SpecDecoder.draft_step_cost)
+        self.clock += (self.spec.k + 1) * (
+            1.0 + self.spec.draft_step_cost(self.cache))
         g_np = np.asarray(g)
         accepted = self.spec.accept(d, g_np, active)          # (B,) j
         self.cache = self.engine.commit_verified(
@@ -582,6 +592,11 @@ class ContinuousBatchingScheduler:
         if d is not None:
             self.spec.commit(accepted, g_np, decode_mask)
         self.clock += s_w               # one dispatch of width s_w
+        if d is not None:
+            # the spec propose ran this round too: its k+1 draft steps
+            # are priced at the draft's roofline byte share (0 for n-gram
+            # — same rule as _spec_round)
+            self.clock += (k + 1) * self.spec.draft_step_cost(self.cache)
         for j, slot in enumerate(self.slots):
             if slot is None:
                 continue
@@ -638,7 +653,9 @@ class ContinuousBatchingScheduler:
         The sim clock ticks in MODEL-STEP units: a prefill costs its
         padded token count, a scanned decode chunk one unit per step
         (emissions land at successive steps), a fused/verify dispatch its
-        token width (emissions land as a burst at dispatch end).  TTFT =
+        token width (emissions land as a burst at dispatch end), and a
+        policy-draft propose its k+1 steps times the draft's roofline
+        byte share of a target step (fractional units).  TTFT =
         first-emission clock minus submit clock; inter-token = gaps
         between consecutive emissions of one request, and the p99/max gap
         IS the head-of-line stall a long-prompt admission inflicts on its
@@ -649,7 +666,9 @@ class ContinuousBatchingScheduler:
         ttfts, gaps = [], []
         for uid, emits in self._emit_clocks.items():
             ttfts.append(emits[0] - self._submit_clock.get(uid, 0))
-            gaps.extend(int(b - a) for a, b in zip(emits, emits[1:]))
+            # float, not int: policy-draft rounds tick fractional clock
+            # units (draft steps priced by their roofline byte share)
+            gaps.extend(float(b - a) for a, b in zip(emits, emits[1:]))
 
         def pcts(xs):
             if not xs:
@@ -660,7 +679,7 @@ class ContinuousBatchingScheduler:
                     "p99": float(np.percentile(a, 99, method="nearest")),
                     "max": float(a.max())}
 
-        return {"unit": "model_steps", "clock": int(self.clock),
+        return {"unit": "model_steps", "clock": round(float(self.clock), 4),
                 "n_requests": len(self._emit_clocks),
                 "n_tokens": int(sum(len(v)
                                     for v in self._emit_clocks.values())),

@@ -109,6 +109,37 @@ class SpecDecoder:
         # greedy is enforced (EngineSpec.validate), so draft sampling
         # keys never influence output; a fixed key keeps the surface tidy
         self._key = sampling.base_key()
+        self._draft_cost: Optional[float] = None
+
+    def draft_step_cost(self, target_cache=None) -> float:
+        """Sim-clock price of ONE policy-draft decode step, in target
+        model-step units (0.0 for the model-free n-gram draft).
+
+        Decode is HBM-bound, so a draft step costs what it STREAMS
+        relative to a target step: the ratio of the two engines' measured
+        ``bytes_per_token_roofline`` (residency.report — resident weight
+        bytes + the per-request KV read share).  The CPU ref path cannot
+        measure this (it re-dequantizes packed codes per dispatch, so a
+        wall-clocked draft step prices like a target step); the
+        scheduler's deterministic sim clock charges this ratio instead.
+        ``target_cache``: the target's live cache for its KV term (the
+        scheduler passes its own); memoized — resident bytes are
+        construction-time constants.
+        """
+        if self.draft_engine is None:
+            return 0.0
+        if self._draft_cost is None:
+            d = self.draft_engine.residency(self.draft_cache)
+            t = self.engine.residency(target_cache)
+            if target_cache is None:
+                # no target cache to read: weight-stream ratio only
+                self._draft_cost = float(d["resident_weight_bytes"]
+                                         / t["resident_weight_bytes"])
+            else:
+                self._draft_cost = float(
+                    d["bytes_per_token_roofline"]
+                    / t["bytes_per_token_roofline"])
+        return self._draft_cost
 
     # ---------------------------------------------------------- slot churn
     def admit(self, slot: int, prompt, first_token: int,

@@ -172,6 +172,17 @@ def test_sharded_decode_has_exactly_two_psums(sharded_engine):
     assert res.details["psums"] == 2 * sharded_engine.n_scan_bodies()
 
 
+def test_sharded_paged_decode_has_exactly_two_psums():
+    """Paged+mesh composition (PR 10): paging changes how K/V rows are
+    ADDRESSED, never what is reduced — the sharded PAGED decode traces
+    the same two psums per block body as contiguous."""
+    eng = harness.build_engine("sharded_paged")
+    assert eng.cache_layout == "paged" and eng.mesh is not None
+    res = contracts.check_collectives(eng)
+    assert res.ok, res.violations
+    assert res.details["psums"] == 2 * eng.n_scan_bodies()
+
+
 class _ThreePsumEngine:
     """Stub with the check_collectives surface: a decode whose block body
     all-reduces a THIRD time (the re-replicated-norm bug class)."""
@@ -417,6 +428,25 @@ def test_gate_psum_exact_match_vs_baseline():
     base["contracts"]["collectives"]["details"] = {"psums": 2, "expected": 2}
     fails = report.gate(doc, baseline=base)
     assert any("psum count 3 != baseline 2" in f for f in fails)
+
+
+def test_gate_psum_exact_match_per_engine_kind():
+    """Baselines keyed per sharded engine kind ({"sharded": {...},
+    "sharded_paged": {...}}) gate each psum count exactly — a paged
+    regression fails even when the contiguous count still matches."""
+    good = {"sharded": {"psums": 2, "expected": 2},
+            "sharded_paged": {"psums": 2, "expected": 2}}
+    base = _clean_report()
+    base["contracts"]["collectives"]["details"] = good
+    doc = _clean_report()
+    doc["contracts"]["collectives"]["details"] = {
+        "sharded": {"psums": 2, "expected": 2},
+        "sharded_paged": {"psums": 3, "expected": 2}}
+    fails = report.gate(doc, baseline=base)
+    assert any("collectives[sharded_paged]" in f and "psum count 3" in f
+               for f in fails), fails
+    doc["contracts"]["collectives"]["details"] = good
+    assert not report.gate(doc, baseline=base)
 
 
 def test_gate_eqn_rtol_vs_baseline():

@@ -884,8 +884,9 @@ def test_paged_idle_slots_never_corrupt_neighbors(setup, paged_prompts):
 
 def test_paged_engine_validation(setup):
     """Paged serving fails loudly where its contract does not hold:
-    non-GQA cached mixers, tensor-parallel meshes, bad layout strings,
-    and requests that cannot fit the pool."""
+    non-GQA cached mixers, bad layout strings, and requests that cannot
+    fit the pool — while paged + mesh= COMPOSES (the PR 10 bugfix;
+    tests/test_sharding.py pins bit-exactness on real fake devices)."""
     cfg, ctx, params, policy, pa, qparams = setup
     with pytest.raises(ValueError, match="cache_layout"):
         ServeEngine(cfg=cfg, params=qparams, policy_arrays=pa, ctx=ctx, max_seq=64, spec=EngineSpec(cache_layout="pages"))
@@ -898,8 +899,12 @@ def test_paged_engine_validation(setup):
         ServeEngine(cfg=xcfg, params=xq, policy_arrays=xpa, ctx=ctx, max_seq=64, spec=EngineSpec(cache_layout="paged"))
     pparams = pack_params(params, policy.as_arrays(), cfg)
     mesh = jax.make_mesh((1,), ("model",))
-    with pytest.raises(ValueError, match="paged"):
-        ServeEngine(cfg=cfg, params=pparams, policy_arrays=pa, ctx=ctx, max_seq=64, spec=EngineSpec(weights="packed", mesh=mesh, cache_layout="paged"))
+    # mesh= + cache_layout="paged" validates AND serves: the sharded
+    # paged engine round-trips a short greedy generate on a 1-device
+    # model mesh (the shard_map path; multi-device parity lives in
+    # tests/test_sharding.py)
+    e = ServeEngine(cfg=cfg, params=pparams, policy_arrays=pa, ctx=ctx, max_seq=64, spec=EngineSpec(weights="packed", mesh=mesh, cache_layout="paged"))
+    assert e.generate(jnp.zeros((1, 4), jnp.int32), n_new=2).shape == (1, 2)
     small = _paged_engine(setup, "full", 8, n_pages=1)
     from repro.serve.scheduler import ContinuousBatchingScheduler
     sched = ContinuousBatchingScheduler(small, n_slots=1)

@@ -167,6 +167,102 @@ print("OK")
 
 
 @pytest.mark.slow
+def test_sharded_paged_serving_bit_exact_parity_ladder():
+    """Tensor-parallel PAGED serving composes: EngineSpec(mesh=...,
+    cache_layout="paged") is token-for-token BIT-EXACT with BOTH
+    single-device paged decode AND contiguous+mesh decode — full-dtype,
+    int8 and packed-int4 caches — and the physical page pools shard
+    exactly n_shards ways on the KV-head axis (the per-device paged
+    residency columns) while the block table stays replicated."""
+    _run(HEADER + """
+from repro import configs
+from repro.models import transformer as tf
+from repro.parallel.context import local_context
+from repro.serve import EngineSpec, ServeEngine, pack_params
+
+cfg = configs.get_config("olmo-1b").smoke()
+ctx = local_context()
+params = tf.init_params(cfg, jax.random.PRNGKey(0))
+policy = tf.build_policy(cfg)
+arrays = policy.as_arrays()
+pa = jax.tree.map(jnp.asarray, arrays)
+rng = np.random.default_rng(7)
+prompt = jnp.asarray(rng.integers(0, cfg.vocab, (2, 12)), jnp.int32)
+mesh = jax.make_mesh((2, 4), ("data", "model"))     # all 8 host devices
+
+def mk(cache, bits, layout, m, **kw):
+    if layout == "paged":
+        kw.update(cache_layout="paged", page_size=16)
+    return ServeEngine(cfg=cfg, params=pack_params(params, arrays, cfg),
+                       policy_arrays=pa, ctx=ctx, max_seq=64,
+                       spec=EngineSpec(weights="packed", cache=cache,
+                                       cache_bits=bits, mesh=m, **kw))
+
+for cache, bits in (("full", 8), ("quantized", 8), ("quantized", 4)):
+    solo_p = mk(cache, bits, "paged", None)
+    mesh_c = mk(cache, bits, "contiguous", mesh)
+    mesh_p = mk(cache, bits, "paged", mesh)
+    want = np.asarray(solo_p.generate(prompt, n_new=16))
+    np.testing.assert_array_equal(
+        np.asarray(mesh_c.generate(prompt, n_new=16)), want)
+    np.testing.assert_array_equal(
+        np.asarray(mesh_p.generate(prompt, n_new=16)), want)
+    # page pools shard n_shards ways; block table + lengths replicate
+    rep = mesh_p.residency(mesh_p.new_cache(2))
+    assert rep["per_device_paged_page_bytes"] * 4 == \
+        rep["paged_page_bytes"], rep
+    assert rep["per_device_paged_slot_bytes"] * 4 == \
+        rep["paged_slot_bytes"] or rep["paged_slot_bytes"] == 0, rep
+    assert rep["per_device_kv_bytes"] * 4 == rep["resident_kv_bytes"], rep
+print("OK")
+""")
+
+
+@pytest.mark.slow
+def test_sharded_paged_scheduler_evict_readmit_recycled_pages():
+    """The continuous-batching scheduler drives a SHARDED paged engine
+    unchanged: 3 requests through 1 slot on a deliberately TIGHT page
+    pool, so every later admission lands on RECYCLED physical pages —
+    eviction, re-admission and page reuse under the mesh stay
+    token-for-token equal to solo paged decode."""
+    _run(HEADER + """
+from repro import configs
+from repro.models import transformer as tf
+from repro.parallel.context import local_context
+from repro.serve import EngineSpec, Request, ServeEngine, pack_params, serve_all
+
+cfg = configs.get_config("olmo-1b").smoke()
+ctx = local_context()
+params = tf.init_params(cfg, jax.random.PRNGKey(0))
+policy = tf.build_policy(cfg)
+arrays = policy.as_arrays()
+pa = jax.tree.map(jnp.asarray, arrays)
+mesh = jax.make_mesh((4,), ("model",))
+
+def mk(m, **kw):
+    return ServeEngine(cfg=cfg, params=pack_params(params, arrays, cfg),
+                       policy_arrays=pa, ctx=ctx, max_seq=64,
+                       spec=EngineSpec(weights="packed", cache="quantized",
+                                       cache_bits=8, cache_layout="paged",
+                                       page_size=16, mesh=m, **kw))
+
+rng = np.random.default_rng(11)
+prompts = [rng.integers(0, cfg.vocab, n).tolist() for n in (9, 14, 7)]
+reqs = [Request(uid=f"r{i}", prompt=p, max_new_tokens=6)
+        for i, p in enumerate(prompts)]
+# 1 slot needs ceil((16+6)/16) = 2 pages -> a 3-page pool forces r1/r2
+# onto pages recycled from evicted predecessors
+eQ = mk(mesh, n_pages=3)
+res = serve_all(eQ, reqs, n_slots=1)
+solo = mk(None)                          # capacity-parity fresh pool
+for i, p in enumerate(prompts):
+    want = np.asarray(solo.generate(jnp.asarray([p], jnp.int32), n_new=6))
+    assert res[f"r{i}"].tokens == want[0].tolist(), f"r{i}"
+print("OK")
+""")
+
+
+@pytest.mark.slow
 def test_sharded_serving_scheduler_and_mixed_policy():
     """The continuous-batching scheduler drives a SHARDED engine with zero
     changes (admit/evict/re-admit == solo), and a REAL mixed 4/2-bit
